@@ -1,0 +1,137 @@
+"""Shared benchmark harness: datasets, index builds, matrix collection.
+
+Benchmark scale is CPU-sized (25k series vs the paper's 25M) — the paper's
+own hardware-agnostic surrogate (searched-leaf count, Fig. 1a footnote) is
+the primary metric, so relative behaviours are comparable even though
+absolute times are not.  Heavy artifacts (built indexes, (d_lb, d_L)
+matrices) are cached under experiments/bench_cache/.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, build, filter_training, search
+from repro.core.summaries import znormalize
+from repro.data.series import SERIES_GENERATORS, DEFAULT_LENGTHS, make_query_set
+
+CACHE_DIR = os.environ.get("BENCH_CACHE", "experiments/bench_cache")
+DATASETS = ("randwalk", "seismic", "astro", "deep", "sift")
+N_SERIES = int(os.environ.get("BENCH_N", 25_000))
+N_QUERIES = int(os.environ.get("BENCH_Q", 100))
+NOISE_LEVELS = (0.1, 0.2, 0.3, 0.4)
+
+
+@dataclasses.dataclass
+class BenchSetup:
+    name: str
+    backbone: str
+    series: np.ndarray
+    lfi: build.LeaFiIndex
+    queries: Dict[float, np.ndarray]            # noise → (Q, m)
+    d_lb: Dict[float, np.ndarray]               # noise → (Q, L)
+    d_L: Dict[float, np.ndarray]
+    d_pred: Dict[float, np.ndarray]             # conformal-raw predictions
+    val_d_lb: np.ndarray                        # validation split matrices
+    val_d_L: np.ndarray
+
+
+def default_config(backbone: str = "dstree", **kw) -> build.LeaFiConfig:
+    base = dict(
+        backbone=backbone, leaf_capacity=192,
+        n_global=450, n_local=150,                    # n_q = 600, 3:1 split
+        t_filter_over_t_series=25.0,
+        train=filter_training.TrainConfig(epochs=120, batch=96),
+    )
+    base.update(kw)
+    return build.LeaFiConfig(**base)
+
+
+def _cache_path(key: str) -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    return os.path.join(CACHE_DIR, key + ".pkl")
+
+
+def _config_tag(config: Optional[build.LeaFiConfig]) -> str:
+    if config is None:
+        return ""
+    import hashlib
+    return "_" + hashlib.md5(repr(config).encode()).hexdigest()[:10]
+
+
+def get_setup(dataset: str, backbone: str = "dstree",
+              n: int = N_SERIES, force: bool = False,
+              config: Optional[build.LeaFiConfig] = None) -> BenchSetup:
+    key = f"{dataset}_{backbone}_{n}{_config_tag(config)}"
+    path = _cache_path(key)
+    if not force and os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+
+    m = DEFAULT_LENGTHS[dataset]
+    S = SERIES_GENERATORS[dataset](n, m, seed=1)
+    cfg = config or default_config(backbone)
+    lfi = build.build_leafi(S, cfg, key=jax.random.PRNGKey(0))
+
+    queries, d_lb, d_L, d_pred = {}, {}, {}, {}
+    for noise in NOISE_LEVELS:
+        q = make_query_set(S, N_QUERIES, noise, seed=int(noise * 100))
+        queries[noise] = q
+        d_L[noise] = np.asarray(
+            filter_training.nodewise_nn_distances(lfi.index, jnp.asarray(q)))
+        from repro.core import bounds
+        d_lb[noise] = np.asarray(bounds.lower_bounds(lfi.index,
+                                                     jnp.asarray(q)))
+        if lfi.filter_params is not None:
+            d_pred[noise] = np.asarray(search.predictions_for_all_leaves(
+                lfi.index, lfi.filter_params, lfi.leaf_ids,
+                jnp.asarray(q), offsets=None))
+        else:
+            d_pred[noise] = np.full_like(d_lb[noise], -np.inf)
+
+    # validation matrices (for tuning the comparison methods, paper §5.1)
+    vq = make_query_set(S, 120, 0.25, seed=999)
+    val_d_L = np.asarray(
+        filter_training.nodewise_nn_distances(lfi.index, jnp.asarray(vq)))
+    from repro.core import bounds
+    val_d_lb = np.asarray(bounds.lower_bounds(lfi.index, jnp.asarray(vq)))
+
+    setup = BenchSetup(dataset, backbone, S, lfi, queries, d_lb, d_L, d_pred,
+                       val_d_lb, val_d_L)
+    with open(path, "wb") as f:
+        pickle.dump(setup, f)
+    return setup
+
+
+def leafi_adjusted(setup: BenchSetup, noise: float,
+                   target: float = 0.99) -> np.ndarray:
+    """Conformal-adjusted filter lower bounds d_F for a quality target.
+
+    Zero-filter indexes (threshold above every leaf) degrade to exact
+    search: d_F = −inf never prunes."""
+    from repro.core import conformal
+    if setup.lfi.tuner is None or len(setup.lfi.leaf_ids) == 0:
+        return np.full_like(setup.d_lb[noise], -np.inf)
+    offs = conformal.scatter_offsets(
+        setup.lfi.tuner, setup.lfi.leaf_ids, setup.lfi.index.n_leaves, target)
+    return setup.d_pred[noise] - offs[None, :]
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    fn(*args, **kw)                                     # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return out, (time.perf_counter() - t0) / repeat
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle vs XLA fallback.
+
+On this CPU container the Pallas kernels run in interpret mode, so absolute
+numbers measure the *oracle* path; the kernel's VMEM-tiling quality is
+assessed structurally in EXPERIMENTS.md §Perf (block shapes vs v5e VMEM),
+not by wall-clock here.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.box_lb import ops as box_ops
+from repro.kernels.filter_mlp import ops as mlp_ops, ref as mlp_ref
+from repro.kernels.l2_scan import ops as l2_ops, ref as l2_ref
+from . import common
+
+
+def bench_kernels() -> Tuple[List[str], Dict]:
+    rng = np.random.default_rng(0)
+    rows, payload = [], {}
+
+    Q, B, m = 64, 8192, 256
+    q = jnp.asarray(rng.standard_normal((Q, m)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal((B, m)), jnp.float32)
+    ref_fn = jax.jit(l2_ref.pairwise_l2_matmul)
+    _, t_ref = common.timed(lambda: ref_fn(q, s).block_until_ready(), repeat=5)
+    flops = 2 * Q * B * m
+    payload["l2_scan"] = {"oracle_s": t_ref, "gflops": flops / t_ref / 1e9}
+    rows.append(common.csv_line("kernel/l2_scan_oracle", t_ref * 1e6,
+                                f"gflops={flops / t_ref / 1e9:.1f}"))
+
+    F, h = 512, 256
+    w1 = jnp.asarray(rng.standard_normal((F, m, h)) * 0.1, jnp.float32)
+    b1 = jnp.zeros((F, h)); w2 = jnp.asarray(rng.standard_normal((F, h)), jnp.float32)
+    b2 = jnp.zeros((F,))
+    ref2 = jax.jit(mlp_ref.filter_predict)
+    _, t2 = common.timed(lambda: ref2(w1, b1, w2, b2, q).block_until_ready(),
+                         repeat=3)
+    per_pair = t2 / (F * Q)
+    payload["filter_mlp"] = {"oracle_s": t2, "us_per_pair": per_pair * 1e6}
+    rows.append(common.csv_line("kernel/filter_mlp_oracle", t2 * 1e6,
+                                f"us_per_filterquery={per_pair*1e6:.2f}"))
+
+    L, d = 4096, 16
+    lo = jnp.asarray(rng.standard_normal((L, d)) - 1, jnp.float32)
+    hi = lo + 2.0
+    qq = jnp.asarray(rng.standard_normal((Q, d)), jnp.float32)
+    from repro.kernels.box_lb import ref as box_ref
+    ref3 = jax.jit(box_ref.box_lb)
+    _, t3 = common.timed(lambda: ref3(qq, lo, hi).block_until_ready(),
+                         repeat=5)
+    payload["box_lb"] = {"oracle_s": t3,
+                         "gbounds_per_s": Q * L / t3 / 1e9}
+    rows.append(common.csv_line("kernel/box_lb_oracle", t3 * 1e6,
+                                f"bounds_per_s={Q*L/t3/1e6:.1f}M"))
+    return rows, payload

@@ -1,0 +1,292 @@
+"""One function per paper table/figure (DESIGN.md §6 index).
+
+Every function returns a list of CSV rows ``name,us_per_call,derived`` and a
+dict payload that EXPERIMENTS.md consumes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, build, conformal, filter_training, filters
+from . import common
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1b / Fig. 8(k–o): pruning ratio without/with LeaFi (+ optimal)
+# ---------------------------------------------------------------------------
+
+
+def bench_pruning_ratio(setup: common.BenchSetup) -> Tuple[List[str], Dict]:
+    rows, payload = [], {}
+    for noise in common.NOISE_LEVELS:
+        d_lb, d_L = setup.d_lb[noise], setup.d_L[noise]
+        t0 = time.perf_counter()
+        exact = baselines.exact_search(d_lb, d_L)
+        leafi = baselines.leafi_search(d_lb, d_L,
+                                       common.leafi_adjusted(setup, noise))
+        optimal = baselines.leafi_search(d_lb, d_L, d_F=d_L)
+        dt = (time.perf_counter() - t0) / 3
+        pr = {
+            "exact": exact.pruning_ratio.mean(),
+            "leafi": leafi.pruning_ratio.mean(),
+            "optimal": optimal.pruning_ratio.mean(),
+        }
+        payload[noise] = pr
+        rows.append(common.csv_line(
+            f"pruning_ratio/{setup.name}/noise{int(noise*100)}",
+            dt * 1e6,
+            f"exact={pr['exact']:.3f};leafi={pr['leafi']:.3f};"
+            f"optimal={pr['optimal']:.3f}"))
+    return rows, payload
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 / Fig. 8(a–j): search cost + recall @ 99% target, all baselines
+# ---------------------------------------------------------------------------
+
+
+def bench_query_time(setup: common.BenchSetup,
+                     target: float = 0.99) -> Tuple[List[str], Dict]:
+    rows, payload = [], {}
+    # tune comparison approaches on the validation split (paper §5.1)
+    eps = baselines.tune_epsilon(setup.val_d_lb, setup.val_d_L, target)
+    de_thr = baselines.tune_delta(setup.val_d_lb, setup.val_d_L, target)
+    pros = baselines.train_pros(setup.val_d_lb, setup.val_d_L)
+    lt = baselines.train_lt(setup.val_d_lb, setup.val_d_L, target)
+
+    for noise in common.NOISE_LEVELS:
+        d_lb, d_L = setup.d_lb[noise], setup.d_L[noise]
+        variants = {
+            "exact": lambda: baselines.exact_search(d_lb, d_L),
+            "leafi": lambda: baselines.leafi_search(
+                d_lb, d_L, common.leafi_adjusted(setup, noise, target)),
+            "eps": lambda: baselines.epsilon_search(d_lb, d_L, eps),
+            "deps": lambda: baselines.delta_epsilon_search(d_lb, d_L, de_thr),
+            "pros": lambda: baselines.pros_search(d_lb, d_L, pros),
+            "lt": lambda: baselines.lt_search(d_lb, d_L, lt),
+            "lr": lambda: baselines.lr_optimal_search(d_lb, d_L),
+        }
+        res = {}
+        for name, fn in variants.items():
+            t0 = time.perf_counter()
+            r = fn()
+            res[name] = {"recall": float(r.recall.mean()),
+                         "searched": float(r.searched.mean()),
+                         "sim_s": time.perf_counter() - t0}
+        payload[noise] = res
+        speedup = res["exact"]["searched"] / max(res["leafi"]["searched"], 1e-9)
+        rows.append(common.csv_line(
+            f"query_time/{setup.name}/noise{int(noise*100)}",
+            res["leafi"]["sim_s"] * 1e6,
+            f"leafi_recall={res['leafi']['recall']:.3f};"
+            f"speedup_vs_exact={speedup:.2f}x"))
+    return rows, payload
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9: target vs achieved recall
+# ---------------------------------------------------------------------------
+
+
+def bench_recall_targets(setup: common.BenchSetup,
+                         targets=(0.95, 0.97, 0.99, 0.995, 0.999)
+                         ) -> Tuple[List[str], Dict]:
+    rows, payload = [], {}
+    for target in targets:
+        recs, searched = [], []
+        for noise in common.NOISE_LEVELS:
+            r = baselines.leafi_search(
+                setup.d_lb[noise], setup.d_L[noise],
+                common.leafi_adjusted(setup, noise, target))
+            recs.append(float(r.recall.mean()))
+            searched.append(float(r.searched.mean()))
+        payload[target] = {"recall": float(np.mean(recs)),
+                           "searched": float(np.mean(searched))}
+        rows.append(common.csv_line(
+            f"recall_targets/{setup.name}/t{target}", 0.0,
+            f"achieved={np.mean(recs):.4f};searched={np.mean(searched):.1f}"))
+    return rows, payload
+
+
+# ---------------------------------------------------------------------------
+# Fig. 10: dataset size scaling
+# ---------------------------------------------------------------------------
+
+
+def bench_scalability(dataset: str = "randwalk",
+                      sizes=(10_000, 25_000, 50_000, 100_000)
+                      ) -> Tuple[List[str], Dict]:
+    rows, payload = [], {}
+    for n in sizes:
+        setup = common.get_setup(dataset, "dstree", n=n)
+        noise = 0.2
+        exact = baselines.exact_search(setup.d_lb[noise], setup.d_L[noise])
+        leafi = baselines.leafi_search(
+            setup.d_lb[noise], setup.d_L[noise],
+            common.leafi_adjusted(setup, noise))
+        speedup = exact.searched.mean() / max(leafi.searched.mean(), 1e-9)
+        payload[n] = {"speedup": float(speedup),
+                      "recall": float(leafi.recall.mean()),
+                      "n_leaves": setup.lfi.index.n_leaves}
+        rows.append(common.csv_line(
+            f"scalability/{dataset}/n{n}", 0.0,
+            f"speedup={speedup:.2f}x;recall={leafi.recall.mean():.3f}"))
+    return rows, payload
+
+
+# ---------------------------------------------------------------------------
+# Fig. 11a–c: node-size threshold sweep   /   Fig. 11d: memory budget sweep
+# ---------------------------------------------------------------------------
+
+
+def bench_node_threshold(dataset: str = "deep",
+                         ratios=(5.0, 25.0, 100.0, 300.0)
+                         ) -> Tuple[List[str], Dict]:
+    rows, payload = [], {}
+    for tf_ts in ratios:
+        cfg = common.default_config("dstree", t_filter_over_t_series=tf_ts)
+        setup = common.get_setup(dataset, "dstree", config=cfg)
+        noise = 0.4
+        leafi = baselines.leafi_search(
+            setup.d_lb[noise], setup.d_L[noise],
+            common.leafi_adjusted(setup, noise))
+        payload[tf_ts] = {
+            "th": 2 * tf_ts,
+            "n_filters": int(setup.lfi.build_report["n_filters"]),
+            "searched": float(leafi.searched.mean()),
+            "pruning": float(leafi.pruning_ratio.mean()),
+            "recall": float(leafi.recall.mean()),
+        }
+        rows.append(common.csv_line(
+            f"node_threshold/{dataset}/th{int(2*tf_ts)}", 0.0,
+            f"filters={payload[tf_ts]['n_filters']};"
+            f"pruning={payload[tf_ts]['pruning']:.3f}"))
+    return rows, payload
+
+
+def bench_memory_budget(dataset: str = "deep",
+                        budgets_mb=(0.5, 2, 8, 32, 128)
+                        ) -> Tuple[List[str], Dict]:
+    rows, payload = [], {}
+    for mb in budgets_mb:
+        cfg = common.default_config(
+            "dstree", filter_memory_budget_bytes=int(mb * 2**20))
+        setup = common.get_setup(dataset, "dstree", config=cfg)
+        noise = 0.4
+        leafi = baselines.leafi_search(
+            setup.d_lb[noise], setup.d_L[noise],
+            common.leafi_adjusted(setup, noise))
+        payload[mb] = {
+            "n_filters": int(setup.lfi.build_report["n_filters"]),
+            "searched": float(leafi.searched.mean()),
+            "recall": float(leafi.recall.mean()),
+        }
+        rows.append(common.csv_line(
+            f"memory_budget/{dataset}/mb{mb}", 0.0,
+            f"filters={payload[mb]['n_filters']};"
+            f"searched={payload[mb]['searched']:.1f}"))
+    return rows, payload
+
+
+# ---------------------------------------------------------------------------
+# Table 1 + Fig. 12: filter model type (MLP / CNN / RNN)
+# ---------------------------------------------------------------------------
+
+
+def bench_model_type(length: int = 96) -> Tuple[List[str], Dict]:
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((64, length)), jnp.float32)
+    series_block = jnp.asarray(rng.standard_normal((4096, length)),
+                               jnp.float32)
+    rows, payload = [], {}
+
+    # distance-calculation time per series (the t_S denominator)
+    from repro.kernels.l2_scan import ops as l2_ops
+    _, t_scan = common.timed(
+        lambda: l2_ops.pairwise_l2(q, series_block).block_until_ready(),
+        repeat=5)
+    t_series = t_scan / (64 * 4096)
+
+    key = jax.random.PRNGKey(0)
+    variants = {
+        "mlp": (filters.init_mlp(key, 64, length),
+                lambda p: filters.apply_mlp(p, q)),
+        "cnn": (filters.init_cnn(key, 64, length),
+                lambda p: filters.apply_cnn(p, q)),
+        "rnn": (filters.init_rnn(key, 64, length),
+                lambda p: filters.apply_rnn(p, q)),
+    }
+    for name, (params, fn) in variants.items():
+        jitted = jax.jit(fn)
+        _, t = common.timed(lambda: jitted(params).block_until_ready(),
+                            repeat=3)
+        t_filter = t / (64 * 64)        # per (filter × query) inference
+        th = 2 * t_filter / t_series
+        payload[name] = {"t_filter_us": t_filter * 1e6, "th": th}
+        rows.append(common.csv_line(
+            f"model_type/{name}", t_filter * 1e6, f"th={th:.0f}"))
+    payload["t_series_us"] = t_series * 1e6
+    return rows, payload
+
+
+# ---------------------------------------------------------------------------
+# Table 2: ± local training data
+# ---------------------------------------------------------------------------
+
+
+def bench_local_data(dataset: str = "randwalk") -> Tuple[List[str], Dict]:
+    rows, payload = [], {}
+    for tag, n_local in (("with_local", 150), ("no_local", 1)):
+        cfg = common.default_config("dstree", n_local=n_local,
+                                    n_global=450 if n_local > 1 else 600)
+        setup = common.get_setup(dataset, "dstree", config=cfg)
+        recs, searched = [], []
+        for noise in common.NOISE_LEVELS:
+            r = baselines.leafi_search(
+                setup.d_lb[noise], setup.d_L[noise],
+                common.leafi_adjusted(setup, noise))
+            recs.append(float(r.recall.mean()))
+            searched.append(float(r.searched.mean()))
+        payload[tag] = {"recall": float(np.mean(recs)),
+                        "searched": float(np.mean(searched))}
+        rows.append(common.csv_line(
+            f"local_data/{dataset}/{tag}", 0.0,
+            f"recall={np.mean(recs):.3f};searched={np.mean(searched):.1f}"))
+    return rows, payload
+
+
+# ---------------------------------------------------------------------------
+# Table 3/4: build-time breakdown + space overhead
+# ---------------------------------------------------------------------------
+
+
+def bench_build_time(setup: common.BenchSetup) -> Tuple[List[str], Dict]:
+    r = setup.lfi.build_report
+    m = setup.lfi.index.length
+    h = setup.lfi.config.hidden or m
+    f_bytes = filters.mlp_param_bytes(m, h) * len(setup.lfi.leaf_ids)
+    data_bytes = setup.series.nbytes
+    idx_bytes = (setup.lfi.index.series.nbytes
+                 - data_bytes + setup.lfi.index.leaf_start.nbytes
+                 + setup.lfi.index.leaf_size.nbytes
+                 + sum(v.nbytes for v in setup.lfi.index.payload.values()))
+    payload = {
+        "t_index_build_s": r["t_index_build"],
+        "t_collect_s": r["t_collect"],
+        "t_train_s": r["t_train"],
+        "t_calibrate_s": r["t_calibrate"],
+        "bytes_data": data_bytes,
+        "bytes_index_structure": idx_bytes,
+        "bytes_filters": f_bytes,
+        "filter_overhead_pct": 100.0 * f_bytes / data_bytes,
+    }
+    rows = [common.csv_line(
+        f"build_time/{setup.name}", r["t_train"] * 1e6,
+        f"collect={r['t_collect']:.1f}s;train={r['t_train']:.1f}s;"
+        f"filter_space={100.0 * f_bytes / data_bytes:.1f}%")]
+    return rows, payload

@@ -1,0 +1,84 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the full payloads to
+experiments/bench_results.json (EXPERIMENTS.md is generated from those).
+
+  PYTHONPATH=src python -m benchmarks.run            # full sweep
+  PYTHONPATH=src python -m benchmarks.run --quick    # randwalk-only
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from . import common, kernels_bench, paper_tables, wallclock
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="randwalk-only, skips sweeps")
+    ap.add_argument("--datasets", default=None,
+                    help="comma-separated subset")
+    ap.add_argument("--out", default="experiments/bench_results.json")
+    args = ap.parse_args()
+
+    datasets = (args.datasets.split(",") if args.datasets
+                else (("randwalk",) if args.quick else common.DATASETS))
+    all_rows, payloads = [], {}
+    t_start = time.perf_counter()
+
+    for ds in datasets:
+        for backbone in ("dstree", "isax"):
+            setup = common.get_setup(ds, backbone)
+            tag = f"{ds}/{backbone}"
+            for fn in (paper_tables.bench_pruning_ratio,
+                       paper_tables.bench_query_time,
+                       paper_tables.bench_recall_targets,
+                       paper_tables.bench_build_time):
+                rows, payload = fn(setup)
+                all_rows += [r.replace(f"/{ds}/", f"/{tag}/") for r in rows]
+                payloads[f"{fn.__name__}/{tag}"] = payload
+
+    if not args.quick:
+        for fn, key in ((paper_tables.bench_scalability, "scalability"),
+                        (paper_tables.bench_node_threshold, "node_threshold"),
+                        (paper_tables.bench_memory_budget, "memory_budget"),
+                        (paper_tables.bench_local_data, "local_data")):
+            rows, payload = fn()
+            all_rows += rows
+            payloads[key] = payload
+
+    rows, payload = paper_tables.bench_model_type()
+    all_rows += rows
+    payloads["model_type"] = payload
+
+    for ds in ("randwalk", "sift") if not args.quick else ("randwalk",):
+        setup = common.get_setup(ds, "dstree")
+        rows, payload = wallclock.bench_wallclock(setup)
+        all_rows += rows
+        payloads[f"wallclock/{ds}"] = payload
+    # paper-regime leaves (large |N|): where Eq. 4 predicts wall-clock wins
+    setup = wallclock.paper_regime_setup("sift" if not args.quick
+                                         else "randwalk")
+    rows, payload = wallclock.bench_wallclock(setup)
+    all_rows += [r.replace("wallclock/", "wallclock_bigleaf/") for r in rows]
+    payloads["wallclock_bigleaf"] = payload
+
+    rows, payload = kernels_bench.bench_kernels()
+    all_rows += rows
+    payloads["kernels"] = payload
+
+    for r in all_rows:
+        print(r)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payloads, f, indent=1, default=float)
+    print(f"# total {time.perf_counter() - t_start:.1f}s "
+          f"→ {len(all_rows)} rows → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Real wall-clock search latency (not the surrogate): early-termination
+LeaFi vs exact on this host's CPU.
+
+The batched (masked-SPMD) search can't show pruning wall-clock wins by
+construction; ``search_early`` runs the paper's sequential semantics with
+genuine leaf-scan skips (lax.while_loop + cond), so its timing reflects the
+pruning ratio directly.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import search
+from . import common
+
+
+def paper_regime_setup(dataset: str = "randwalk") -> common.BenchSetup:
+    """Leaf sizes near the paper's regime (split threshold 10k; ours 2k at
+    25k series) so t_S·|N| ≫ t_F — the condition Eq. 4 requires for filters
+    to pay in wall-clock, not just in searched-leaf count."""
+    cfg = common.default_config("dstree", leaf_capacity=2048)
+    return common.get_setup(dataset, "dstree", config=cfg)
+
+
+def bench_wallclock(setup: common.BenchSetup, n_queries: int = 12,
+                    target: float = 0.99) -> Tuple[List[str], Dict]:
+    noise = 0.4
+    qs = setup.queries[noise][:n_queries]
+    lfi = setup.lfi
+
+    def run(use_filters: bool):
+        # warmup/compile on the first query
+        kw = dict(filter_params=lfi.filter_params, leaf_ids=lfi.leaf_ids,
+                  tuner=lfi.tuner,
+                  quality_target=target if use_filters else None,
+                  use_filters=use_filters)
+        search.search_early(lfi.index, qs[0], **kw)
+        t0 = time.perf_counter()
+        searched = 0
+        for q in qs:
+            r = search.search_early(lfi.index, q, **kw)
+            searched += int(r.searched[0])
+        return (time.perf_counter() - t0) / len(qs), searched / len(qs)
+
+    t_exact, s_exact = run(use_filters=False)
+    t_leafi, s_leafi = run(use_filters=True)
+    payload = {
+        "exact_ms": t_exact * 1e3, "leafi_ms": t_leafi * 1e3,
+        "exact_searched": s_exact, "leafi_searched": s_leafi,
+        "wall_speedup": t_exact / max(t_leafi, 1e-12),
+    }
+    rows = [common.csv_line(
+        f"wallclock/{setup.name}/{setup.backbone}", t_leafi * 1e6,
+        f"exact={t_exact*1e3:.1f}ms;leafi={t_leafi*1e3:.1f}ms;"
+        f"speedup={payload['wall_speedup']:.2f}x")]
+    return rows, payload

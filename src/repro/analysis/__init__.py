@@ -1,0 +1,3 @@
+from .hlo_collectives import (collective_bytes_per_device,  # noqa: F401
+                              hlo_stats, CollectiveStats)
+from .roofline import RooflineTerms, roofline_from_compiled, V5E  # noqa: F401

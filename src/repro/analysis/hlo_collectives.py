@@ -1,0 +1,296 @@
+"""Parse compiled (SPMD-partitioned) HLO text into roofline inputs.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically: a scanned matmul reports 1/8 of the unrolled flops), which
+makes it useless for scan-over-layers models.  This module walks the HLO
+call graph with loop trip counts and produces:
+
+* **flops** — 2·|out|·|contraction| for every ``dot`` (including dots inside
+  fusion computations), × enclosing loop trip counts.
+* **hbm bytes** — Σ (operands + output) over *top-level* ops in control
+  computations (entry, while bodies, conditional branches).  Fusion
+  internals don't touch HBM post-fusion, so only the fusion op's boundary
+  shapes count.
+* **collective link bytes** — ring-model factors per collective kind:
+      all-gather        (n−1)/n · output_bytes
+      reduce-scatter    (n−1)/n · input_bytes
+      all-reduce        2·(n−1)/n · input_bytes      (RS + AG)
+      all-to-all        (n−1)/n · input_bytes
+      collective-permute  input_bytes
+  All shapes in the partitioned module are per-device, so totals are
+  per-device link/HBM traffic — exactly what the roofline terms need.
+
+HLO op lines reference operands by name only (no inline shapes on CPU), so
+each computation gets a symbol table (params from the header, results from
+each op line) before the walk.  Trip counts come from the largest integer
+constant in each loop's condition computation (XLA emits counted loops for
+lax.scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_HEADER_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*(\(?[\w\[\],\s{}\d]*)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(type_str: str, f32_as_bf16: bool = False) -> int:
+    """Byte size of an HLO type string (tuples sum their elements).
+
+    ``f32_as_bf16`` counts f32 as 2 bytes: XLA:CPU legalizes bf16 compute to
+    f32 (verified — bf16 survives only at jit boundaries), so a TPU-projected
+    roofline must halve the f32 traffic.  Genuinely-f32 tensors (optimizer
+    moments, softmax stats) are then undercounted ≤2×, which is conservative
+    for the collective/memory terms since weight+activation traffic
+    dominates.  Both raw and projected totals are reported.
+    """
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = 2 if (f32_as_bf16 and dt == "f32") else _DTYPE_BYTES[dt]
+        total += n * b
+    return total
+
+
+def _first_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    header: str
+    lines: List[str]
+    symbols: Dict[str, str]          # value name -> type string
+
+
+def _split_computations(hlo: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("->" in stripped or
+                                       stripped.startswith("ENTRY")):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = _Comp(m.group(1), stripped, [], {})
+                comps[cur.name] = cur
+        elif stripped.startswith("}"):
+            cur = None
+        elif cur is not None:
+            cur.lines.append(stripped)
+    # build symbol tables
+    for comp in comps.values():
+        pm = re.search(r"\((.*)\)\s*->", comp.header)
+        if pm:
+            for name, tstr in _HEADER_PARAM_RE.findall(pm.group(1)):
+                comp.symbols[name] = tstr
+        for ln in comp.lines:
+            om = _OP_RE.match(ln)
+            if om:
+                comp.symbols[om.group(1)] = om.group(2)
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Operand names from the text following 'opcode(' (up to its ')')."""
+    depth = 1
+    out_chars = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        out_chars.append(ch)
+    inner = "".join(out_chars)
+    return re.findall(r"%([\w\.\-]+)", inner)
+
+
+def _operand_bytes(comp: _Comp, rest: str,
+                   f32_as_bf16: bool = False) -> int:
+    return sum(_type_bytes(comp.symbols.get(n, ""), f32_as_bf16)
+               for n in _operand_names(rest))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))      # [n_groups, group_size] <= [total]
+    return default
+
+
+def _trip_count(comp: Optional[_Comp]) -> int:
+    if comp is None:
+        return 1
+    best = 1
+    for ln in comp.lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(comp: _Comp, out_type: str, rest: str, line: str) -> float:
+    out_elems = 1
+    for d in _first_dims(out_type):
+        out_elems *= d
+    names = _operand_names(rest)
+    lhs_dims = _first_dims(comp.symbols.get(names[0], "")) if names else []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> Dict[str, float]:
+        out = {f"bytes_{k}": v for k, v in self.bytes_by_kind.items()}
+        out.update(bytes_total=self.total_bytes, flops=self.flops,
+                   hbm_bytes=self.hbm_bytes)
+        return out
+
+
+def hlo_stats(hlo_text: str, default_group: int = 1,
+              f32_as_bf16: bool = False) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    bytes_by_kind: Dict[str, float] = defaultdict(float)
+    count_by_kind: Dict[str, int] = defaultdict(int)
+    totals = {"flops": 0.0, "hbm": 0.0}
+
+    def fusion_flops(comp: _Comp, seen: tuple) -> float:
+        fl = 0.0
+        for ln in comp.lines:
+            om = _OP_RE.match(ln)
+            if not om:
+                continue
+            _, out_type, opcode, rest = om.groups()
+            if opcode == "dot":
+                fl += _dot_flops(comp, out_type, rest, ln)
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", ln):
+                sub = comps.get(m.group(1))
+                if sub and sub.name not in seen:
+                    fl += fusion_flops(sub, seen + (sub.name,))
+        return fl
+
+    def visit(comp_name: str, mult: float, seen: tuple):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen:
+            return
+        for ln in comp.lines:
+            om = _OP_RE.match(ln)
+            if not om:
+                continue
+            _, out_type, opcode, rest = om.groups()
+            base = opcode.replace("-start", "").replace("-done", "")
+
+            if base in COLLECTIVES and not opcode.endswith("-done"):
+                operand_bytes = _operand_bytes(comp, rest, f32_as_bf16)
+                out_bytes = _type_bytes(out_type, f32_as_bf16)
+                n = _group_size(ln, default_group)
+                f = (n - 1) / n if n > 1 else 0.0
+                if base == "all-gather":
+                    link = f * max(out_bytes, operand_bytes)
+                elif base == "reduce-scatter":
+                    link = f * operand_bytes
+                elif base == "all-reduce":
+                    link = 2 * f * operand_bytes
+                elif base == "all-to-all":
+                    link = f * operand_bytes
+                else:  # collective-permute
+                    link = float(operand_bytes)
+                bytes_by_kind[base] += mult * link
+                count_by_kind[base] += max(int(mult), 1)
+
+            # hbm bytes: boundary traffic of real ops
+            if opcode not in ("tuple", "get-tuple-element", "parameter",
+                              "constant", "bitcast", "after-all"):
+                totals["hbm"] += mult * (
+                    _type_bytes(out_type, f32_as_bf16)
+                    + _operand_bytes(comp, rest, f32_as_bf16))
+
+            if opcode == "dot":
+                totals["flops"] += mult * _dot_flops(comp, out_type, rest, ln)
+            elif opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ln)
+                sub = comps.get(m.group(1)) if m else None
+                if sub:
+                    totals["flops"] += mult * fusion_flops(sub, (sub.name,))
+            elif opcode == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ln)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ln)
+                trips = _trip_count(comps.get(cm.group(1))) if cm else 1
+                if bm:
+                    visit(bm.group(1), mult * trips, seen + (comp_name,))
+            elif opcode == "conditional":
+                for m in re.finditer(
+                        r"(?:branch_computations=\{([^}]*)\}|"
+                        r"(?:true|false)_computation=%?([\w\.\-]+))", ln):
+                    blob = m.group(1) or m.group(2) or ""
+                    for name in blob.split(","):
+                        name = name.strip().lstrip("%")
+                        if name:
+                            visit(name, mult, seen + (comp_name,))
+            elif opcode in ("call", "async-start"):
+                m = re.search(r"to_apply=%?([\w\.\-]+)", ln)
+                if m:
+                    visit(m.group(1), mult, seen + (comp_name,))
+
+    entry = None
+    for ln in hlo_text.splitlines():
+        if ln.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", ln)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is not None:
+        visit(entry, 1.0, ())
+    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind),
+                           flops=totals["flops"], hbm_bytes=totals["hbm"])
+
+
+# backwards-compatible alias
+def collective_bytes_per_device(hlo_text: str,
+                                default_group: int = 1,
+                                f32_as_bf16: bool = False) -> CollectiveStats:
+    return hlo_stats(hlo_text, default_group, f32_as_bf16)

@@ -1,0 +1,111 @@
+"""Generate EXPERIMENTS.md tables from dry-run/bench artifacts.
+
+    PYTHONPATH=src python -m repro.analysis.report \
+        --dryrun experiments/dryrun --bench experiments/bench_results.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def load_dryrun(path: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        r["_file"] = os.path.basename(f)
+        recs.append(r)
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.1f}"
+
+
+def dryrun_table(recs, pod: str = "pod1", tag: str = "") -> str:
+    lines = [
+        "| arch | shape | policy | dominant | t_comp (s) | t_mem (s) | "
+        "t_coll (s) | roofline frac | useful-FLOPs | HBM GB/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        fname = r["_file"]
+        if not fname.endswith(f"__{pod}{tag}.json"):
+            continue
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — "
+                f"| — | SKIP: {r['reason'][:40]} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | ERROR "
+                         f"| — | — | — | — | — | — | {r.get('error','')[:40]} |")
+            continue
+        rf = r["roofline"]
+        ur = rf.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['policy']} | {rf['dominant']} "
+            f"| {rf['t_compute']:.3f} | {rf['t_memory']:.3f} "
+            f"| {rf['t_collective']:.3f} | {rf['roofline_fraction']:.3f} "
+            f"| {ur:.2f} | {fmt_bytes(r['memory']['total_hbm_bytes'])} |  |")
+    return "\n".join(lines)
+
+
+def multipod_check(recs) -> str:
+    by_cell = defaultdict(dict)
+    for r in recs:
+        if "_kvq" in r["_file"]:
+            continue
+        pod = "pod2" if "__pod2" in r["_file"] else "pod1"
+        by_cell[(r["arch"], r["shape"])][pod] = r.get("status")
+    ok = sum(1 for v in by_cell.values()
+             if v.get("pod1") == v.get("pod2") == "ok")
+    skip = sum(1 for v in by_cell.values()
+               if v.get("pod1") == v.get("pod2") == "skipped")
+    bad = {k: v for k, v in by_cell.items()
+           if v.get("pod1") not in ("ok", "skipped")
+           or v.get("pod2") not in ("ok", "skipped")}
+    out = [f"Cells compiling on BOTH meshes (16×16 and 2×16×16): **{ok}**; "
+           f"documented skips: **{skip}**; failures: **{len(bad)}**."]
+    for k, v in bad.items():
+        out.append(f"  FAIL {k}: {v}")
+    return "\n".join(out)
+
+
+def collective_summary(recs, cells) -> str:
+    lines = ["| cell | all-gather GB | all-reduce GB | reduce-scatter GB | "
+             "all-to-all GB | permute GB |", "|---|---|---|---|---|---|"]
+    for r in recs:
+        key = (r.get("arch"), r.get("shape"))
+        if key not in cells or "__pod1" not in r["_file"] \
+                or "_kvq" in r["_file"] or r.get("status") != "ok":
+            continue
+        b = r["collective_schedule"]["bytes_by_kind"]
+        lines.append(
+            f"| {key[0]}/{key[1]} | {b.get('all-gather',0)/2**30:.1f} "
+            f"| {b.get('all-reduce',0)/2**30:.1f} "
+            f"| {b.get('reduce-scatter',0)/2**30:.1f} "
+            f"| {b.get('all-to-all',0)/2**30:.1f} "
+            f"| {b.get('collective-permute',0)/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    ap.add_argument("--bench", default="experiments/bench_results.json")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    recs = load_dryrun(args.dryrun)
+    print("## Single-pod baseline (16×16)\n")
+    print(dryrun_table(recs, "pod1"))
+    print("\n## Multi-pod status\n")
+    print(multipod_check(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+TPU v5e per chip (assignment constants): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  ``cost_analysis()`` of the SPMD-partitioned module gives
+*per-device* FLOPs and memory bytes; the collective term comes from the HLO
+parser (also per-device), so
+
+    t_compute    = flops_per_device / peak_flops
+    t_memory     = bytes_per_device / hbm_bw
+    t_collective = link_bytes_per_device / ici_bw
+
+The dominant term is the bottleneck; roofline fraction = t_compute /
+max(all terms) (how close the cell is to being compute-bound at peak).
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per trained token — the
+useful-work yardstick that exposes remat/padding/capacity waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from .hlo_collectives import collective_bytes_per_device
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s
+    ici_bw: float              # bytes/s per link
+
+
+V5E = HardwareSpec("tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    link_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: Optional[float] = None          # useful FLOPs (global)
+    n_devices: int = 1
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak compute achievable given the dominant bound."""
+        return self.t_compute / self.bound_time if self.bound_time else 0.0
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / (HLO flops × devices): remat/padding waste meter."""
+        if self.model_flops is None or self.flops_per_device == 0:
+            return None
+        return self.model_flops / (self.flops_per_device * self.n_devices)
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, bound_time=self.bound_time,
+                 roofline_fraction=self.roofline_fraction,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def model_flops_per_step(cfg, shape) -> float:
+    """6·N·D for training; 2·N·D per generated/prefilled token at serving."""
+    n = cfg.n_active_params
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n * tokens
+    # decode: one token per sequence in the batch (+ attention over cache,
+    # excluded from the useful-work yardstick by convention)
+    return 2.0 * n * shape.batch
+
+
+def roofline_from_compiled(compiled, n_devices: int,
+                           model_flops: Optional[float] = None,
+                           hw: HardwareSpec = V5E,
+                           hlo_text: Optional[str] = None) -> RooflineTerms:
+    """Terms from our HLO walker (cost_analysis counts while bodies once —
+    verified — so scan-over-layers models need the trip-count-aware parse).
+
+    Byte terms use the bf16 projection (XLA:CPU legalizes bf16 compute to
+    f32; f32 traffic is halved — see hlo_collectives._type_bytes).
+    """
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    stats = collective_bytes_per_device(text, f32_as_bf16=True)
+    flops = stats.flops
+    raw_bytes = stats.hbm_bytes
+    return RooflineTerms(
+        flops_per_device=flops,
+        hbm_bytes_per_device=raw_bytes,
+        link_bytes_per_device=stats.total_bytes,
+        t_compute=flops / hw.peak_flops,
+        t_memory=raw_bytes / hw.hbm_bw,
+        t_collective=stats.total_bytes / hw.ici_bw,
+        model_flops=model_flops,
+        n_devices=n_devices,
+    )
+
+
+def memory_report(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    out["total_hbm_bytes"] = (
+        out.get("argument_size_in_bytes", 0.0)
+        + out.get("output_size_in_bytes", 0.0)
+        + out.get("temp_size_in_bytes", 0.0)
+        - out.get("alias_size_in_bytes", 0.0))
+    return out

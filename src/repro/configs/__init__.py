@@ -1,0 +1,135 @@
+"""Assigned architecture registry + input-shape cells.
+
+Each ``<id>.py`` exports ``CONFIG`` (the exact published configuration) and
+``SMOKE`` (a reduced same-family config for CPU tests).  The four assigned
+input shapes and per-cell applicability rules live here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+
+ARCH_IDS = [
+    "codeqwen1_5_7b", "qwen1_5_32b", "qwen2_5_32b", "glm4_9b", "rwkv6_1_6b",
+    "mixtral_8x7b", "qwen2_moe_a2_7b", "musicgen_large", "pixtral_12b",
+    "hymba_1_5b",
+]
+
+# public ids (dashes) ↔ module names (underscores)
+PUBLIC_IDS = {i.replace("_", "-"): i for i in ARCH_IDS}
+PUBLIC_IDS.update({
+    "codeqwen1.5-7b": "codeqwen1_5_7b", "qwen1.5-32b": "qwen1_5_32b",
+    "qwen2.5-32b": "qwen2_5_32b", "glm4-9b": "glm4_9b",
+    "rwkv6-1.6b": "rwkv6_1_6b", "mixtral-8x7b": "mixtral_8x7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b", "musicgen-large": "musicgen_large",
+    "pixtral-12b": "pixtral_12b", "hymba-1.5b": "hymba_1_5b",
+})
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(
+        f".{PUBLIC_IDS.get(name, name)}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    mod = importlib.import_module(
+        f".{PUBLIC_IDS.get(name, name)}", __package__)
+    return mod.SMOKE
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+# long_500k needs sub-quadratic attention / bounded KV (DESIGN.md §skips):
+LONG_CONTEXT_ARCHS = {"rwkv6_1_6b", "hymba_1_5b", "mixtral_8x7b"}
+
+
+def supports_shape(arch: str, shape: str) -> bool:
+    arch = PUBLIC_IDS.get(arch, arch)
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def decode_cache_len(cfg: ArchConfig, seq: int) -> int:
+    """KV slots needed to decode at position `seq`.
+
+    Pure-SWA stacks (mixtral) need only a window-sized ring; stacks with any
+    full-attention layer need the whole prefix; attention-free stacks keep a
+    single slot placeholder (their state is the recurrent one)."""
+    if cfg.layer_kind == "rwkv6":
+        return 1
+    if cfg.attn_window and not cfg.global_attn_layers:
+        return min(seq, cfg.attn_window)
+    return seq
+
+
+def input_specs(arch: str, shape_name: str, smoke: bool = False,
+                overrides: Optional[dict] = None) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    Keys: 'inputs' (token/embed dict incl. labels for train), plus for decode
+    'cache' and 'pos'.  No device allocation — dry-run food.
+    ``overrides`` patches config fields (e.g. kv_quant for §Perf variants).
+    """
+    from ..models import transformer
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    B, S = shape.batch, shape.seq
+    sd = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+
+    def token_inputs(seq_len: int, with_labels: bool, decode: bool = False):
+        d: Dict[str, object] = {}
+        if cfg.input_mode == "tokens":
+            d["tokens"] = sd((B, seq_len), jnp.int32)
+        elif cfg.input_mode == "embeddings":
+            d["embeds"] = sd((B, seq_len, cfg.d_model), dt)
+        else:  # mixed
+            if decode:
+                d["tokens"] = sd((B, seq_len), jnp.int32)
+                d["patches"] = sd((B, 0, cfg.d_model), dt)
+            else:
+                n_img = int(seq_len * cfg.patch_frac)
+                d["tokens"] = sd((B, seq_len - n_img), jnp.int32)
+                d["patches"] = sd((B, n_img, cfg.d_model), dt)
+        if with_labels:
+            n_lbl = d["tokens"].shape[1] if "tokens" in d else seq_len
+            d["labels"] = sd((B, n_lbl), jnp.int32)
+        return d
+
+    out: Dict[str, object] = {"config": cfg, "shape": shape}
+    if shape.kind == "train":
+        out["inputs"] = token_inputs(S, with_labels=True)
+    elif shape.kind == "prefill":
+        out["inputs"] = token_inputs(S, with_labels=False)
+        out["cache_len"] = decode_cache_len(cfg, S)
+    else:  # decode
+        out["inputs"] = token_inputs(1, with_labels=False, decode=True)
+        clen = decode_cache_len(cfg, S)
+        out["cache"] = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, B, clen))
+        out["pos"] = sd((), jnp.int32)
+        out["cache_len"] = clen
+    return out

@@ -1,0 +1,15 @@
+"""CodeQwen1.5-7B — qwen1.5 arch, MHA (kv=heads), QKV bias.
+[hf:Qwen/CodeQwen1.5-7B; hf]"""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="codeqwen1.5-7b", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=32, d_head=128, d_ff=13440, vocab=92416,
+    qkv_bias=True, rope_theta=1e6,
+)
+
+SMOKE = ArchConfig(
+    name="codeqwen1.5-7b-smoke", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=4, d_head=32, d_ff=384, vocab=512,
+    qkv_bias=True, rope_theta=1e6, dtype="float32", remat=False,
+)

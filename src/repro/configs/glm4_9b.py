@@ -1,0 +1,16 @@
+"""GLM4-9B — dense, GQA 32q/2kv, partial (half) rotary, QKV bias.
+[hf:THUDM/glm-4-9b; hf]"""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="glm4-9b", n_layers=40, d_model=4096,
+    n_heads=32, n_kv_heads=2, d_head=128, d_ff=13696, vocab=151552,
+    qkv_bias=True, partial_rotary=0.5, rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="glm4-9b-smoke", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=2, d_head=32, d_ff=384, vocab=512,
+    qkv_bias=True, partial_rotary=0.5, rope_theta=1e4,
+    dtype="float32", remat=False,
+)

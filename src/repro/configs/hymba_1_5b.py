@@ -1,0 +1,20 @@
+"""Hymba-1.5B — hybrid: parallel attention + mamba heads per layer.
+[arXiv:2411.13676; hf]  25 heads × 64 = 1600; GQA kv=5; ssm_state=16;
+SWA everywhere except 3 global-attention layers (first/middle/last).
+25 heads ∤ 16 ⇒ context-parallel attention policy on the production mesh."""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b", n_layers=32, d_model=1600,
+    n_heads=25, n_kv_heads=5, d_head=64, d_ff=5504, vocab=32001,
+    layer_kind="hymba", ssm_state=16, ssm_expand=2,
+    attn_window=1024, global_attn_layers=(0, 15, 31), rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="hymba-1.5b-smoke", n_layers=2, d_model=128,
+    n_heads=2, n_kv_heads=1, d_head=64, d_ff=256, vocab=512,
+    layer_kind="hymba", ssm_state=16, ssm_expand=2,
+    attn_window=32, global_attn_layers=(0,), rope_theta=1e4,
+    dtype="float32", remat=False,
+)

@@ -1,0 +1,18 @@
+"""Mixtral-8x7B — MoE 8 experts top-2, GQA 32q/8kv, SWA window 4096.
+[arXiv:2401.04088; hf]  Pure-SWA stack ⇒ ring KV cache bounds 500k decode."""
+from ..models.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_head=128, d_ff=14336, vocab=32000,
+    attn_window=4096, rope_theta=1e6,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=14336),
+)
+
+SMOKE = ArchConfig(
+    name="mixtral-8x7b-smoke", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=2, d_head=32, d_ff=256, vocab=512,
+    attn_window=64, rope_theta=1e6,
+    moe=MoEConfig(n_experts=4, top_k=2, d_expert=256),
+    dtype="float32", remat=False,
+)

@@ -1,0 +1,18 @@
+"""MusicGen-large backbone — decoder-only over EnCodec tokens.
+[arXiv:2306.05284; hf]  Modality frontend is a STUB: input_specs provides
+precomputed frame embeddings (input_mode='embeddings'); GELU MLP, sinusoidal
+positions (adaptation of the learned offsets noted in DESIGN.md)."""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large", n_layers=48, d_model=2048,
+    n_heads=32, n_kv_heads=32, d_head=64, d_ff=8192, vocab=2048,
+    mlp_kind="gelu", pos_mode="sinusoid", input_mode="embeddings",
+)
+
+SMOKE = ArchConfig(
+    name="musicgen-large-smoke", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=4, d_head=32, d_ff=256, vocab=128,
+    mlp_kind="gelu", pos_mode="sinusoid", input_mode="embeddings",
+    dtype="float32", remat=False,
+)

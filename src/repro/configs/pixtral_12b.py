@@ -1,0 +1,18 @@
+"""Pixtral-12B backbone — mistral-nemo-style decoder, GQA 32q/8kv.
+[hf:mistralai/Pixtral-12B-2409; unverified]  Vision frontend is a STUB:
+input_specs provides precomputed patch embeddings concatenated before the
+text tokens (input_mode='mixed')."""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b", n_layers=40, d_model=5120,
+    n_heads=32, n_kv_heads=8, d_head=128, d_ff=14336, vocab=131072,
+    rope_theta=1e6, input_mode="mixed", patch_frac=0.25,
+)
+
+SMOKE = ArchConfig(
+    name="pixtral-12b-smoke", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=2, d_head=32, d_ff=256, vocab=512,
+    rope_theta=1e6, input_mode="mixed", patch_frac=0.25,
+    dtype="float32", remat=False,
+)

@@ -1,0 +1,16 @@
+"""Qwen1.5-32B — dense, MHA 40 heads (kv=40), QKV bias.
+[hf:Qwen/Qwen1.5-0.5B (family); hf] — 40 heads ∤ 16 ⇒ context-parallel
+attention policy on the production mesh (DESIGN.md §sharding)."""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b", n_layers=64, d_model=5120,
+    n_heads=40, n_kv_heads=40, d_head=128, d_ff=27392, vocab=152064,
+    qkv_bias=True, rope_theta=1e6,
+)
+
+SMOKE = ArchConfig(
+    name="qwen1.5-32b-smoke", n_layers=2, d_model=160,
+    n_heads=5, n_kv_heads=5, d_head=32, d_ff=448, vocab=512,
+    qkv_bias=True, rope_theta=1e6, dtype="float32", remat=False,
+)

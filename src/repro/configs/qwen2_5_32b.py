@@ -1,0 +1,15 @@
+"""Qwen2.5-32B — dense, GQA 40q/8kv heads, QKV bias.
+[hf:Qwen/Qwen2.5-0.5B (family); hf] — 40 heads ∤ 16 ⇒ context-parallel."""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-32b", n_layers=64, d_model=5120,
+    n_heads=40, n_kv_heads=8, d_head=128, d_ff=27648, vocab=152064,
+    qkv_bias=True, rope_theta=1e6,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2.5-32b-smoke", n_layers=2, d_model=160,
+    n_heads=5, n_kv_heads=1, d_head=32, d_ff=448, vocab=512,
+    qkv_bias=True, rope_theta=1e6, dtype="float32", remat=False,
+)

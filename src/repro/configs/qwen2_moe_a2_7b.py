@@ -1,0 +1,20 @@
+"""Qwen1.5-MoE-A2.7B — 60 routed experts top-4 + 4 shared, MHA 16H, QKV bias.
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]  d_shared = 4 × 1408 (fused shared expert)."""
+from ..models.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b", n_layers=24, d_model=2048,
+    n_heads=16, n_kv_heads=16, d_head=128, d_ff=1408, vocab=151936,
+    qkv_bias=True, rope_theta=1e6,
+    moe=MoEConfig(n_experts=60, top_k=4, d_expert=1408,
+                  n_shared=4, d_shared=5632),
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-moe-a2.7b-smoke", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=4, d_head=32, d_ff=96, vocab=512,
+    qkv_bias=True, rope_theta=1e6,
+    moe=MoEConfig(n_experts=8, top_k=4, d_expert=96,
+                  n_shared=2, d_shared=192),
+    dtype="float32", remat=False,
+)

@@ -1,0 +1,16 @@
+"""RWKV6 "Finch" 1.6B — attention-free, data-dependent decay.
+[arXiv:2404.05892; unverified]  heads = d_model/64; channel-mix FFN."""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-1.6b", n_layers=24, d_model=2048,
+    n_heads=32, n_kv_heads=32, d_head=64, d_ff=7168, vocab=65536,
+    layer_kind="rwkv6", mlp_kind="rwkv_cm", pos_mode="none",
+)
+
+SMOKE = ArchConfig(
+    name="rwkv6-1.6b-smoke", n_layers=2, d_model=128,
+    n_heads=2, n_kv_heads=2, d_head=64, d_ff=448, vocab=512,
+    layer_kind="rwkv6", mlp_kind="rwkv_cm", pos_mode="none",
+    dtype="float32", remat=False,
+)

@@ -1,0 +1,11 @@
+"""LeaFi core: learned filters for tree-based data-series indexes.
+
+Public API:
+    build_leafi(series, LeaFiConfig)  → LeaFiIndex  (paper Alg. 1)
+    LeaFiIndex.search(queries, quality_target=0.99) (paper Alg. 2)
+    LeaFiIndex.search_exact(queries)                 (filters disabled)
+"""
+from .build import LeaFiConfig, LeaFiIndex, build_leafi          # noqa: F401
+from .flat_index import FlatIndex                                # noqa: F401
+from .search import SearchResult, search_batched, search_early   # noqa: F401
+from .tree import build_dstree, build_isax                       # noqa: F401

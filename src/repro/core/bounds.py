@@ -1,0 +1,73 @@
+"""Summarization-based lower bounds (jnp oracle forms).
+
+The Pallas kernels in ``repro.kernels.{sax_lb,eapca_lb}`` implement the same
+math with explicit VMEM tiling; these functions are the reference semantics
+and the CPU execution path.
+
+Both bounds satisfy the invariant  lb(q, leaf) ≤ min_{s ∈ leaf} d(q, s),
+which the property tests (tests/test_bounds.py) verify with hypothesis.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import summaries
+from .flat_index import FlatIndex
+
+
+def eapca_lower_bound(query_stats: jnp.ndarray, boxes: jnp.ndarray,
+                      seg_len: jnp.ndarray) -> jnp.ndarray:
+    """DSTree EAPCA box lower bound.
+
+    For each segment s of length w with node box [μ−, μ+]×[σ−, σ+] and query
+    segment stats (μq, σq):
+
+        Σ_{t∈s} (q_t − x_t)²  =  w·(μq − μx)² + Σ ((q̃_t) − (x̃_t))²
+                              ≥  w·(μq − μx)² + (‖q̃‖ − ‖x̃‖)²
+                              =  w·[(μq − μx)² + (σq − σx)²]
+
+    and minimizing over the box replaces each Δ by its distance to the
+    interval.  query_stats: (..., s, 2); boxes: (L, s, 4); seg_len: (s,).
+    Returns (..., L) lower bounds (euclidean, not squared).
+    """
+    mu_q = query_stats[..., None, :, 0]          # (..., 1, s)
+    sd_q = query_stats[..., None, :, 1]
+    mu_lo, mu_hi = boxes[..., 0], boxes[..., 1]  # (L, s)
+    sd_lo, sd_hi = boxes[..., 2], boxes[..., 3]
+    d_mu = jnp.maximum(jnp.maximum(mu_lo - mu_q, mu_q - mu_hi), 0.0)
+    d_sd = jnp.maximum(jnp.maximum(sd_lo - sd_q, sd_q - sd_hi), 0.0)
+    lb2 = (seg_len * (d_mu * d_mu + d_sd * d_sd)).sum(axis=-1)
+    return jnp.sqrt(lb2)
+
+
+def sax_lower_bound(query_paa: jnp.ndarray, edges: jnp.ndarray,
+                    length: int) -> jnp.ndarray:
+    """iSAX lower bound from precomputed symbol boxes.
+
+    query_paa: (..., l); edges: (L, l, 2) [lower, upper] breakpoint edges.
+    MINDIST(q, word)² = (m/l) Σ_d box_dist(q_d, [lo_d, hi_d])².
+    Returns (..., L).
+    """
+    q = query_paa[..., None, :]                  # (..., 1, l)
+    lo, hi = edges[..., 0], edges[..., 1]        # (L, l)
+    d = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
+    # ±inf edges at the extremes produce d=0 there; inf*0 guards:
+    d = jnp.where(jnp.isfinite(d), d, 0.0)
+    l = edges.shape[-2]
+    lb2 = (length / l) * (d * d).sum(axis=-1)
+    return jnp.sqrt(lb2)
+
+
+def lower_bounds(index: FlatIndex, queries: jnp.ndarray) -> jnp.ndarray:
+    """All-leaves lower bounds for a batch of queries → (Q, L)."""
+    queries = jnp.atleast_2d(queries)
+    if index.kind == "dstree":
+        boxes = jnp.asarray(index.payload["eapca_box"])
+        seg_len = jnp.asarray(index.payload["seg_len"]).astype(jnp.float32)
+        qstats = summaries.segment_stats(queries, boxes.shape[1])
+        return eapca_lower_bound(qstats, boxes, seg_len)
+    elif index.kind == "isax":
+        edges = jnp.asarray(index.payload["sax_edges"])
+        qpaa = summaries.paa(queries, edges.shape[1])
+        return sax_lower_bound(qpaa, edges, index.length)
+    raise ValueError(index.kind)

@@ -1,0 +1,141 @@
+"""LeaFi-enhanced index building (paper Alg. 1), end to end.
+
+    1. build the backbone tree (DSTree- or iSAX-flavored)        [tree.py]
+    2. select leaves for filter insertion                        [selection.py]
+    3. generate global + local training data, collect targets    [filter_training.py]
+    4. train all filters (vmapped SGD)                           [filter_training.py]
+    5. fit conformal auto-tuners on the calibration split        [conformal.py]
+
+The returned LeaFiIndex is a pytree: it jits, shards, and checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import (bounds as bounds_mod, conformal, filter_training, filters,
+               search, selection, tree)
+from .flat_index import FlatIndex
+
+
+@dataclasses.dataclass
+class LeaFiConfig:
+    backbone: str = "dstree"          # "dstree" | "isax"
+    leaf_capacity: int = 256
+    n_segments: int = 8               # dstree EAPCA segments
+    word_len: int = 8                 # isax word length
+    # training data sizes; the paper uses n_q = 2000 with n_g/n_l = 3
+    n_global: int = 600
+    n_local: int = 200
+    calib_fraction: float = 0.3       # calibration split of the global set
+    # selection (Alg. 3); t_F/t_S default from the paper's Deep measurement
+    a: float = 2.0
+    t_filter_over_t_series: float = 279.0
+    filter_memory_budget_bytes: int = 6 << 30
+    hidden: Optional[int] = None
+    train: filter_training.TrainConfig = dataclasses.field(
+        default_factory=filter_training.TrainConfig)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class LeaFiIndex:
+    index: FlatIndex
+    filter_params: Optional[Dict[str, jnp.ndarray]]
+    leaf_ids: np.ndarray                      # leaves carrying filters
+    tuner: Optional[conformal.AutoTuner]
+    config: LeaFiConfig
+    build_report: Dict[str, float]
+
+    # -- query API ----------------------------------------------------------
+    def search(self, queries, k: int = 1,
+               quality_target: Optional[float] = 0.99,
+               use_filters: bool = True, **kw) -> search.SearchResult:
+        """quality_target=None or use_filters=False ⇒ exact search."""
+        return search.search_batched(
+            self.index, queries, k=k, filter_params=self.filter_params,
+            leaf_ids=self.leaf_ids, tuner=self.tuner,
+            quality_target=quality_target,
+            use_filters=use_filters and quality_target is not None, **kw)
+
+    def search_exact(self, queries, k: int = 1) -> search.SearchResult:
+        return self.search(queries, k=k, use_filters=False,
+                           quality_target=None)
+
+
+def build_leafi(series: np.ndarray, config: LeaFiConfig = LeaFiConfig(),
+                key: jax.Array | None = None) -> LeaFiIndex:
+    """Alg. 1: LeaFi-enhanced index building."""
+    key = key if key is not None else jax.random.PRNGKey(config.seed)
+    report: Dict[str, float] = {}
+
+    # 0. backbone index
+    t0 = time.perf_counter()
+    if config.backbone == "dstree":
+        index = tree.build_dstree(series, config.leaf_capacity,
+                                  config.n_segments)
+    elif config.backbone == "isax":
+        index = tree.build_isax(series, config.leaf_capacity, config.word_len)
+    else:
+        raise ValueError(config.backbone)
+    report["t_index_build"] = time.perf_counter() - t0
+
+    # 1. SelectLeafNode (Alg. 3) — t_F/t_S from config (measured on real
+    #    hardware by benchmarks/model_type.py; th = a · t_F / t_S).
+    hidden = config.hidden or index.length
+    fbytes = filters.mlp_param_bytes(index.length, hidden)
+    leaf_ids = selection.select_leaves(
+        np.asarray(index.leaf_size),
+        t_filter=config.t_filter_over_t_series, t_series=1.0, a=config.a,
+        filter_bytes=fbytes,
+        memory_budget_bytes=config.filter_memory_budget_bytes)
+    report["n_filters"] = float(len(leaf_ids))
+    report["n_leaves"] = float(index.n_leaves)
+
+    if len(leaf_ids) == 0:
+        return LeaFiIndex(index, None, leaf_ids, None, config,
+                          report)
+
+    # 2-3. training data (global + local, two-pass collection)
+    t0 = time.perf_counter()
+    kdata, ktrain = jax.random.split(key)
+    data = filter_training.collect_training_data(
+        index, leaf_ids, config.n_global, config.n_local, kdata)
+    report["t_collect"] = time.perf_counter() - t0
+
+    # 4. TrainFilters — vmapped SGD on the proper-training split
+    n_cal = max(int(config.n_global * config.calib_fraction), 8)
+    train_data = filter_training.TrainingData(
+        global_queries=data.global_queries[:-n_cal],
+        global_d_L=data.global_d_L[:-n_cal],
+        global_d_lb=data.global_d_lb[:-n_cal],
+        local_queries=data.local_queries,
+        local_d_L=data.local_d_L,
+        leaf_ids=data.leaf_ids)
+    t0 = time.perf_counter()
+    cfg_train = dataclasses.replace(config.train, hidden=config.hidden)
+    params, train_report = filter_training.train_filters(
+        index, train_data, cfg_train, ktrain)
+    report["t_train"] = time.perf_counter() - t0
+    report["val_rmse_z"] = float(train_report["val_rmse_z"].mean())
+
+    # 5. FitAutoTuners on the calibration split (Alg. 4)
+    t0 = time.perf_counter()
+    calib_q = jnp.asarray(data.global_queries[-n_cal:])
+    d_pred_cal = search.predictions_for_all_leaves(
+        index, params, leaf_ids, calib_q, offsets=None)
+    # unfiltered leaves must never filter-prune in the simulation: -inf
+    tuner, cal_report = conformal.fit_autotuners(
+        d_lb=data.global_d_lb[-n_cal:],
+        d_pred=np.asarray(d_pred_cal),
+        d_L=data.global_d_L[-n_cal:],
+        leaf_ids=leaf_ids)
+    report["t_calibrate"] = time.perf_counter() - t0
+    report["calib_best_quality"] = float(cal_report["rank_quality"].max())
+
+    return LeaFiIndex(index, params, leaf_ids, tuner, config, report)

@@ -1,0 +1,211 @@
+"""Conformal auto-tuners (paper §4.4).
+
+Per filter, the absolute prediction errors on a held-out calibration set are
+the candidate adjusting offsets (the non-conformity scores of inductive
+conformal regression).  Sorting them descending, rank j across *all* filters
+jointly defines one operating point; simulating LeaFi search on the
+calibration queries at each rank yields (achieved quality, offset) examples,
+and a monotone Steffen (1990) spline — the same interpolant the paper uses
+via GSL — maps a user-requested quality target to per-filter offsets at
+query time.
+
+The search simulation is exact w.r.t. Alg. 2 semantics: it replays the
+lower-bound-ordered visit with the pruning cascade on the precollected
+(d_lb, d_f, d_L) matrices, so no series data is touched during calibration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_INF = jnp.float32(jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Search simulation (shared by calibration, baselines and benchmarks)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def simulate_search(d_lb: jnp.ndarray, d_pred: jnp.ndarray,
+                    offsets: jnp.ndarray, d_L: jnp.ndarray,
+                    k: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Replay Alg. 2 on precollected matrices.
+
+    d_lb, d_pred, d_L: (Q, L); d_pred is +inf where a leaf has no filter.
+    offsets: (L,) conformal adjustments (0 where no filter).
+    Returns (bsf_final (Q,), searched_count (Q,)).
+    """
+    order = jnp.argsort(d_lb, axis=1)
+    d_F = d_pred - offsets[None, :]
+
+    def per_query(lb_row, dF_row, dL_row, order_row):
+        def step(carry, leaf):
+            bsf, searched = carry
+            prune = (lb_row[leaf] > bsf) | (dF_row[leaf] > bsf)
+            bsf = jnp.where(prune, bsf, jnp.minimum(bsf, dL_row[leaf]))
+            return (bsf, searched + (~prune).astype(jnp.int32)), None
+
+        (bsf, searched), _ = jax.lax.scan(step, (_INF, 0), order_row)
+        return bsf, searched
+
+    return jax.vmap(per_query)(d_lb, d_F, d_L, order)
+
+
+def recall_at_1(bsf_final: jnp.ndarray, d_nn: jnp.ndarray,
+                rtol: float = 1e-5) -> jnp.ndarray:
+    """A query is correct iff the returned distance equals the true NN's."""
+    return (bsf_final <= d_nn * (1 + rtol) + 1e-6).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Steffen (1990) monotone spline, vectorized over filters
+# ---------------------------------------------------------------------------
+
+
+def _steffen_slopes(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """x (K,), y (F, K) → per-knot slopes (F, K), monotonicity-preserving."""
+    h = np.diff(x)                                  # (K-1,)
+    s = np.diff(y, axis=1) / h                      # (F, K-1)
+    d = np.zeros_like(y)
+    if x.size == 1:
+        return d
+    p = (s[:, :-1] * h[1:] + s[:, 1:] * h[:-1]) / (h[:-1] + h[1:])
+    d[:, 1:-1] = (np.sign(s[:, :-1]) + np.sign(s[:, 1:])) * np.minimum(
+        np.minimum(np.abs(s[:, :-1]), np.abs(s[:, 1:])), 0.5 * np.abs(p))
+    d[:, 0] = s[:, 0]
+    d[:, -1] = s[:, -1]
+    return d
+
+
+@dataclasses.dataclass
+class AutoTuner:
+    """Fitted q → o mapping for every filter (shared quality knots)."""
+    knots_q: np.ndarray          # (K,) strictly increasing qualities
+    knots_o: np.ndarray          # (F, K) offsets per filter
+    slopes: np.ndarray           # (F, K) Steffen slopes
+    max_offset: np.ndarray       # (F,) most conservative offset observed
+
+    def offsets(self, target: float, safety: float = 0.0) -> np.ndarray:
+        """Per-filter offsets for one quality target (paper §4.4.2).
+
+        ``safety`` (beyond-paper knob, default off = paper-faithful) aims the
+        spline at target + safety·(1−target): a small calibration margin that
+        fixes the high-target undershoot observed on iSAX backbones (their
+        many small filtered leaves make the calibration set statistics
+        thinner — cf. the paper's own §5.3.1 explanation of the SIFT/95%
+        miss).
+        """
+        if safety:
+            target = target + safety * (1.0 - target)
+        x, y, d = self.knots_q, self.knots_o, self.slopes
+        if x.size == 1:
+            return y[:, 0].copy()
+        if target >= x[-1]:
+            # target beyond anything achieved in simulation: be maximally
+            # conservative (largest calibrated offset).
+            return self.max_offset.copy()
+        q = float(np.clip(target, x[0], x[-1]))
+        i = int(np.clip(np.searchsorted(x, q, side="right") - 1, 0, x.size - 2))
+        h = x[i + 1] - x[i]
+        t = q - x[i]
+        s = (y[:, i + 1] - y[:, i]) / h
+        a = (d[:, i] + d[:, i + 1] - 2 * s) / (h * h)
+        b = (3 * s - 2 * d[:, i] - d[:, i + 1]) / h
+        return ((a * t + b) * t + d[:, i]) * t + y[:, i]
+
+
+def _pava_nondecreasing(y: np.ndarray) -> np.ndarray:
+    """Pool-adjacent-violators: project y (F, J) onto non-decreasing rows."""
+    y = y.copy()
+    F, J = y.shape
+    for f in range(F):
+        vals = []
+        counts = []
+        for v in y[f]:
+            vals.append(float(v))
+            counts.append(1)
+            while len(vals) > 1 and vals[-2] > vals[-1]:
+                v2, c2 = vals.pop(), counts.pop()
+                v1, c1 = vals.pop(), counts.pop()
+                vals.append((v1 * c1 + v2 * c2) / (c1 + c2))
+                counts.append(c1 + c2)
+        out = np.repeat(vals, counts)
+        y[f] = out
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Auto-tuner learning (Alg. 4)
+# ---------------------------------------------------------------------------
+
+
+def fit_autotuners(
+    d_lb: np.ndarray,            # (C, L) calib lower bounds
+    d_pred: np.ndarray,          # (C, L) calib filter predictions (+inf none)
+    d_L: np.ndarray,             # (C, L) calib node-wise NN distances
+    leaf_ids: np.ndarray,        # (F,) leaves with filters
+    max_ranks: int = 64,
+) -> Tuple[AutoTuner, dict]:
+    """Learn per-filter quality→offset mappings by simulated search.
+
+    Follows Alg. 4: candidate offsets are the sorted absolute calibration
+    errors; each rank is evaluated by replaying the search on the calibration
+    queries; a monotone spline is fitted per filter.
+    """
+    C, L = d_lb.shape
+    F = len(leaf_ids)
+    alphas = np.abs(d_pred[:, leaf_ids] - d_L[:, leaf_ids])       # (C, F)
+    A = -np.sort(-alphas, axis=0)                                 # desc, (C, F)
+
+    # subsample ranks for the simulation sweep (quantile-spaced)
+    ranks = np.unique(np.linspace(0, C - 1, min(max_ranks, C)).astype(int))
+    offsets_per_rank = np.zeros((len(ranks), L), np.float32)
+    for r, j in enumerate(ranks):
+        offsets_per_rank[r, leaf_ids] = A[j]
+
+    d_nn = d_L.min(axis=1)
+    sim = jax.vmap(lambda o: simulate_search(
+        jnp.asarray(d_lb), jnp.asarray(d_pred), o, jnp.asarray(d_L)))
+    bsf, searched = sim(jnp.asarray(offsets_per_rank))            # (J, C)
+    quality = np.asarray(
+        recall_at_1(bsf, jnp.asarray(d_nn)[None, :]).mean(axis=1))  # (J,)
+    pruning = 1.0 - np.asarray(searched).mean(axis=1) / L
+
+    # examples (q_j, o_{f,j}) → monotone mapping q → o
+    orderq = np.argsort(quality, kind="stable")
+    q_sorted = quality[orderq]
+    o_sorted = A[ranks][orderq].T.astype(np.float64)              # (F, J)
+    o_iso = _pava_nondecreasing(o_sorted)
+
+    # collapse duplicate quality knots (keep the largest = safest offset)
+    uq, inverse = np.unique(np.round(q_sorted, 6), return_inverse=True)
+    K = len(uq)
+    o_knots = np.full((F, K), -np.inf)
+    np.maximum.at(o_knots.T, inverse, o_iso.T)
+    slopes = (_steffen_slopes(uq, o_knots) if K > 1
+              else np.zeros_like(o_knots))
+
+    tuner = AutoTuner(knots_q=uq, knots_o=o_knots.astype(np.float32),
+                      slopes=slopes.astype(np.float32),
+                      max_offset=A.max(axis=0).astype(np.float32))
+    report = {"rank_quality": quality, "rank_pruning": pruning,
+              "ranks": ranks}
+    return tuner, report
+
+
+def scatter_offsets(tuner: Optional[AutoTuner], leaf_ids: np.ndarray,
+                    n_leaves: int, target: float | None) -> np.ndarray:
+    """(L,) offset vector for a quality target; zeros where no filter.
+
+    tuner=None (an index that selected zero filters — e.g. every leaf under
+    the size threshold) degrades gracefully to the exact index."""
+    out = np.zeros(n_leaves, np.float32)
+    if target is not None and tuner is not None and len(leaf_ids):
+        out[leaf_ids] = tuner.offsets(target)
+    return out

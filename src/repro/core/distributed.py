@@ -1,0 +1,358 @@
+"""Distributed LeaFi search: leaf-partitioned, shard_map-based.
+
+The paper's system is single-node (CPU threads + one GPU).  At pod scale the
+index must shard: leaves are partitioned across devices along the ``model``
+mesh axis (round-robin by size for balance, as in DPiSAX/Odyssey), queries
+batch along ``data``.  Search is a two-phase exchange:
+
+  Phase 1 — every shard scans its single most-promising local leaf (smallest
+            local lower bound); one psum-min establishes a global best-so-far.
+            This is the collective analogue of the paper's "a tight bsf early
+            makes the cascade effective".
+  Phase 2 — every shard runs the LeaFi pruning cascade (summarization LB,
+            then calibrated filter prediction) against the *global* bsf over
+            its local leaves, scanning only survivors; a final psum-min picks
+            the answer (and an argmin exchange resolves the owner).
+
+Collectives used: two ``psum(min)`` on (Q,)-vectors and one final pair —
+bytes exchanged are O(Q), independent of collection size: the pruning
+cascade is what makes the index *communication*-scalable, not just
+compute-scalable.  This file is also what ``launch/dryrun.py --arch
+leafi-serve`` lowers on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import conformal
+from .build import LeaFiIndex
+
+_INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass
+class ShardedLeaFi:
+    """Device-partitioned LeaFi index (leaf-sharded along ``model``)."""
+    # per-shard stacked arrays; leading axis = n_shards
+    series: jnp.ndarray           # (S, rows_max, m)
+    leaf_start: jnp.ndarray       # (S, P)
+    leaf_size: jnp.ndarray        # (S, P)   0 ⇒ padding leaf
+    lb_lo: jnp.ndarray            # (S, P, d)  box lower edges (pre-scaled)
+    lb_hi: jnp.ndarray            # (S, P, d)
+    # stacked filter params (+inf-free; has_filter masks unfiltered leaves)
+    w1: jnp.ndarray               # (S, P, m, h)
+    b1: jnp.ndarray               # (S, P, h)
+    w2: jnp.ndarray               # (S, P, h)
+    b2: jnp.ndarray               # (S, P)
+    y_mean: jnp.ndarray           # (S, P)
+    y_std: jnp.ndarray            # (S, P)
+    offsets: jnp.ndarray          # (S, P) conformal offsets at build target
+    has_filter: jnp.ndarray       # (S, P) bool
+    max_leaf: int
+    length: int
+    kind: str
+    qscale: np.ndarray            # (d,) query coordinate pre-scale (box LB)
+
+    def query_coords(self, queries: jnp.ndarray) -> jnp.ndarray:
+        """Map raw queries to pre-scaled box coordinates (see kernels.box_lb)."""
+        from . import summaries
+        if self.kind == "dstree":
+            s = self.lb_lo.shape[-1] // 2
+            st = summaries.segment_stats(queries, s)
+            q = jnp.concatenate([st[..., 0], st[..., 1]], -1)
+        else:
+            l = self.lb_lo.shape[-1]
+            q = summaries.paa(queries, l)
+        return q * jnp.asarray(self.qscale)
+
+
+def shard_leafi(lfi: LeaFiIndex, n_shards: int,
+                quality_target: Optional[float] = 0.99) -> ShardedLeaFi:
+    """Partition a built LeaFiIndex into n_shards leaf groups."""
+    from . import summaries
+    index = lfi.index
+    L = index.n_leaves
+    sizes = np.asarray(index.leaf_size)
+    order = np.argsort(-sizes, kind="stable")
+    # round-robin by size → balanced rows per shard
+    shard_of = np.empty(L, np.int64)
+    for rank, leaf in enumerate(order):
+        shard_of[leaf] = rank % n_shards
+    P_max = max((shard_of == s).sum() for s in range(n_shards))
+
+    # pre-scaled box edges (shared form for both backbones; cf. kernels.box_lb)
+    if index.kind == "dstree":
+        box = np.asarray(index.payload["eapca_box"])
+        w = np.sqrt(np.asarray(index.payload["seg_len"], np.float32))
+        lo = np.concatenate([box[..., 0] * w, box[..., 2] * w], -1)
+        hi = np.concatenate([box[..., 1] * w, box[..., 3] * w], -1)
+        qscale = np.concatenate([w, w])
+    else:
+        edges = np.asarray(index.payload["sax_edges"])
+        l = edges.shape[1]
+        scale = np.sqrt(index.length / l)
+        lo, hi = edges[..., 0] * scale, edges[..., 1] * scale
+        qscale = np.full(l, scale, np.float32)
+
+    m = index.length
+    h = lfi.filter_params["w1"].shape[-1] if lfi.filter_params else m
+    F_of_leaf = {int(lf): i for i, lf in enumerate(lfi.leaf_ids)}
+    offsets_global = conformal.scatter_offsets(
+        lfi.tuner, lfi.leaf_ids, L, quality_target) \
+        if lfi.tuner is not None else np.zeros(L, np.float32)
+
+    series_np = np.asarray(index.series)
+    starts_np = np.asarray(index.leaf_start)
+    rows_max = 0
+    per_shard_rows = []
+    for s in range(n_shards):
+        leaves = np.where(shard_of == s)[0]
+        per_shard_rows.append(int(sizes[leaves].sum()))
+    rows_max = max(per_shard_rows) + index.max_leaf_size  # slack for slicing
+
+    S = n_shards
+    out = ShardedLeaFi(
+        series=np.zeros((S, rows_max, m), np.float32),
+        leaf_start=np.zeros((S, P_max), np.int32),
+        leaf_size=np.zeros((S, P_max), np.int32),
+        lb_lo=np.full((S, P_max, lo.shape[-1]), -np.inf, np.float32),
+        lb_hi=np.full((S, P_max, lo.shape[-1]), np.inf, np.float32),
+        w1=np.zeros((S, P_max, m, h), np.float32),
+        b1=np.zeros((S, P_max, h), np.float32),
+        w2=np.zeros((S, P_max, h), np.float32),
+        b2=np.zeros((S, P_max), np.float32),
+        y_mean=np.zeros((S, P_max), np.float32),
+        y_std=np.ones((S, P_max), np.float32),
+        offsets=np.zeros((S, P_max), np.float32),
+        has_filter=np.zeros((S, P_max), bool),
+        max_leaf=index.max_leaf_size, length=m, kind=index.kind,
+        qscale=qscale.astype(np.float32),
+    )
+    for s in range(n_shards):
+        leaves = np.where(shard_of == s)[0]
+        cursor = 0
+        for j, lf in enumerate(leaves):
+            sz = int(sizes[lf])
+            st = int(starts_np[lf])
+            out.series[s, cursor:cursor + sz] = series_np[st:st + sz]
+            out.leaf_start[s, j] = cursor
+            out.leaf_size[s, j] = sz
+            out.lb_lo[s, j] = lo[lf]
+            out.lb_hi[s, j] = hi[lf]
+            if lfi.filter_params is not None and int(lf) in F_of_leaf:
+                fi = F_of_leaf[int(lf)]
+                out.w1[s, j] = np.asarray(lfi.filter_params["w1"][fi])
+                out.b1[s, j] = np.asarray(lfi.filter_params["b1"][fi])
+                out.w2[s, j] = np.asarray(lfi.filter_params["w2"][fi])
+                out.b2[s, j] = float(lfi.filter_params["b2"][fi])
+                out.y_mean[s, j] = float(lfi.filter_params["y_mean"][fi])
+                out.y_std[s, j] = float(lfi.filter_params["y_std"][fi])
+                out.offsets[s, j] = offsets_global[lf]
+                out.has_filter[s, j] = True
+            cursor += sz
+    # jnp-ify
+    for f in dataclasses.fields(out):
+        v = getattr(out, f.name)
+        if isinstance(v, np.ndarray) and f.name != "qscale":
+            setattr(out, f.name, jnp.asarray(v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the shard-local search body (runs under shard_map; axis name = 'model')
+# ---------------------------------------------------------------------------
+
+
+def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
+                  bsf0):
+    """Cascade over this shard's leaves given a starting global bsf."""
+    Pn = lb.shape[1]
+    row_ids = jnp.arange(max_leaf)
+    order = jnp.argsort(lb, axis=1)
+
+    def per_query(q, lb_row, dF_row, order_row, bsf_init):
+        def step(carry, leaf):
+            bsf, n_s = carry
+            valid = sh_size[leaf] > 0
+            p_lb = jnp.logical_or(lb_row[leaf] > bsf, ~valid)
+            p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
+            pruned = p_lb | p_f
+            slab = jax.lax.dynamic_slice_in_dim(
+                sh_series, sh_start[leaf], max_leaf, 0)
+            diff = slab - q[None, :]
+            d = jnp.sqrt((diff * diff).sum(-1))
+            d = jnp.where((row_ids < sh_size[leaf]) & ~pruned, d, _INF)
+            bsf = jnp.minimum(bsf, d.min())
+            return (bsf, n_s + (~pruned).astype(jnp.int32)), None
+
+        (bsf, n_s), _ = jax.lax.scan(step, (bsf_init, jnp.int32(0)), order_row)
+        return bsf, n_s
+
+    return jax.vmap(per_query)(queries, lb, d_F, order, bsf0)
+
+
+def search_input_specs(n_shards: int, leaves_per_shard: int,
+                       rows_per_shard: int, m: int, h: int, n_queries: int,
+                       coord_dim: int):
+    """ShapeDtypeStructs for dry-running the distributed search at scale.
+
+    Sized like the paper's production setting by default from the caller
+    (25M series × len 256, ~16k leaves, MESSI-style 10k leaf capacity).
+    Order matches the jitted search signature (idx arrays…, queries, qcoords).
+    """
+    import jax as _jax
+    sd = _jax.ShapeDtypeStruct
+    S, P = n_shards, leaves_per_shard
+    f32, i32 = jnp.float32, jnp.int32
+    return (
+        sd((S, rows_per_shard, m), f32),     # series
+        sd((S, P), i32), sd((S, P), i32),    # leaf_start, leaf_size
+        sd((S, P, coord_dim), f32), sd((S, P, coord_dim), f32),  # lb lo/hi
+        sd((S, P, m, h), f32), sd((S, P, h), f32),               # w1, b1
+        sd((S, P, h), f32), sd((S, P), f32),                     # w2, b2
+        sd((S, P), f32), sd((S, P), f32),                        # y stats
+        sd((S, P), f32), sd((S, P), jnp.bool_),                  # offsets, mask
+        sd((n_queries, m), f32),                                 # queries
+        sd((n_queries, coord_dim), f32),                         # qcoords
+    )
+
+
+def build_search_fn(mesh: Mesh, max_leaf: int, data_axes=("data",),
+                    model_axis: str = "model"):
+    """The shard_map'ped search as a jit-able function of explicit args."""
+
+    def search_fn(series, start, size, lo, hi, w1, b1, w2, b2, y_mean,
+                  y_std, offsets, has_filter, queries, qcoords):
+        series, start, size = series[0], start[0], size[0]
+        lo, hi = lo[0], hi[0]
+        w1, b1, w2, b2 = w1[0], b1[0], w2[0], b2[0]
+        y_mean, y_std = y_mean[0], y_std[0]
+        offsets, has_filter = offsets[0], has_filter[0]
+
+        d = jnp.maximum(jnp.maximum(lo[None] - qcoords[:, None],
+                                    qcoords[:, None] - hi[None]), 0.0)
+        d = jnp.where(jnp.isfinite(d), d, 0.0)
+        lb = jnp.sqrt((d * d).sum(-1))
+
+        hdd = jax.nn.relu(jnp.einsum("qm,pmh->pqh", queries, w1)
+                          + b1[:, None, :])
+        pred = jnp.einsum("pqh,ph->pq", hdd, w2) + b2[:, None]
+        pred = pred * y_std[:, None] + y_mean[:, None]
+        d_F = jnp.where(has_filter[:, None], pred - offsets[:, None], -_INF)
+        d_F = d_F.T
+
+        best_leaf = lb.argmin(axis=1)
+        row_ids = jnp.arange(max_leaf)
+
+        def probe(q, leaf):
+            slab = jax.lax.dynamic_slice_in_dim(
+                series, start[leaf], max_leaf, 0)
+            dd = jnp.sqrt(((slab - q[None]) ** 2).sum(-1))
+            return jnp.where(row_ids < size[leaf], dd, _INF).min()
+
+        bsf_local = jax.vmap(probe)(queries, best_leaf)
+        bsf0 = jax.lax.pmin(bsf_local, model_axis)
+
+        bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
+                                 max_leaf, bsf0)
+        nn = jax.lax.pmin(bsf, model_axis)
+        total_searched = jax.lax.psum(n_s, model_axis)
+        return nn[None], total_searched[None]
+
+    spec_idx = P(model_axis)
+    spec_q = P(data_axes)
+    smapped = shard_map(
+        search_fn, mesh=mesh,
+        in_specs=(spec_idx,) * 13 + (spec_q, spec_q),
+        out_specs=(P(model_axis, *data_axes), P(model_axis, *data_axes)),
+        check_rep=False)
+    from jax.sharding import NamedSharding
+    in_sh = tuple(NamedSharding(mesh, spec_idx) for _ in range(13)) \
+        + (NamedSharding(mesh, spec_q), NamedSharding(mesh, spec_q))
+    return jax.jit(smapped, in_shardings=in_sh), spec_idx, spec_q
+
+
+def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
+                            data_axes=("data",), model_axis: str = "model"):
+    """Build the jitted multi-chip search step over ``mesh``.
+
+    Returns fn(queries (Q, m)) → (nn_dist (Q,), searched_per_shard (Q,)).
+    Queries shard over ``data_axes``; the index over ``model_axis``.
+    """
+    max_leaf = sharded.max_leaf
+    spec_idx = P(model_axis)
+    spec_q = P(data_axes)
+
+    def search_fn(series, start, size, lo, hi, w1, b1, w2, b2, y_mean, y_std,
+                  offsets, has_filter, queries, qcoords):
+        # inside shard_map: leading shard axis is size 1 → squeeze
+        series, start, size = series[0], start[0], size[0]
+        lo, hi = lo[0], hi[0]
+        w1, b1, w2, b2 = w1[0], b1[0], w2[0], b2[0]
+        y_mean, y_std = y_mean[0], y_std[0]
+        offsets, has_filter = offsets[0], has_filter[0]
+
+        # local lower bounds for all local leaves: (Q, P)
+        d = jnp.maximum(jnp.maximum(lo[None] - qcoords[:, None],
+                                    qcoords[:, None] - hi[None]), 0.0)
+        d = jnp.where(jnp.isfinite(d), d, 0.0)
+        lb = jnp.sqrt((d * d).sum(-1))
+
+        # local filter predictions: einsum over stacked per-leaf MLPs
+        hdd = jax.nn.relu(jnp.einsum("qm,pmh->pqh", queries, w1)
+                          + b1[:, None, :])
+        pred = jnp.einsum("pqh,ph->pq", hdd, w2) + b2[:, None]
+        pred = pred * y_std[:, None] + y_mean[:, None]
+        d_F = jnp.where(has_filter[:, None], pred - offsets[:, None], -_INF)
+        d_F = d_F.T                                             # (Q, P)
+
+        # phase 1: scan the single most promising local leaf
+        best_leaf = lb.argmin(axis=1)                           # (Q,)
+        row_ids = jnp.arange(max_leaf)
+
+        def probe(q, leaf):
+            slab = jax.lax.dynamic_slice_in_dim(
+                series, start[leaf], max_leaf, 0)
+            dd = jnp.sqrt(((slab - q[None]) ** 2).sum(-1))
+            return jnp.where(row_ids < size[leaf], dd, _INF).min()
+
+        bsf_local = jax.vmap(probe)(queries, best_leaf)
+        bsf0 = jax.lax.pmin(bsf_local, model_axis)              # collective 1
+
+        # phase 2: full cascade against the global bsf
+        bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
+                                 max_leaf, bsf0)
+        nn = jax.lax.pmin(bsf, model_axis)                      # collective 2
+        total_searched = jax.lax.psum(n_s, model_axis)
+        return nn[None], total_searched[None]
+
+    idx_args = (sharded.series, sharded.leaf_start, sharded.leaf_size,
+                sharded.lb_lo, sharded.lb_hi, sharded.w1, sharded.b1,
+                sharded.w2, sharded.b2, sharded.y_mean, sharded.y_std,
+                sharded.offsets, sharded.has_filter)
+
+    smapped = shard_map(
+        search_fn, mesh=mesh,
+        in_specs=(spec_idx,) * len(idx_args) + (spec_q, spec_q),
+        out_specs=(P(model_axis, *data_axes), P(model_axis, *data_axes)),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def run(queries):
+        sh = ShardedLeaFi(*idx_args, max_leaf=max_leaf,
+                          length=sharded.length, kind=sharded.kind,
+                          qscale=sharded.qscale)
+        qcoords = sh.query_coords(queries)
+        nn, searched = smapped(*idx_args, queries, qcoords)
+        return nn[0], searched[0]
+
+    return run, idx_args, spec_idx, spec_q

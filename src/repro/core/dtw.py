@@ -1,0 +1,91 @@
+"""Dynamic Time Warping support (paper §3: "LeaFi works for any distance
+measure supported by the backbone index, including Euclidean and DTW").
+
+Provides the pieces a DTW-backed LeaFi index needs:
+* ``dtw`` — Sakoe-Chiba-banded DTW distance (jnp, jit/vmap-able; the band is
+  the standard constraint in the data-series literature).
+* ``keogh_envelope`` / ``lb_keogh`` — the LB_Keogh lower bound: the same
+  role the EAPCA/SAX bounds play for Euclidean search.  The cascade of
+  Alg. 2 is metric-agnostic — only d_lb and the leaf scan change; the
+  learned filters regress node-wise DTW distances with zero code change
+  (they never look at the metric, only at (query, target) pairs).
+* ``lb_keogh_leaves`` — the node-level form over per-leaf aggregated
+  envelopes; structurally a box distance, so the box_lb kernel serves it.
+
+The invariants tests/test_dtw.py verifies with hypothesis:
+    lb_keogh(q, x, r) ≤ dtw(q, x, r) ≤ euclidean(q, x).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_INF = jnp.float32(1e30)
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw(q: jnp.ndarray, x: jnp.ndarray, band: int = 8) -> jnp.ndarray:
+    """Banded DTW distance between two equal-length series (m,).
+
+    Full-width masked DP, lax.scan over rows; the in-row (left-neighbor)
+    dependency is its own small scan.  O(m²) cells, fine at series lengths
+    (≤ a few hundred) — a banded-frame kernel is the TPU follow-up.
+    """
+    m = q.shape[0]
+    j = jnp.arange(m)
+    cost = (q[:, None] - x[None, :]) ** 2
+    in_band = jnp.abs(j[:, None] - j[None, :]) <= band
+    cost = jnp.where(in_band, cost, _INF)
+
+    def row_step(carry, crow):
+        prev, lead = carry
+        diag = jnp.concatenate([lead[None], prev[:-1]])    # D[i-1, j-1]
+        base = jnp.minimum(prev, diag)                     # min(up, diag)
+
+        def left_scan(run, cb):
+            c, b = cb
+            v = jnp.minimum(c + jnp.minimum(b, run), _INF)
+            return v, v
+
+        _, row = jax.lax.scan(left_scan, _INF, (crow, base))
+        return (row, _INF), None
+
+    # virtual row -1: D[-1,-1] = 0 (the `lead`), everything else +inf
+    init = (jnp.full((m,), _INF), jnp.float32(0.0))
+    (last, _), _ = jax.lax.scan(row_step, init, cost)
+    return jnp.sqrt(last[-1])
+
+
+def keogh_envelope(q: jnp.ndarray, band: int = 8):
+    """Lower/upper envelope of q under the band: U_i = max q[i−r..i+r]."""
+    m = q.shape[0]
+    idx = jnp.arange(m)[:, None] + jnp.arange(-band, band + 1)[None, :]
+    window = q[jnp.clip(idx, 0, m - 1)]
+    valid = (idx >= 0) & (idx < m)
+    U = jnp.where(valid, window, -_INF).max(axis=1)
+    L = jnp.where(valid, window, _INF).min(axis=1)
+    return L, U
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def lb_keogh(q: jnp.ndarray, x: jnp.ndarray, band: int = 8) -> jnp.ndarray:
+    """LB_Keogh(q, x): distance from x to q's envelope — a DTW lower bound."""
+    L, U = keogh_envelope(q, band)
+    d = jnp.maximum(jnp.maximum(x - U, L - x), 0.0)
+    return jnp.sqrt((d * d).sum())
+
+
+def lb_keogh_leaves(query: jnp.ndarray, env_lo: jnp.ndarray,
+                    env_hi: jnp.ndarray) -> jnp.ndarray:
+    """Node-level LB_Keogh: envelopes aggregated per leaf (min L / max U of
+    the leaf's series) → (L_leaves,) lower bounds for the Alg. 2 cascade.
+
+    Note the direction flip vs the point-to-point form: at node level the
+    *query* is compared against the leaf's envelope box, which is exactly
+    the Euclidean box-bound shape — the box_lb kernel computes it.
+    """
+    d = jnp.maximum(jnp.maximum(env_lo - query[None, :],
+                                query[None, :] - env_hi), 0.0)
+    return jnp.sqrt((d * d).sum(-1))

@@ -1,0 +1,157 @@
+"""Learned filter models.
+
+The paper instantiates filters as per-leaf MLPs (one hidden layer, width =
+series length), and ablates CNN (2 conv layers) and RNN (2 LSTM blocks)
+variants (Table 1).  All variants here are *stacked*: parameters carry a
+leading filter axis F so that every filter trains and infers in one fused
+vmap/kernel call instead of the paper's per-leaf GPU invocations.
+
+Predictions are de-standardized with per-filter target statistics: filters
+regress z-scored node-wise NN distances, which keeps one SGD recipe stable
+across datasets whose distance scales differ by orders of magnitude.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.filter_mlp import ops as mlp_ops
+from ..kernels.filter_mlp import ref as mlp_ref
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# MLP (the paper's default filter)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, n_filters: int, length: int,
+             hidden: int | None = None, dtype=jnp.float32) -> Params:
+    hidden = hidden or length
+    k1, k2 = jax.random.split(key)
+    scale1 = jnp.sqrt(2.0 / length)
+    scale2 = jnp.sqrt(2.0 / hidden)
+    return {
+        "w1": (jax.random.normal(k1, (n_filters, length, hidden)) * scale1).astype(dtype),
+        "b1": jnp.zeros((n_filters, hidden), dtype),
+        "w2": (jax.random.normal(k2, (n_filters, hidden)) * scale2).astype(dtype),
+        "b2": jnp.zeros((n_filters,), dtype),
+        # per-filter target standardization (fitted at training time)
+        "y_mean": jnp.zeros((n_filters,), jnp.float32),
+        "y_std": jnp.ones((n_filters,), jnp.float32),
+    }
+
+
+def apply_mlp(params: Params, queries: jnp.ndarray,
+              use_kernel: bool = True) -> jnp.ndarray:
+    """(Q, m) → (F, Q) de-standardized distance predictions."""
+    fn = mlp_ops.filter_predict if use_kernel else mlp_ref.filter_predict
+    z = fn(params["w1"], params["b1"], params["w2"], params["b2"], queries)
+    return z * params["y_std"][:, None] + params["y_mean"][:, None]
+
+
+def apply_mlp_raw(params: Params, queries: jnp.ndarray) -> jnp.ndarray:
+    """Raw (standardized-space) predictions — used inside the training loss."""
+    return mlp_ref.filter_predict(
+        params["w1"], params["b1"], params["w2"], params["b2"], queries
+    )
+
+
+def mlp_param_bytes(length: int, hidden: int | None = None,
+                    bytes_per_el: int = 4) -> int:
+    """Per-filter memory footprint w (the knapsack item weight, Eq. 1)."""
+    hidden = hidden or length
+    return bytes_per_el * (length * hidden + hidden + hidden + 1)
+
+
+# ---------------------------------------------------------------------------
+# CNN / RNN variants (Table 1 & Fig. 12 ablation)
+# ---------------------------------------------------------------------------
+
+
+def init_cnn(key: jax.Array, n_filters: int, length: int,
+             channels: int | None = None, ksize: int = 3) -> Params:
+    channels = channels or length
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1 = jnp.sqrt(2.0 / ksize)
+    s2 = jnp.sqrt(2.0 / (ksize * channels))
+    return {
+        "c1": jax.random.normal(k1, (n_filters, ksize, 1, channels)) * s1,
+        "c2": jax.random.normal(k2, (n_filters, ksize, channels, channels)) * s2,
+        "w": jax.random.normal(k3, (n_filters, channels)) * jnp.sqrt(1.0 / channels),
+        "b": jnp.zeros((n_filters,)),
+        "y_mean": jnp.zeros((n_filters,), jnp.float32),
+        "y_std": jnp.ones((n_filters,), jnp.float32),
+    }
+
+
+def apply_cnn(params: Params, queries: jnp.ndarray) -> jnp.ndarray:
+    """2-conv-layer filter (paper Table 1): (Q, m) → (F, Q)."""
+    x = queries[:, :, None]                                   # (Q, m, 1)
+
+    def one(c1, c2, w, b):
+        h = jax.lax.conv_general_dilated(
+            x, c1, (1,), "SAME", dimension_numbers=("NWC", "WIO", "NWC"))
+        h = jax.nn.relu(h)
+        h = jax.lax.conv_general_dilated(
+            h, c2, (1,), "SAME", dimension_numbers=("NWC", "WIO", "NWC"))
+        h = jax.nn.relu(h).mean(axis=1)                       # (Q, C) GAP
+        return h @ w + b
+
+    z = jax.vmap(one)(params["c1"], params["c2"], params["w"], params["b"])
+    return z * params["y_std"][:, None] + params["y_mean"][:, None]
+
+
+def init_rnn(key: jax.Array, n_filters: int, length: int,
+             hidden: int = 64) -> Params:
+    ks = jax.random.split(key, 5)
+    s = jnp.sqrt(1.0 / hidden)
+    return {
+        "wi1": jax.random.normal(ks[0], (n_filters, 1, 4 * hidden)) * s,
+        "wh1": jax.random.normal(ks[1], (n_filters, hidden, 4 * hidden)) * s,
+        "wi2": jax.random.normal(ks[2], (n_filters, hidden, 4 * hidden)) * s,
+        "wh2": jax.random.normal(ks[3], (n_filters, hidden, 4 * hidden)) * s,
+        "w": jax.random.normal(ks[4], (n_filters, hidden)) * s,
+        "b": jnp.zeros((n_filters,)),
+        "y_mean": jnp.zeros((n_filters,), jnp.float32),
+        "y_std": jnp.ones((n_filters,), jnp.float32),
+    }
+
+
+def _lstm_layer(x, wi, wh):
+    """x (Q, T, d_in) → (Q, T, h) minimal LSTM (no biases)."""
+    h_dim = wh.shape[0]
+    Q = x.shape[0]
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ wi + h @ wh
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((Q, h_dim)), jnp.zeros((Q, h_dim)))
+    _, hs = jax.lax.scan(step, init, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def apply_rnn(params: Params, queries: jnp.ndarray) -> jnp.ndarray:
+    """2-LSTM-block filter (paper Table 1): (Q, m) → (F, Q)."""
+    x = queries[:, :, None]
+
+    def one(wi1, wh1, wi2, wh2, w, b):
+        h = _lstm_layer(x, wi1, wh1)
+        h = _lstm_layer(h, wi2, wh2)
+        return h[:, -1, :] @ w + b
+
+    z = jax.vmap(one)(params["wi1"], params["wh1"], params["wi2"],
+                      params["wh2"], params["w"], params["b"])
+    return z * params["y_std"][:, None] + params["y_mean"][:, None]
+
+
+APPLY = {"mlp": apply_mlp, "cnn": apply_cnn, "rnn": apply_rnn}
+INIT = {"mlp": init_mlp, "cnn": init_cnn, "rnn": init_rnn}

@@ -1,0 +1,140 @@
+"""Series summarizations: PAA, SAX and EAPCA.
+
+These are the building blocks of the two backbone indexes the paper
+instantiates LeaFi on: iSAX/MESSI (SAX words over PAA) and DSTree (EAPCA
+per-segment mean/std).  Everything here is shape-polymorphic jnp so it can be
+reused inside jitted search, vmapped over queries, or called with numpy
+arrays at index-build time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# PAA
+# ---------------------------------------------------------------------------
+
+
+def paa(series: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    """Piecewise aggregate approximation.
+
+    series: (..., m) with m divisible by ``n_segments`` (we pad otherwise).
+    returns (..., n_segments) segment means.
+    """
+    m = series.shape[-1]
+    seg = -(-m // n_segments)  # ceil
+    pad = seg * n_segments - m
+    if pad:
+        # repeat-edge padding keeps segment means unbiased enough; the exact
+        # choice only shifts the summarization, never the LB validity (the
+        # bound is computed against identically-summarized data).
+        series = jnp.concatenate(
+            [series, jnp.repeat(series[..., -1:], pad, axis=-1)], axis=-1
+        )
+    shaped = series.reshape(*series.shape[:-1], n_segments, seg)
+    return shaped.mean(axis=-1)
+
+
+def segment_stats(series: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    """EAPCA statistics: per-segment (mean, std).
+
+    series: (..., m) → (..., n_segments, 2).
+    """
+    m = series.shape[-1]
+    seg = -(-m // n_segments)
+    pad = seg * n_segments - m
+    if pad:
+        series = jnp.concatenate(
+            [series, jnp.repeat(series[..., -1:], pad, axis=-1)], axis=-1
+        )
+    shaped = series.reshape(*series.shape[:-1], n_segments, seg)
+    mean = shaped.mean(axis=-1)
+    std = shaped.std(axis=-1)
+    return jnp.stack([mean, std], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# SAX
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def sax_breakpoints(card_bits: int) -> np.ndarray:
+    """Gaussian equi-probable breakpoints for cardinality 2**card_bits.
+
+    Returns the (2**card_bits - 1,) interior breakpoints.  Computed with the
+    inverse normal CDF (jax.scipy.special.ndtri) as in the iSAX papers.
+    """
+    card = 1 << card_bits
+    qs = np.arange(1, card) / card
+    return np.asarray(jax.scipy.special.ndtri(jnp.asarray(qs)))
+
+
+def sax_from_paa(paa_vals: jnp.ndarray, card_bits: int) -> jnp.ndarray:
+    """Quantize PAA values into SAX symbols ∈ [0, 2**card_bits)."""
+    bps = jnp.asarray(sax_breakpoints(card_bits))
+    return jnp.searchsorted(bps, paa_vals).astype(jnp.int32)
+
+
+def sax_symbol_edges(symbols: np.ndarray, card_bits: np.ndarray,
+                     max_bits: int = 8) -> np.ndarray:
+    """Convert SAX symbols at per-dim cardinalities into value-space boxes.
+
+    symbols:   (..., l) int — symbol index *at its own cardinality*.
+    card_bits: (..., l) int — bits of cardinality per dim (0 ⇒ whole axis).
+    returns (..., l, 2) float32 [lower, upper] edges, ±inf at the extremes.
+
+    Precomputing edges at build time turns query-time SAX lower bounds into a
+    pure box-distance computation (no breakpoint table lookups inside the
+    kernel), which is the form the ``sax_lb`` Pallas kernel consumes.
+    """
+    symbols = np.asarray(symbols)
+    card_bits = np.broadcast_to(np.asarray(card_bits), symbols.shape)
+    lo = np.full(symbols.shape, -np.inf, np.float32)
+    hi = np.full(symbols.shape, np.inf, np.float32)
+    for b in np.unique(card_bits):
+        if b == 0:
+            continue
+        bps = sax_breakpoints(int(b))
+        mask = card_bits == b
+        sym = symbols[mask]
+        lo_b = np.where(sym > 0, bps[np.clip(sym - 1, 0, None)], -np.inf)
+        hi_b = np.where(sym < (1 << int(b)) - 1,
+                        bps[np.clip(sym, None, len(bps) - 1)], np.inf)
+        lo[mask] = lo_b
+        hi[mask] = hi_b
+    return np.stack([lo, hi], axis=-1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Node aggregates
+# ---------------------------------------------------------------------------
+
+
+def eapca_node_box(stats: np.ndarray) -> np.ndarray:
+    """Aggregate per-series EAPCA stats of one node into its summarization.
+
+    stats: (n_node, s, 2) → (s, 4) [mean_min, mean_max, std_min, std_max].
+    """
+    stats = np.asarray(stats)
+    return np.stack(
+        [
+            stats[..., 0].min(axis=0),
+            stats[..., 0].max(axis=0),
+            stats[..., 1].min(axis=0),
+            stats[..., 1].max(axis=0),
+        ],
+        axis=-1,
+    ).astype(np.float32)
+
+
+def znormalize(series: np.ndarray, eps: float = 1e-8) -> np.ndarray:
+    """Per-series z-normalization (standard in the data-series literature)."""
+    series = np.asarray(series, np.float32)
+    mu = series.mean(axis=-1, keepdims=True)
+    sd = series.std(axis=-1, keepdims=True)
+    return (series - mu) / (sd + eps)

@@ -1,0 +1,2 @@
+from .series import SERIES_GENERATORS, make_series_dataset          # noqa: F401
+from .tokens import TokenPipeline, TokenPipelineConfig               # noqa: F401

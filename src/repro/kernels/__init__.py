@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for LeaFi's compute hot spots.
+
+The paper's search cost decomposes into (1) leaf scans — batched L2 distance
+computations, (2) learned-filter inference — thousands of tiny per-leaf MLPs,
+and (3) summarization lower bounds.  Each gets a kernel:
+
+* ``l2_scan``     — tiled (query × series) L2 distances on the MXU via the
+                    ‖q−s‖² = ‖q‖² + ‖s‖² − 2·q·s decomposition.
+* ``filter_mlp``  — stacked per-leaf MLP inference: a grouped matmul over the
+                    filter axis (the TPU-native replacement for the paper's
+                    per-leaf GPU inference calls).
+* ``box_lb``      — box lower bounds; both the iSAX MINDIST and the DSTree
+                    EAPCA bound reduce to it after pre-scaling (see ops).
+
+Every kernel ships ``ref.py`` (pure-jnp oracle) and ``ops.py`` (jitted
+wrapper; interpret=True on CPU).  Shape/dtype sweeps live in
+``tests/test_kernels.py``.
+"""
+from .l2_scan import ops as l2_scan        # noqa: F401
+from .filter_mlp import ops as filter_mlp  # noqa: F401
+from .box_lb import ops as box_lb          # noqa: F401

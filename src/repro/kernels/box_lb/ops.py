@@ -1,0 +1,74 @@
+"""Jitted wrappers: generic box_lb plus the two index-specific reductions.
+
+* ``sax_lb``:   MINDIST(q, word)² = (m/l)·Σ_d boxdist(paa_d, [lo_d, hi_d])²
+                → pre-scale the PAA coords and edges by sqrt(m/l).
+* ``eapca_lb``: Σ_s w_s·(boxdist(μ)² + boxdist(σ)²)
+                → concat the μ and σ coordinate blocks, pre-scaled by √w_s.
+
+After pre-scaling, both are the plain box_lb kernel — one kernel, two bounds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jnp.ndarray, mult: int, fill: float) -> jnp.ndarray:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bl", "interpret"))
+def box_lb(q, lo, hi, *, bq: int = 128, bl: int = 128,
+           interpret: bool | None = None):
+    """q (Q, d) vs boxes (L, d) → (Q, L).
+
+    Off-TPU the jnp oracle runs (see l2_scan.ops for the rationale)."""
+    if interpret is None:
+        if _use_interpret():
+            return ref.box_lb(q, lo, hi)
+        interpret = False
+    Q, L = q.shape[0], lo.shape[0]
+    qp = _pad_rows(q, bq, 0.0)
+    # padded boxes are (-inf, +inf) ⇒ lb 0; sliced off below.
+    lop = _pad_rows(lo, bl, -jnp.inf)
+    hip = _pad_rows(hi, bl, jnp.inf)
+    out = kernel.box_lb_kernel(qp, lop, hip, bq=bq, bl=bl, interpret=interpret)
+    return out[:Q, :L]
+
+
+@functools.partial(jax.jit, static_argnames=("length", "interpret"))
+def sax_lb(query_paa: jnp.ndarray, edges: jnp.ndarray, *, length: int,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """query_paa (Q, l), edges (L, l, 2) → (Q, L) iSAX MINDIST."""
+    l = edges.shape[1]
+    scale = jnp.sqrt(jnp.float32(length) / l)
+    return box_lb(query_paa * scale, edges[..., 0] * scale,
+                  edges[..., 1] * scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def eapca_lb(query_stats: jnp.ndarray, boxes: jnp.ndarray,
+             seg_len: jnp.ndarray, *,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """query_stats (Q, s, 2), boxes (L, s, 4), seg_len (s,) → (Q, L)."""
+    w = jnp.sqrt(seg_len.astype(jnp.float32))
+    q = jnp.concatenate([query_stats[..., 0] * w, query_stats[..., 1] * w], -1)
+    lo = jnp.concatenate([boxes[..., 0] * w, boxes[..., 2] * w], -1)
+    hi = jnp.concatenate([boxes[..., 1] * w, boxes[..., 3] * w], -1)
+    return box_lb(q, lo, hi, interpret=interpret)
+
+
+reference = ref.box_lb

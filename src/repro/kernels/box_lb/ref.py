@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the unified box lower-bound kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def box_lb(q: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """q (Q, d) vs boxes lo/hi (L, d) → (Q, L) sqrt of summed sq box dists.
+
+    Both the iSAX MINDIST and the DSTree EAPCA lower bound reduce to this
+    after pre-scaling the coordinates (see ops.sax_lb / ops.eapca_lb).
+    """
+    d = jnp.maximum(jnp.maximum(lo[None] - q[:, None], q[:, None] - hi[None]), 0.0)
+    d = jnp.where(jnp.isfinite(d), d, 0.0)   # ±inf edges ⇒ open box sides
+    return jnp.sqrt((d * d).sum(-1))

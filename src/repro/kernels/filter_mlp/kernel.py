@@ -1,0 +1,64 @@
+"""Stacked per-leaf MLP inference Pallas kernel.
+
+The paper runs one tiny MLP per visited leaf on a GPU, one call at a time.
+On TPU we stack all F filters' weights — w1 (F, m, h), b1 (F, h), w2 (F, h),
+b2 (F,) — and evaluate every (filter × query) pair in a single grouped-matmul
+kernel: grid (F, Q/bq); each step loads one filter's weights into VMEM and
+pushes a bq-query tile through the two layers on the MXU.
+
+VMEM per step at m = h = 256, bq = 128: w1 block 256 KiB + query tile 128 KiB
++ hidden 128 KiB — small enough that the filter-weight stream (one (m,h)
+block per grid step) stays double-buffered from HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(q_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)                       # (bq, m)
+    w1 = w1_ref[0].astype(jnp.float32)                       # (m, h)
+    hidden = jnp.maximum(
+        jax.lax.dot_general(q, w1, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + b1_ref[...].astype(jnp.float32),                   # (bq, h)
+        0.0,
+    )
+    w2 = w2_ref[...].astype(jnp.float32)                     # (1, h)
+    out = jax.lax.dot_general(hidden, w2, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (bq, 1)
+    o_ref[...] = out.T + b2_ref[...]                         # (1, bq)
+
+
+def filter_mlp_kernel(
+    queries: jnp.ndarray,          # (Q, m), Q multiple of bq
+    w1: jnp.ndarray,               # (F, m, h)
+    b1: jnp.ndarray,               # (F, h)
+    w2: jnp.ndarray,               # (F, h)
+    b2: jnp.ndarray,               # (F, 1)
+    *,
+    bq: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    Q, m = queries.shape
+    F, _, h = w1.shape
+    grid = (F, Q // bq)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, m), lambda f, q: (q, 0)),
+            pl.BlockSpec((1, m, h), lambda f, q: (f, 0, 0)),
+            pl.BlockSpec((1, h), lambda f, q: (f, 0)),
+            pl.BlockSpec((1, h), lambda f, q: (f, 0)),
+            pl.BlockSpec((1, 1), lambda f, q: (f, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq), lambda f, q: (f, q)),
+        out_shape=jax.ShapeDtypeStruct((F, Q), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(queries, w1, b1, w2, b2)

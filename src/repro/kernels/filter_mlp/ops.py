@@ -1,0 +1,58 @@
+"""Jitted wrapper for stacked filter-MLP inference."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def filter_predict(
+    w1: jnp.ndarray,               # (F, m, h)
+    b1: jnp.ndarray,               # (F, h)
+    w2: jnp.ndarray,               # (F, h)
+    b2: jnp.ndarray,               # (F,)
+    queries: jnp.ndarray,          # (Q, m)
+    *,
+    bq: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """All-filters × all-queries predictions → (F, Q) float32.
+
+    Zero-padding on m and h is exact: padded input dims meet zero w1 rows;
+    padded hidden dims have zero b1/w2, so relu(0)·0 contributes nothing.
+    Off-TPU the jnp oracle runs (see l2_scan.ops for the rationale).
+    """
+    if interpret is None:
+        if _use_interpret():
+            return ref.filter_predict(w1, b1, w2, b2, queries)
+        interpret = False
+    F, m, h = w1.shape
+    Q = queries.shape[0]
+    qp = _pad_to(_pad_to(queries, bq, 0), 128, 1)
+    w1p = _pad_to(_pad_to(w1, 128, 1), 128, 2)
+    b1p = _pad_to(b1, 128, 1)
+    w2p = _pad_to(w2, 128, 1)
+    out = kernel.filter_mlp_kernel(
+        qp, w1p, b1p, w2p, b2[:, None], bq=bq, interpret=interpret
+    )
+    return out[:, :Q]
+
+
+reference = ref.filter_predict

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for stacked per-leaf filter MLP inference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def filter_predict(w1: jnp.ndarray, b1: jnp.ndarray, w2: jnp.ndarray,
+                   b2: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """w1 (F,m,h), b1 (F,h), w2 (F,h), b2 (F,) × queries (Q,m) → (F,Q)."""
+
+    def one(w1_i, b1_i, w2_i, b2_i):
+        hidden = jax.nn.relu(
+            queries.astype(jnp.float32) @ w1_i.astype(jnp.float32) + b1_i
+        )
+        return hidden @ w2_i.astype(jnp.float32) + b2_i
+
+    return jax.vmap(one)(w1, b1, w2, b2)

@@ -1,0 +1,72 @@
+"""Tiled pairwise-L2 Pallas kernel (the LeaFi leaf-scan hot spot).
+
+MESSI scans leaves with SIMD CPU loops; on TPU the same computation is a
+matmul: ‖q−s‖² = ‖q‖² + ‖s‖² − 2·q·sᵀ, so the MXU does the heavy lifting.
+
+Grid = (Q/bq, B/bb, m/bk).  The k axis accumulates −2·q·sᵀ into the output
+block (index map independent of k); on the last k step the norms are fused in
+and the sqrt epilogue runs.  f32 accumulation throughout; inputs may be bf16.
+
+VMEM working set per step: q (bq·bk), s (bb·bk), out (bq·bb) — at the default
+128³ tiling ≈ 3 × 64 KiB, comfortably inside the ~16 MiB VMEM budget, leaving
+room for double buffering of the q/s streams from HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _l2_kernel(q_ref, s_ref, qn_ref, sn_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    o_ref[...] += -2.0 * jax.lax.dot_general(
+        q, s, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        d2 = o_ref[...] + qn_ref[...].T + sn_ref[...]
+        o_ref[...] = jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def pairwise_l2_kernel(
+    queries: jnp.ndarray,          # (Q, m) — Q, m multiples of the tile
+    series: jnp.ndarray,           # (B, m)
+    q_norms: jnp.ndarray,          # (1, Q) squared norms
+    s_norms: jnp.ndarray,          # (1, B)
+    *,
+    bq: int = 128,
+    bb: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    Q, m = queries.shape
+    B, _ = series.shape
+    nk = m // bk
+    grid = (Q // bq, B // bb, nk)
+    return pl.pallas_call(
+        functools.partial(_l2_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bb, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, bq), lambda i, j, k: (0, i)),
+            pl.BlockSpec((1, bb), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bq, bb), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, B), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(queries, series, q_norms, s_norms)

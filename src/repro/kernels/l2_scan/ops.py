@@ -1,0 +1,80 @@
+"""Jitted wrapper around the l2_scan kernel: padding, norms, masking, min."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+_INF = jnp.float32(jnp.inf)
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bb", "bk", "interpret"))
+def pairwise_l2(
+    queries: jnp.ndarray,
+    series: jnp.ndarray,
+    *,
+    bq: int = 128,
+    bb: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(Q, m) × (B, m) → (Q, B) euclidean distances via the Pallas kernel.
+
+    Off-TPU (interpret=None) the mathematically-identical jnp oracle runs
+    instead: Pallas interpret mode executes the kernel body per grid step in
+    Python — fine for validation (tests pass interpret=True explicitly),
+    hopeless for the benchmark workloads.
+    """
+    if interpret is None:
+        if _use_interpret():
+            return ref.pairwise_l2_matmul(queries, series)
+        interpret = False
+    Q, m = queries.shape
+    B, _ = series.shape
+    bk = min(bk, max(128, 1 << (m - 1).bit_length()))  # never exceed padded m
+    qp = _pad_to(_pad_to(queries, bq, 0), bk, 1)
+    sp = _pad_to(_pad_to(series, bb, 0), bk, 1)
+    qn = (qp.astype(jnp.float32) ** 2).sum(-1)[None, :]
+    sn = (sp.astype(jnp.float32) ** 2).sum(-1)[None, :]
+    out = kernel.pairwise_l2_kernel(
+        qp, sp, qn, sn, bq=bq, bb=bb, bk=bk, interpret=interpret
+    )
+    return out[:Q, :B]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_min_l2(
+    queries: jnp.ndarray,          # (Q, m)
+    slab: jnp.ndarray,             # (B, m) leaf slab (may contain padding)
+    valid: jnp.ndarray,            # (B,) bool
+    *,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query min distance over the valid rows of a leaf slab.
+
+    Returns (min_dist (Q,), argmin (Q,) — index into the slab).
+    """
+    d = pairwise_l2(queries, slab, interpret=interpret)
+    d = jnp.where(valid[None, :], d, _INF)
+    return d.min(axis=1), d.argmin(axis=1)
+
+
+# the oracle, re-exported for benchmarks that compare both paths
+reference = ref.pairwise_l2

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the l2_scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_l2(queries: jnp.ndarray, series: jnp.ndarray) -> jnp.ndarray:
+    """Exact pairwise euclidean distances, direct form.  (Q, m) × (B, m) → (Q, B)."""
+    diff = queries[:, None, :].astype(jnp.float32) - series[None, :, :].astype(jnp.float32)
+    return jnp.sqrt((diff * diff).sum(-1))
+
+
+def pairwise_l2_matmul(queries: jnp.ndarray, series: jnp.ndarray) -> jnp.ndarray:
+    """Matmul-decomposed form (what the kernel computes), for tolerance studies."""
+    q = queries.astype(jnp.float32)
+    s = series.astype(jnp.float32)
+    qn = (q * q).sum(-1)
+    sn = (s * s).sum(-1)
+    d2 = qn[:, None] + sn[None, :] - 2.0 * (q @ s.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes (16×16 single-pod, 2×16×16 two-pod) need 512
+placeholder host devices.  Nothing here allocates real arrays — parameters,
+optimizer state, batches and caches are ShapeDtypeStructs.
+
+Per cell this script records:
+  * compiled.memory_analysis()    — proves the cell fits HBM,
+  * compiled.cost_analysis()      — FLOPs / bytes for §Roofline,
+  * the parsed collective schedule (bytes by kind, while-loop aware),
+  * the three roofline terms and the dominant bottleneck.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..analysis import roofline as roofline_mod
+from ..models import sharding as shmod
+from ..models import transformer
+from ..models.config import resolve_attn_policy
+from ..optim import adamw_init
+from .mesh import make_production_mesh
+
+
+def _batch_spec(mesh, rules, shapes_dict):
+    """Shard the leading batch dim over dp where divisible."""
+    dp = rules.get("batch")
+    out = {}
+    for k, v in shapes_dict.items():
+        if dp is None:
+            out[k] = NamedSharding(mesh, P())
+            continue
+        axes = (dp,) if isinstance(dp, str) else tuple(dp)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        lead = v.shape[0] if v.shape else 0
+        spec = (dp,) + (None,) * (len(v.shape) - 1) \
+            if lead and lead % total == 0 else (None,) * len(v.shape)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def _cache_shardings(mesh, cfg, rules, cache_shapes):
+    specs = transformer.cache_specs(cfg, rules)
+    out = {}
+    for k, sds in cache_shapes.items():
+        sp = list(specs[k])
+        # divisibility guard per dim
+        for i, ax in enumerate(sp):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            if sds.shape[i] % total != 0:
+                sp[i] = None
+        out[k] = NamedSharding(mesh, P(*sp))
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               smoke: bool = False, overrides: dict | None = None):
+    """Build + lower + compile one cell; returns (compiled, meta)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    info = configs.input_specs(arch, shape_name, smoke=smoke,
+                               overrides=overrides)
+    cfg, shape = info["config"], info["shape"]
+    tp = mesh.shape["model"]
+    policy = resolve_attn_policy(cfg, tp)
+    mode = {"train": "train", "prefill": "prefill",
+            "decode": "decode"}[shape.kind]
+    rules = shmod.make_rules(mode, policy, mesh, cfg)
+    pspecs = shmod.param_specs(cfg, rules)
+    param_shapes = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    param_sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    meta = {"arch": arch, "shape": shape_name, "policy": policy,
+            "mesh": dict(mesh.shape), "n_devices": mesh.size,
+            "n_params": cfg.n_params, "n_active_params": cfg.n_active_params}
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, param_shapes)
+        opt_sh = {"m": param_sh, "v": param_sh,
+                  "step": NamedSharding(mesh, P())}
+        batch_sh = _batch_spec(mesh, rules, info["inputs"])
+        step = transformer.make_train_step(cfg)
+
+        def fn(params, opt, batch):
+            return step(params, opt, batch)
+
+        jitted = jax.jit(fn, in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+        with shmod.sharding_context(mesh, rules):
+            lowered = jitted.lower(param_shapes, opt_shapes, info["inputs"])
+    elif shape.kind == "prefill":
+        prefill = transformer.make_prefill_step(cfg, info["cache_len"])
+        batch_sh = _batch_spec(mesh, rules, info["inputs"])
+        jitted = jax.jit(prefill, in_shardings=(param_sh, batch_sh))
+        with shmod.sharding_context(mesh, rules):
+            lowered = jitted.lower(param_shapes, info["inputs"])
+    else:  # decode
+        decode = transformer.make_decode_step(cfg)
+        batch_sh = _batch_spec(mesh, rules, info["inputs"])
+        cache_sh = _cache_shardings(mesh, cfg, rules, info["cache"])
+        jitted = jax.jit(
+            decode,
+            in_shardings=(param_sh, cache_sh, batch_sh,
+                          NamedSharding(mesh, P())),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,))
+        with shmod.sharding_context(mesh, rules):
+            lowered = jitted.lower(param_shapes, info["cache"],
+                                   info["inputs"], info["pos"])
+
+    compiled = lowered.compile()
+    return compiled, cfg, shape, meta
+
+
+def run_leafi_serve(multi_pod: bool) -> dict:
+    """Dry-run the PAPER's own system at pod scale: the leaf-sharded LeaFi
+    search (core/distributed.py) lowered on the production mesh.
+
+    Sizing mirrors the paper's production setting: 25M series × len 256
+    (= the paper's datasets), ~16k leaves (MESSI-like), ~10k max leaf size,
+    one stacked MLP filter slot per leaf, 1024-query request batch.
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from ..core import distributed
+    n_shards = mesh.shape["model"]
+    m, h = 256, 256
+    leaves_per_shard = 1024
+    rows_per_shard = 25_000_000 // n_shards + 10_000
+    specs = distributed.search_input_specs(
+        n_shards, leaves_per_shard, rows_per_shard, m, h,
+        n_queries=1024, coord_dim=16)
+    fn, _, _ = distributed.build_search_fn(mesh, max_leaf=10_000)
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = fn.lower(*specs)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    terms = roofline_mod.roofline_from_compiled(
+        compiled, n_devices=mesh.size, hlo_text=hlo)
+    return {
+        "arch": "leafi-serve", "shape": "q1024_n25m",
+        "mesh": dict(mesh.shape), "status": "ok",
+        "compile_s": round(time.perf_counter() - t0, 1),
+        "memory": roofline_mod.memory_report(compiled),
+        "roofline": terms.as_dict(),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             smoke: bool = False, overrides: dict | None = None) -> dict:
+    t0 = time.perf_counter()
+    compiled, cfg, shape, meta = lower_cell(arch, shape_name, multi_pod,
+                                            smoke, overrides)
+    if overrides:
+        meta = dict(meta, overrides=overrides)
+    t_compile = time.perf_counter() - t0
+    hlo = compiled.as_text()
+    terms = roofline_mod.roofline_from_compiled(
+        compiled, n_devices=meta["n_devices"],
+        model_flops=roofline_mod.model_flops_per_step(cfg, shape),
+        hlo_text=hlo)
+    mem = roofline_mod.memory_report(compiled)
+    from ..analysis.hlo_collectives import hlo_stats
+    sched = hlo_stats(hlo, f32_as_bf16=True)
+    out = dict(meta)
+    out.update({
+        "status": "ok",
+        "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "roofline": terms.as_dict(),
+        "collective_schedule": {
+            "bytes_by_kind": sched.bytes_by_kind,
+            "count_by_kind": sched.count_by_kind,
+        },
+        "hlo_bytes": len(hlo),
+    })
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache variant (decode cells)")
+    ap.add_argument("--tag", default="", help="suffix for output files")
+    args = ap.parse_args()
+    overrides = {"kv_quant": True} if args.kv_quant else None
+
+    if args.arch == "leafi-serve":
+        os.makedirs(args.out, exist_ok=True)
+        for mp in {"single": [False], "multi": [True],
+                   "both": [False, True]}[args.mesh]:
+            tag = f"leafi_serve__{'pod2' if mp else 'pod1'}{args.tag}"
+            try:
+                rec = run_leafi_serve(mp)
+                print(f"OK   {tag} compile={rec['compile_s']}s "
+                      f"dominant={rec['roofline']['dominant']}")
+            except Exception as e:  # noqa: BLE001
+                rec = {"status": "error", "error": repr(e),
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"FAIL {tag}: {e}")
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+        return
+
+    archs = configs.ARCH_IDS if args.arch == "all" \
+        else [configs.PUBLIC_IDS.get(args.arch, args.arch)]
+    shapes = list(configs.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"SKIP {tag} (exists)")
+                    continue
+                if not configs.supports_shape(arch, shape):
+                    rec = {"arch": arch, "shape": shape, "status": "skipped",
+                           "reason": "full-attention arch at 524k context "
+                                     "(DESIGN.md §skips)"}
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"SKIP {tag} (inapplicable)")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mp, smoke=args.smoke,
+                                   overrides=overrides)
+                    dom = rec["roofline"]["dominant"]
+                    print(f"OK   {tag} compile={rec['compile_s']}s "
+                          f"dominant={dom} "
+                          f"frac={rec['roofline']['roofline_fraction']:.3f}")
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape, "status": "error",
+                           "multi_pod": mp, "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"FAIL {tag}: {e}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

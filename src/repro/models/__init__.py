@@ -1,0 +1,4 @@
+from .config import ArchConfig, MoEConfig                         # noqa: F401
+from .transformer import (TransformerLM, init_params,             # noqa: F401
+                          make_train_step, make_prefill_step,
+                          make_decode_step)

@@ -1,0 +1,122 @@
+"""GQA attention with policy-driven sharding and chunked online compute.
+
+One implementation serves every assigned arch:
+* GQA via local repeat of K/V to full heads (identity when kv == heads; a
+  per-shard-local broadcast under every sharding policy — see sharding.py).
+* Sliding windows (mixtral, hymba) and mixed global/local layers (hymba) via
+  a per-layer ``window`` scalar — a huge window ≡ full causal attention, so
+  the scan-over-layers stays homogeneous.
+* Long sequences never materialize (Sq × Sk): queries are processed in
+  chunks with full keys per chunk (the key dim is the sharded one under the
+  context-parallel policy, so per-device score blocks stay ~100 MB at 32k).
+* Decode uses a positions-stamped ring cache: slot = pos % cache_len, with a
+  per-slot position array driving validity/window masking — the same code
+  path covers full caches (cache_len = max_seq) and SWA ring caches
+  (cache_len = window), which is what makes mixtral's 500k-decode KV bounded.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, C, KV, dh)
+    v: jnp.ndarray          # (B, C, KV, dh)
+    kpos: jnp.ndarray       # (C,) int32 stored absolute positions; -1 empty
+
+
+def init_cache(batch: int, cache_len: int, n_kv: int, d_head: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, n_kv, d_head), dtype),
+        v=jnp.zeros((batch, cache_len, n_kv, d_head), dtype),
+        kpos=jnp.full((cache_len,), -1, jnp.int32),
+    )
+
+
+def _mask(qpos: jnp.ndarray, kpos: jnp.ndarray, window) -> jnp.ndarray:
+    """(Sq, Sk) validity: causal, in-window, slot non-empty."""
+    d = qpos[:, None] - kpos[None, :]
+    ok = (d >= 0) & (kpos[None, :] >= 0)
+    if window is not None:
+        ok &= d < window
+    return ok
+
+
+def _sdpa(q, k, v, qpos, kpos, window, scale):
+    """Dense scores path.  q (B,Sq,H,dh); k/v (B,Sk,H,dh)."""
+    s = jnp.einsum("bqhd,bskd->bhqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_mask(qpos, kpos, window)[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           qpos: jnp.ndarray, kpos: jnp.ndarray,
+           window: Optional[int] = None,
+           chunk_q: int = 512) -> jnp.ndarray:
+    """q (B, Sq, H, dh); k, v (B, Sk, KV, dh) → (B, Sq, H, dh).
+
+    qpos (Sq,), kpos (Sk,) absolute positions (kpos may contain −1 = empty).
+    """
+    from .sharding import maybe_constrain
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    q = maybe_constrain(q, "batch", None, "heads_act", None)
+    k = maybe_constrain(k, "batch", "kv_seq", "kv_heads", None)
+    v = maybe_constrain(v, "batch", "kv_seq", "kv_heads", None)
+    if H != KV:                       # GQA: local repeat (see module doc)
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+        k = maybe_constrain(k, "batch", "kv_seq", "heads_act", None)
+        v = maybe_constrain(v, "batch", "kv_seq", "heads_act", None)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    if Sq <= chunk_q:
+        return _sdpa(q, k, v, qpos, kpos, window, scale)
+
+    # q-chunked path: full keys per chunk; no (Sq × Sk) materialization.
+    nc = Sq // chunk_q
+    assert Sq % chunk_q == 0, "pad sequence to a chunk multiple"
+    qc = q.reshape(B, nc, chunk_q, H, dh).swapaxes(0, 1)     # (nc, B, cq, H, dh)
+    qpc = qpos.reshape(nc, chunk_q)
+
+    def one_chunk(_, xs):
+        qi, pi = xs
+        return None, _sdpa(qi, k, v, pi, kpos, window, scale)
+
+    _, out = jax.lax.scan(one_chunk, None, (qc, qpc))
+    return out.swapaxes(0, 1).reshape(B, Sq, H, dh)
+
+
+def cache_update(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 pos: jnp.ndarray) -> KVCache:
+    """Insert (B, T, KV, dh) new keys/values at absolute position ``pos``.
+
+    Ring semantics: slot = pos % cache_len.  For full caches (cache_len ≥
+    max positions) this is a plain append; for SWA ring caches old slots are
+    overwritten and the stamped positions keep masking correct.
+    """
+    C = cache.k.shape[1]
+    T = k_new.shape[1]
+    positions = pos + jnp.arange(T, dtype=jnp.int32)
+    slots = positions % C
+
+    if T == 1:
+        s = slots[0]
+        k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                         (0, s, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                         (0, s, 0, 0))
+        kpos = jax.lax.dynamic_update_slice(cache.kpos, positions, (s,))
+    else:
+        k = cache.k.at[:, slots].set(k_new.astype(cache.k.dtype))
+        v = cache.v.at[:, slots].set(v_new.astype(cache.v.dtype))
+        kpos = cache.kpos.at[slots].set(positions)
+    return KVCache(k=k, v=v, kpos=kpos)

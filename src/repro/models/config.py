@@ -1,0 +1,120 @@
+"""Architecture configuration for the LM-family substrate.
+
+One config type drives all 10 assigned architectures: dense GQA decoders,
+MoE, RWKV6 (attention-free), Hymba (parallel attention+SSM heads), and the
+audio/VLM backbones (whose modality frontends are stubs per the assignment —
+``input_mode`` selects how inputs enter the stack).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN width
+    n_shared: int = 0             # always-on shared experts (qwen2-moe)
+    d_shared: int = 0             # combined shared-expert width
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    layer_kind: str = "attn"          # attn | rwkv6 | hymba
+    mlp_kind: str = "swiglu"          # swiglu | gelu | rwkv_cm
+    qkv_bias: bool = False
+    pos_mode: str = "rope"            # rope | sinusoid | none
+    rope_theta: float = 1e6
+    partial_rotary: float = 1.0       # glm4 rotates half the head dim
+    attn_window: Optional[int] = None # sliding-window width (mixtral, hymba)
+    global_attn_layers: Tuple[int, ...] = ()   # hymba: full-attn layer ids
+    moe: Optional[MoEConfig] = None
+    input_mode: str = "tokens"        # tokens | embeddings (audio) | mixed (vlm)
+    patch_frac: float = 0.25          # mixed mode: fraction of seq from patches
+    ssm_state: int = 0                # hymba mamba state size
+    ssm_expand: int = 2               # mamba d_inner = expand × d_model
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # int8 KV cache (per-vector max-abs scales over d_head): §Perf iteration
+    # for decode cells whose bf16 cache exceeds HBM (qwen1.5-32b decode_32k)
+    kv_quant: bool = False
+    # sharding policy: auto | head_tp | head_tp_kv_rep | context_parallel
+    attn_policy: str = "auto"
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def n_params(self) -> int:
+        """Parameter count (exact for the layer stack as built here)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_layer = 0
+        if self.layer_kind in ("attn", "hymba"):
+            per_layer += d * self.d_attn + 2 * d * self.n_kv_heads * self.d_head
+            per_layer += self.d_attn * d
+            if self.qkv_bias:
+                per_layer += self.d_attn + 2 * self.n_kv_heads * self.d_head
+        if self.layer_kind == "rwkv6":
+            dk = d  # r/k/w dims
+            per_layer += 4 * d * d + d * d   # r,k,v,g,o projections
+            per_layer += 6 * d * 32 * 2       # ddlerp/decay loras (approx)
+        if self.layer_kind == "hymba":
+            di = self.ssm_expand * d
+            per_layer += d * 2 * di + di * d + di * 4  # in/out proj + conv
+            per_layer += di * (self.ssm_state * 2 + 2)  # B,C,dt,A heads
+        if self.moe is not None:
+            per_layer += d * self.moe.n_experts            # router
+            per_layer += self.moe.n_experts * 3 * d * self.moe.d_expert
+            if self.moe.d_shared:
+                per_layer += 3 * d * self.moe.d_shared + d
+        elif self.mlp_kind == "swiglu":
+            per_layer += 3 * d * f
+        elif self.mlp_kind == "rwkv_cm":
+            per_layer += d * f + f * d + d * d
+        else:  # gelu
+            per_layer += 2 * d * f
+        per_layer += 2 * d  # norms
+        embed = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed-in experts)."""
+        if self.moe is None:
+            return self.n_params
+        full = self.n_params
+        inactive = self.n_layers * (self.moe.n_experts - self.moe.top_k) \
+            * 3 * self.d_model * self.moe.d_expert
+        return full - inactive
+
+
+def resolve_attn_policy(cfg: ArchConfig, tp: int) -> str:
+    """Pick the attention TP policy for a given model-axis width.
+
+    jit boundaries require divisible shardings (verified empirically), so:
+    * kv and q heads divide tp      → classic Megatron head sharding;
+    * only q heads divide tp        → shard q heads, replicate kv (GQA norm);
+    * neither (40H, 25H archs)      → context parallelism: shard the *key*
+      sequence dim; softmax reductions over it lower to psum (split-KV).
+    """
+    if cfg.attn_policy != "auto":
+        return cfg.attn_policy
+    if cfg.n_kv_heads % tp == 0 and cfg.n_heads % tp == 0:
+        return "head_tp"
+    if cfg.n_heads % tp == 0:
+        return "head_tp_kv_rep"
+    return "context_parallel"

@@ -1,0 +1,64 @@
+"""Shared layer primitives: norms, rotary embeddings, MLP variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt((x * x).mean(-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_frequencies(d_rot: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               partial: float = 1.0) -> jnp.ndarray:
+    """x (B, S, H, dh); positions (B, S) or (S,).  Rotates the first
+    ``partial``·dh dims (glm4 uses partial=0.5)."""
+    dh = x.shape[-1]
+    d_rot = int(dh * partial)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    freqs = rope_frequencies(d_rot, theta)                   # (d_rot/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :d_rot].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    rot = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    rot = rot.reshape(x.shape[:-1] + (d_rot,)).astype(x.dtype)
+    return jnp.concatenate([rot, x[..., d_rot:]], axis=-1)
+
+
+def sinusoid_positions(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Classic sinusoidal embeddings (musicgen backbone's positional mode)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def swiglu(x, w_in, w_gate, w_out):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_in)
+    return h @ w_out
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu((x @ w_in + b_in), approximate=True)
+    return h @ w_out + b_out
+
+
+def rwkv_channel_mix(x, x_prev, mix, w_in, w_out, w_recv):
+    """RWKV6 channel mix: token-shift lerp, squared-relu FFN, receptance gate."""
+    xk = x + (x_prev - x) * mix[0]
+    xr = x + (x_prev - x) * mix[1]
+    k = jnp.square(jax.nn.relu(xk @ w_in))
+    return jax.nn.sigmoid(xr @ w_recv) * (k @ w_out)

@@ -1,0 +1,160 @@
+"""Chunked linear attention with data-dependent decay — shared core.
+
+Both assigned recurrent families reduce to the affine state recurrence
+
+    S_t = diag(exp(ld_t)) · S_{t−1} + k_tᵀ v_t          S: (dk, dv)
+    o_t = q_t · S_{t−1} (+ (q_t·u·k_t) v_t)   [RWKV6: pre-state + bonus]
+    o_t = q_t · S_t                           [mamba/SSD: post-state]
+
+with ld_t ≤ 0 the per-step log-decay: per-channel (dk,) for RWKV6's
+data-dependent decay, a per-head scalar for the SSD-form SSM in Hymba
+(signalled by a trailing log_decay dim of 1).
+
+TPU adaptation + §Perf iteration 1 (see EXPERIMENTS.md):
+* scalar decay  → the intra-chunk interaction is (q@kᵀ) ⊙ exp(ref_t − cum_s):
+  one (T,T) decay matrix per head, pure MXU work, exact and overflow-free
+  (exponents ≤ 0 on the causal mask).
+* per-channel decay → stable factorized matmul: shift both factors by the
+  per-channel chunk midpoint c = (cum_0 + cum_T)/2, so each side's exponent
+  is bounded by half the chunk's decay range; exponents are clamped at ±80
+  (f32-safe), which only perturbs coefficients whose true value is ≤ e⁻⁸⁰ —
+  numerically zero contributions.  This removes the baseline's (T, T, dk)
+  materialization (the dominant HBM-traffic term in the rwkv6/hymba train
+  cells: 204 s → see §Perf).
+* the chunk body is rematerialized (jax.checkpoint): the chunk scan saves
+  only the (dk × dv) state carries for backward instead of every
+  intermediate, which removed the hymba train cell's 52 GB/device residual
+  blow-up.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_CLAMP = 80.0
+
+
+def _chunk_body(q, k, v, ld, state, bonus, include_current):
+    """One chunk, one (batch, head).
+
+    q, k (T, dk); v (T, dv); ld (T, dk) or (T, 1) [scalar decay]; state
+    (dk, dv)."""
+    T = q.shape[0]
+    scalar_decay = ld.shape[-1] == 1
+    cum = jnp.cumsum(ld, axis=0)                     # (T, dk|1) ≤ 0, decreasing
+    cum_prev = cum - ld
+    ref = cum if include_current else cum_prev        # decay reference at t
+
+    # state (cross-chunk) contribution: o1_t = (q_t ⊙ exp(ref_t)) · S
+    o1 = (q * jnp.exp(ref)) @ state                   # (T, dv)
+
+    # intra-chunk scores
+    tri = jnp.tril(jnp.ones((T, T), bool), 0 if include_current else -1)
+    if scalar_decay:
+        # exact: exponent ≤ 0 everywhere on the mask
+        D = jnp.exp(ref - cum.T)                      # (T, T)
+        A = (q @ k.T) * D
+    else:
+        c = 0.5 * (cum[0] + cum[-1])                  # (dk,) chunk midpoint
+        qf = q * jnp.exp(jnp.clip(ref - c, -_CLAMP, _CLAMP))
+        kf = k * jnp.exp(jnp.clip(c - cum, -_CLAMP, _CLAMP))
+        A = qf @ kf.T
+    A = jnp.where(tri, A, 0.0)
+    o2 = A @ v
+
+    o = o1 + o2
+    if bonus is not None:                             # RWKV6 current-token u
+        o = o + ((q * bonus * k).sum(-1, keepdims=True)) * v
+
+    # carry: S' = diag(exp(cum_T)) S + Σ_s (k_s ⊙ exp(cum_T − cum_s))ᵀ v_s
+    decay_tail = jnp.exp(cum[-1][None, :] - cum)      # (T, dk|1) ≤ 1
+    state_scale = jnp.exp(cum[-1])
+    if scalar_decay:
+        state_scale = jnp.broadcast_to(state_scale, (q.shape[1],))
+    new_state = state_scale[:, None] * state + (k * decay_tail).T @ v
+    return o, new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "include_current"))
+def chunked_linear_attention(
+    q: jnp.ndarray,            # (B, S, H, dk)
+    k: jnp.ndarray,            # (B, S, H, dk)
+    v: jnp.ndarray,            # (B, S, H, dv)
+    log_decay: jnp.ndarray,    # (B, S, H, dk) or (B, S, H, 1) — scalar decay
+    state: Optional[jnp.ndarray] = None,     # (B, H, dk, dv)
+    bonus: Optional[jnp.ndarray] = None,     # (H, dk) — RWKV6 u
+    include_current: bool = False,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (o (B, S, H, dv), final_state (B, H, dk, dv))."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), jnp.float32)
+    pad = (-S) % chunk
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, padw) for a in (q, k, v))
+        log_decay = jnp.pad(log_decay, padw)
+    nc = q.shape[1] // chunk
+
+    def to_chunks(x):                                  # (nc, B, H, T, d)
+        return x.reshape(B, nc, chunk, H, -1).transpose(1, 0, 3, 2, 4)
+
+    qc, kc, vc, ldc = map(to_chunks, (q, k, v, log_decay))
+
+    body = _chunk_body
+    if bonus is not None:
+        inner = jax.vmap(lambda qq, kk, vv, ll, ss, bb: body(
+            qq, kk, vv, ll, ss, bb, include_current),
+            in_axes=(0, 0, 0, 0, 0, 0))                # over H
+        outer = jax.vmap(inner, in_axes=(0, 0, 0, 0, 0, None))  # over B
+    else:
+        inner = jax.vmap(lambda qq, kk, vv, ll, ss: body(
+            qq, kk, vv, ll, ss, None, include_current))
+        outer = jax.vmap(inner)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        st = carry
+        qi, ki, vi, li = xs
+        if bonus is not None:
+            o, st = outer(qi.astype(jnp.float32), ki.astype(jnp.float32),
+                          vi.astype(jnp.float32), li, st, bonus)
+        else:
+            o, st = outer(qi.astype(jnp.float32), ki.astype(jnp.float32),
+                          vi.astype(jnp.float32), li, st)
+        return st, o
+
+    state, o = jax.lax.scan(step, state, (qc, kc, vc, ldc))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, nc * chunk, H, dv)
+    return o[:, :S].astype(v.dtype), state
+
+
+def linear_attention_step(
+    q: jnp.ndarray,            # (B, H, dk)
+    k: jnp.ndarray,
+    v: jnp.ndarray,            # (B, H, dv)
+    log_decay: jnp.ndarray,    # (B, H, dk) or (B, H, 1)
+    state: jnp.ndarray,        # (B, H, dk, dv)
+    bonus: Optional[jnp.ndarray] = None,
+    include_current: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token decode: direct recurrence (no chunking needed)."""
+    q, k, v = (a.astype(jnp.float32) for a in (q, k, v))
+    kv = k[..., :, None] * v[..., None, :]             # (B, H, dk, dv)
+    decay = jnp.exp(log_decay)
+    if log_decay.shape[-1] == 1:
+        decay = jnp.broadcast_to(decay, k.shape)
+    if include_current:
+        new_state = decay[..., None] * state + kv
+        o = jnp.einsum("bhk,bhkv->bhv", q, new_state)
+    else:
+        o = jnp.einsum("bhk,bhkv->bhv", q, state)
+        if bonus is not None:
+            o = o + (q * bonus[None] * k).sum(-1, keepdims=True) * v
+        new_state = decay[..., None] * state + kv
+    return o.astype(v.dtype), new_state

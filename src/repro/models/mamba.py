@@ -1,0 +1,112 @@
+"""Selective SSM branch for Hymba's parallel attention+mamba heads.
+
+Implemented in the SSD (scalar-per-head decay) form so the recurrence runs
+through the shared chunked linear-attention core — the same TPU adaptation
+argument as RWKV6 (see linear_attention.py).  DESIGN.md §HW-adaptation notes
+this deviation from elementwise-A mamba-1: Hymba's contribution (parallel
+hybrid heads) is preserved; the SSM parameterization is the TPU-chunkable
+one.
+
+Structure: in_proj → (x, z); causal depthwise conv (k=4) + silu on x;
+B, C projections (shared across heads, mamba-1 style); per-head Δ via
+softplus; y = SSM(x̃=Δ·x, B, C, decay=exp(Δ·A)) ⊙ silu(z); out_proj with
+skip D·x.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import linear_attention as la
+
+N_HEADS = 32        # §Perf iter 1: 32 heads divide the 16-wide TP axis
+CONV_K = 4          # (head_dim = d_inner / 32; was 64-wide heads ⇒ 50 ∤ 16)
+
+
+def init_layer(key: jax.Array, d_model: int, d_state: int, expand: int = 2,
+               dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    D = d_model
+    di = expand * D
+    nh = N_HEADS
+    s = 1.0 / jnp.sqrt(D)
+    return {
+        "ssm_in": (jax.random.normal(ks[0], (D, 2, di)) * s).astype(dtype),
+        "ssm_conv": (jax.random.normal(ks[1], (CONV_K, di)) * 0.5).astype(dtype),
+        "ssm_B": (jax.random.normal(ks[2], (di, d_state)) / jnp.sqrt(di)).astype(dtype),
+        "ssm_C": (jax.random.normal(ks[3], (di, d_state)) / jnp.sqrt(di)).astype(dtype),
+        "ssm_dt": (jax.random.normal(ks[4], (di,)) * 0.01).astype(jnp.float32),
+        "ssm_A": jnp.zeros((nh,), jnp.float32),          # A = −exp(ssm_A)
+        "ssm_D": jnp.ones((di,), jnp.float32),
+        "ssm_out": (jax.random.normal(ks[5], (di, D)) * s).astype(dtype),
+        "ssm_norm": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 conv_state: jnp.ndarray | None = None):
+    """Depthwise causal conv1d.  x (B, S, di); w (K, di).
+
+    Returns (y, new_conv_state (B, K−1, di))."""
+    B, S, di = x.shape
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)        # (B, S+K-1, di)
+    y = sum(xp[:, i:i + S] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def _project(params, x, conv_state):
+    xz = jnp.einsum("bsd,dti->bsti", x, params["ssm_in"])
+    x1, z = xz[..., 0, :], xz[..., 1, :]
+    x1, conv_state = _causal_conv(x1, params["ssm_conv"], conv_state)
+    x1 = jax.nn.silu(x1)
+    B, S, di = x1.shape
+    nh = N_HEADS
+    dt = jax.nn.softplus(
+        (x1.astype(jnp.float32) * params["ssm_dt"])
+        .reshape(B, S, nh, di // nh).mean(-1))            # (B, S, nh)
+    log_decay = -jnp.exp(params["ssm_A"])[None, None] * dt  # ≤ 0
+    Bq = x1 @ params["ssm_B"]                             # (B, S, N) keys
+    Cq = x1 @ params["ssm_C"]                             # (B, S, N) queries
+    xh = x1.reshape(B, S, nh, di // nh) * dt[..., None]   # values (Δ·x)
+    return x1, z, Bq, Cq, xh, log_decay, conv_state
+
+
+def ssm_branch(params: dict, x: jnp.ndarray,
+               ssm_state: jnp.ndarray | None = None,
+               conv_state: jnp.ndarray | None = None,
+               chunk: int = 128):
+    """x (B, S, D) → (out (B, S, D), ssm_state, conv_state)."""
+    B, S, D = x.shape
+    x1, z, Bq, Cq, xh, log_decay, conv_state = _project(params, x, conv_state)
+    di = x1.shape[-1]
+    nh = N_HEADS
+    N = Bq.shape[-1]
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, nh, N, di // nh), jnp.float32)
+    # linear attention: q=C, k=B (broadcast over heads), v=Δ·x; the decay is
+    # a per-head SCALAR (trailing dim 1 → the exact (T,T) fast path)
+    q = jnp.broadcast_to(Cq[:, :, None, :], (B, S, nh, N))
+    k = jnp.broadcast_to(Bq[:, :, None, :], (B, S, nh, N))
+    ld = log_decay[..., None]                             # (B, S, nh, 1)
+    y, ssm_state = la.chunked_linear_attention(
+        q, k, xh, ld, ssm_state, include_current=True, chunk=chunk)
+    y = y.reshape(B, S, di) + params["ssm_D"] * x1        # skip
+    # branch norm + gate
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + 1e-5)
+    y = (yf * params["ssm_norm"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["ssm_out"], ssm_state, conv_state
+
+
+def ssm_branch_step(params: dict, x: jnp.ndarray, ssm_state: jnp.ndarray,
+                    conv_state: jnp.ndarray):
+    """Decode: x (B, D) single token."""
+    out, ssm_state, conv_state = ssm_branch(
+        params, x[:, None, :], ssm_state, conv_state, chunk=1)
+    return out[:, 0], ssm_state, conv_state

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded scatter dispatch.
+
+The dispatch is scatter/gather-based (megablocks-style) rather than the
+GShard one-hot-einsum form: with 1M tokens × 60 experts the (tokens, E, C)
+dispatch tensor is infeasible, while the (E, C, D) expert buffer shards
+cleanly (tokens over data, expert FFN width over model).  Tokens beyond an
+expert's capacity fall through on the residual path (standard
+capacity-factor semantics); an auxiliary load-balancing loss keeps the
+router honest.
+
+Sharding policies: default TP-inside-experts (d_expert over `model`; valid
+for every assigned MoE since both 8 and 60 experts don't divide 16); EP is a
+config flag used in the §Perf hillclimb (experts padded to a multiple of the
+mesh axis there).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MoEConfig
+
+
+def init_layer(key: jax.Array, d_model: int, moe: MoEConfig,
+               dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 5)
+    E, F = moe.n_experts, moe.d_expert
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_out = 1.0 / jnp.sqrt(F)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, E)) * 0.02).astype(jnp.float32),
+        "we_in": (jax.random.normal(ks[1], (E, d_model, F)) * s_in).astype(dtype),
+        "we_gate": (jax.random.normal(ks[2], (E, d_model, F)) * s_in).astype(dtype),
+        "we_out": (jax.random.normal(ks[3], (E, F, d_model)) * s_out).astype(dtype),
+    }
+    if moe.d_shared:
+        ks2 = jax.random.split(ks[4], 4)
+        p.update({
+            "ws_in": (jax.random.normal(ks2[0], (d_model, moe.d_shared)) * s_in).astype(dtype),
+            "ws_gate": (jax.random.normal(ks2[1], (d_model, moe.d_shared)) * s_in).astype(dtype),
+            "ws_out": (jax.random.normal(ks2[2], (moe.d_shared, d_model))
+                       / jnp.sqrt(moe.d_shared)).astype(dtype),
+            "shared_gate": (jax.random.normal(ks2[3], (d_model,)) * 0.02).astype(jnp.float32),
+        })
+    return p
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, moe: MoEConfig,
+            no_drop: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) → (out (B, S, D), aux_loss scalar).
+
+    Dispatch is *grouped per batch row* (§Perf iteration 1: the baseline's
+    single global position-in-expert cumsum serialized across data shards —
+    2.6 TB of all-reduce per mixtral prefill step; ranking within each
+    batch-sharded row keeps every dispatch op shard-local, leaving only the
+    expert-TP psums on the wire).  Capacity is likewise per row:
+    C = cf·S·K/E slots per expert per sequence.
+
+    ``no_drop=True`` (decode) sets capacity = all tokens: serving never drops
+    a token, matching production MoE inference semantics."""
+    B, S, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+
+    logits = x.astype(jnp.float32) @ params["router"]          # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, K)                  # (B, S, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style), all row-local reductions
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = jnp.zeros((B, E), jnp.float32)
+    ce = ce.at[jnp.arange(B)[:, None, None],
+               eidx].add(1.0).mean(0) / (S * K)
+    aux = E * (me * ce).sum()
+
+    # per-row capacity and position-in-expert (rank within the row)
+    C = S * K if no_drop else (int(moe.capacity_factor * S * K / E) or 1)
+    flat_e = eidx.reshape(B, S * K)                            # (B, S*K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (B, S*K, E)
+    pos = (jnp.cumsum(onehot, axis=1) - 1)[
+        jnp.arange(B)[:, None], jnp.arange(S * K)[None, :], flat_e]
+    keep = pos < C
+    pos_c = jnp.minimum(pos, C - 1)
+
+    # dispatch: (B, E, C, D) buffer — batched scatter, row-local.  The
+    # explicit batch-sharding constraints matter: without them GSPMD
+    # replicates the scatter output and reconciles shards with full-buffer
+    # all-reduces (2.4 TB/step on mixtral prefill — §Perf iteration 2).
+    from .sharding import maybe_constrain
+    vals = jnp.repeat(x.reshape(B, S, 1, D), K, axis=2).reshape(B, S * K, D)
+    vals = vals * keep[..., None].astype(x.dtype)
+    buf = jnp.zeros((B, E, C, D), x.dtype).at[
+        jnp.arange(B)[:, None], flat_e, pos_c].add(vals)
+    buf = maybe_constrain(buf, "batch", None, None, None)
+
+    # expert compute (TP on F via sharding rules)
+    h = jnp.einsum("becd,edf->becf", buf, params["we_in"])
+    g = jnp.einsum("becd,edf->becf", buf, params["we_gate"])
+    h = maybe_constrain(jax.nn.silu(g) * h, "batch", None, None, "mlp")
+    out_buf = jnp.einsum("becf,efd->becd", h, params["we_out"])
+    out_buf = maybe_constrain(out_buf, "batch", None, None, None)
+
+    # combine (row-local gather)
+    gathered = out_buf[jnp.arange(B)[:, None], flat_e, pos_c] \
+        * keep[..., None]                                       # (B, S*K, D)
+    weighted = gathered * gate_vals.reshape(B, S * K, 1).astype(x.dtype)
+    out = weighted.reshape(B, S, K, D).sum(axis=2)
+
+    if moe.d_shared:
+        sh = jax.nn.silu(x @ params["ws_gate"]) * (x @ params["ws_in"])
+        sh = sh @ params["ws_out"]
+        sgate = jax.nn.sigmoid(
+            x.astype(jnp.float32) @ params["shared_gate"][:, None])
+        out = out + sh * sgate.astype(x.dtype)
+
+    return out, aux

@@ -1,0 +1,106 @@
+"""RWKV6 "Finch" time-mix: data-dependent token shift and decay.
+
+Faithful structure (arXiv:2404.05892): ddlerp token-shift mixing with a
+low-rank data-dependent component for the five mix targets (w, k, v, r, g);
+per-channel data-dependent decay w_t = exp(−exp(base + LoRA(x_w))); bonus u
+for the current token; per-head group norm on the attention output; silu(g)
+output gate.  The WKV recurrence runs through the shared chunked
+linear-attention core (state (dk × dv) per head) — see linear_attention.py
+for why chunking is the TPU-native form.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import linear_attention as la
+
+HEAD_DIM = 64
+MIX_TARGETS = 5          # w, k, v, r, g
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def init_layer(key: jax.Array, d_model: int, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 8)
+    D = d_model
+    H = D // HEAD_DIM
+    s = 1.0 / jnp.sqrt(D)
+    return {
+        # row 0 is the pre-mix (maa_x); rows 1.. are per-target bases
+        "mix_base": jnp.zeros((1 + MIX_TARGETS, D), dtype),
+        "mix_lora_a": (jax.random.normal(ks[0], (D, MIX_TARGETS, LORA_MIX)) * 0.01).astype(dtype),
+        "mix_lora_b": (jax.random.normal(ks[1], (MIX_TARGETS, LORA_MIX, D)) * 0.01).astype(dtype),
+        "wr": (jax.random.normal(ks[2], (D, D)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[3], (D, D)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[4], (D, D)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[5], (D, D)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[6], (D, D)) * s).astype(dtype),
+        "decay_base": jnp.full((D,), -1.0, dtype),       # soft init: slowish
+        "decay_lora_a": (jax.random.normal(ks[7], (D, LORA_DECAY)) * 0.01).astype(dtype),
+        "decay_lora_b": jnp.zeros((LORA_DECAY, D), dtype),
+        "bonus": jnp.zeros((H, HEAD_DIM), jnp.float32),
+        "ln_x": jnp.ones((D,), jnp.float32),
+    }
+
+
+def _ddlerp(x, x_shift, p):
+    """Data-dependent lerp: five mixed views of (x, shifted x)."""
+    dx = x_shift - x                                    # (B, S, D)
+    xxx = x + dx * p["mix_base"][0]
+    lora = jnp.einsum("bsd,dtr->bstr", jnp.tanh(xxx), p["mix_lora_a"])
+    lora = jnp.einsum("bstr,trd->tbsd", lora, p["mix_lora_b"])
+    mixes = p["mix_base"][1:][:, None, None, :] + lora   # (5, B, S, D)
+    return x[None] + dx[None] * mixes                    # (5, B, S, D)
+
+
+def _shift(x, x_prev):
+    """Token shift: x_{t-1}, with x_prev carrying the cross-call state."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def time_mix(params: dict, x: jnp.ndarray, x_prev: jnp.ndarray,
+             state: jnp.ndarray, chunk: int = 32
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D), x_prev (B, D), state (B, H, dk, dv) → (out, x_last, state)."""
+    B, S, D = x.shape
+    H = D // HEAD_DIM
+    xs = _shift(x, x_prev)
+    xw, xk, xv, xr, xg = _ddlerp(x, xs, params)
+
+    r = xr @ params["wr"]
+    k = xk @ params["wk"]
+    v = xv @ params["wv"]
+    g = jax.nn.silu(xg @ params["wg"])
+    # data-dependent decay (per channel): ld = −exp(w) ≤ 0
+    w = params["decay_base"].astype(jnp.float32) + \
+        jnp.tanh(xw.astype(jnp.float32) @ params["decay_lora_a"].astype(jnp.float32)) \
+        @ params["decay_lora_b"].astype(jnp.float32)
+    log_decay = -jnp.exp(jnp.clip(w, -8.0, 4.0))
+
+    def heads(t):
+        return t.reshape(B, S, H, HEAD_DIM)
+
+    o, state = la.chunked_linear_attention(
+        heads(r), heads(k), heads(v), heads(log_decay), state,
+        bonus=params["bonus"], include_current=False, chunk=chunk)
+    o = o.reshape(B, S, D)
+    # per-head group norm (ln_x)
+    oh = o.reshape(B, S, H, HEAD_DIM).astype(jnp.float32)
+    oh = oh * jax.lax.rsqrt((oh * oh).mean(-1, keepdims=True) + 1e-5)
+    o = (oh.reshape(B, S, D) * params["ln_x"]).astype(x.dtype)
+    out = (o * g) @ params["wo"]
+    return out, x[:, -1], state
+
+
+def time_mix_step(params: dict, x: jnp.ndarray, x_prev: jnp.ndarray,
+                  state: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Decode: x (B, D) one token."""
+    B, D = x.shape
+    H = D // HEAD_DIM
+    out, x_last, state = time_mix(params, x[:, None, :], x_prev, state,
+                                  chunk=1)
+    return out[:, 0], x_last, state

@@ -1,0 +1,254 @@
+"""Logical-axis sharding rules → PartitionSpecs.
+
+Parameters and activations are annotated with *logical* axis names; a rule
+table per execution mode maps them to mesh axes.  This is the MaxText-style
+indirection that lets one model definition serve:
+
+* ``train``  — TP over `model` + ZeRO-3/FSDP over (`pod`, `data`): every
+  weight is additionally sharded on its non-TP dim; XLA inserts the per-layer
+  all-gathers (prefetched across the scan) and reduce-scatters the grads.
+* ``serve``  — TP over `model` only; weights replicated across (`pod`,
+  `data`) which carry the request batch.
+
+Attention-policy-specific axes (`heads`, `kv_heads`, `kv_seq`) resolve
+according to the arch's policy (see config.resolve_attn_policy).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, object]
+
+
+def make_rules(mode: str, policy: str, mesh: Mesh,
+               cfg=None) -> Rules:
+    """mode ∈ {train, prefill, decode}.
+
+    train:   TP over `model` + FSDP over (`pod`,`data`) on weights.
+    prefill: TP only (weights replicated over dp, which carries requests).
+    decode:  like prefill, but kv-replicated GQA archs switch to split-KV —
+             the cache sequence dim shards over `model` (softmax reductions
+             over it lower to psum), since head-sharding a single query row
+             buys nothing.
+    """
+    assert mode in ("train", "prefill", "decode"), mode
+    axes = mesh.axis_names
+    fsdp = tuple(a for a in ("pod", "data") if a in axes) or None
+    dp = fsdp
+    tp = "model" if "model" in axes else None
+
+    def div(n: int, axis) -> Optional[str]:
+        """Use `axis` only if it divides n (jit rejects uneven shardings)."""
+        if axis is None or n is None:
+            return None
+        size = mesh.shape[axis] if isinstance(axis, str) else 1
+        return axis if n % size == 0 else None
+
+    if policy == "head_tp":
+        heads_ax, kv_ax, kvseq_ax = tp, tp, None
+    elif policy == "head_tp_kv_rep":
+        if mode == "decode":
+            heads_ax, kv_ax, kvseq_ax = None, None, tp
+        else:
+            heads_ax, kv_ax, kvseq_ax = tp, None, None
+    else:  # context_parallel
+        heads_ax, kv_ax, kvseq_ax = None, None, tp
+
+    rules: Rules = {
+        # activations
+        "batch": dp,
+        "seq": None,
+        # Megatron-SP-style: shard the residual-stream carry over `model` in
+        # training so the per-layer saved activations (scan carries) divide
+        # by TP width; maybe_constrain drops it where S doesn't divide.
+        "seq_act": tp if mode == "train" else None,
+        "kv_seq": kvseq_ax,          # decode cache / CP key dim
+        "heads_act": heads_ax,
+        "embed_act": None,
+        # params
+        "vocab": tp,
+        "embed": fsdp if mode == "train" else None,
+        "mlp": tp,
+        "heads": heads_ax,
+        "kv_heads": kv_ax,
+        "head_dim": None,
+        "expert": None,              # experts are TP-inside by default
+        "rwkv_heads": tp,
+        "ssm_inner": tp,
+        "dmodel_tp": tp,
+        "norm": None,
+        "lora": None,
+    }
+    if cfg is not None:
+        # guard every param axis for divisibility at this mesh
+        rules["vocab"] = div(cfg.vocab, rules["vocab"])
+        rules["mlp"] = div(cfg.d_ff, rules["mlp"])
+        rules["heads"] = div(cfg.n_heads, rules["heads"])
+        rules["kv_heads"] = div(cfg.n_kv_heads, rules["kv_heads"])
+        rules["heads_act"] = div(cfg.n_heads, rules["heads_act"])
+        rules["dmodel_tp"] = div(cfg.d_model, rules["dmodel_tp"])
+        if cfg.layer_kind == "rwkv6":
+            rules["rwkv_heads"] = div(cfg.d_model // 64, rules["rwkv_heads"])
+        if cfg.ssm_state:
+            rules["ssm_inner"] = div(cfg.ssm_expand * cfg.d_model,
+                                     rules["ssm_inner"])
+        if cfg.moe is not None:
+            rules["mlp"] = div(cfg.moe.d_expert, tp)
+        if fsdp is not None and mode == "train":
+            import numpy as _np
+            fs = int(_np.prod([mesh.shape[a] for a in fsdp]))
+            rules["embed"] = fsdp if cfg.d_model % fs == 0 else None
+    if mode != "train":
+        rules["embed"] = None          # serve: weights replicated over dp
+    return rules
+
+
+def spec(rules: Rules, *logical: Optional[str]) -> P:
+    return P(*(rules.get(ax) if ax else None for ax in logical))
+
+
+def named(mesh: Mesh, rules: Rules, *logical) -> NamedSharding:
+    return NamedSharding(mesh, spec(rules, *logical))
+
+
+def constrain(x, mesh: Mesh, rules: Rules, *logical):
+    """with_sharding_constraint via logical names (no-op without mesh ctx)."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(rules, *logical)))
+
+
+# ---------------------------------------------------------------------------
+# sharding context: lets model code anchor GSPMD without threading mesh/rules
+# through every function signature.  Outside the context (CPU smoke tests)
+# maybe_constrain is the identity.
+# ---------------------------------------------------------------------------
+
+import contextlib as _contextlib
+import threading as _threading
+
+_CTX = _threading.local()
+
+
+@_contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Rules):
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def maybe_constrain(x, *logical):
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    # drop constraints that don't divide the actual dim
+    resolved = []
+    for dim, ax in zip(x.shape, logical):
+        mesh_ax = rules.get(ax) if ax else None
+        if mesh_ax is not None:
+            axes = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            if dim % total != 0:
+                mesh_ax = None
+        resolved.append(mesh_ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+# ---------------------------------------------------------------------------
+# parameter spec trees
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg, rules: Rules) -> dict:
+    """Logical→mesh PartitionSpec pytree matching init_params' structure."""
+    s = lambda *ax: spec(rules, *ax)                    # noqa: E731
+    layer: dict = {"ln1": s("norm"), "ln2": s("norm")}
+    if cfg.layer_kind in ("attn", "hymba"):
+        layer.update({
+            "wq": s("embed", "heads", "head_dim"),
+            "wk": s("embed", "kv_heads", "head_dim"),
+            "wv": s("embed", "kv_heads", "head_dim"),
+            "wo": s("heads", "head_dim", "embed"),
+        })
+        if cfg.qkv_bias:
+            layer.update({"bq": s("heads", "head_dim"),
+                          "bk": s("kv_heads", "head_dim"),
+                          "bv": s("kv_heads", "head_dim")})
+    if cfg.layer_kind == "rwkv6":
+        layer.update({
+            "mix_base": s(None, "embed"),
+            "mix_lora_a": s("embed", None, "lora"),
+            "mix_lora_b": s(None, "lora", "embed"),
+            # column-parallel projections: output channels over `model`
+            # (head-aligned: D/16 is a whole number of 64-wide heads),
+            # input dim FSDP-sharded in training.
+            "wr": s("embed", "dmodel_tp"), "wk": s("embed", "dmodel_tp"),
+            "wv": s("embed", "dmodel_tp"), "wg": s("embed", "dmodel_tp"),
+            "wo": s("dmodel_tp", "embed"),
+            "decay_base": s("dmodel_tp"),
+            "decay_lora_a": s("embed", "lora"),
+            "decay_lora_b": s("lora", "dmodel_tp"),
+            "bonus": s("rwkv_heads", "head_dim"),
+            "ln_x": s("norm"),
+        })
+    if cfg.layer_kind == "hymba":
+        layer.update({
+            "ssm_in": s("embed", None, "ssm_inner"),
+            "ssm_conv": s(None, "ssm_inner"),
+            "ssm_dt": s("ssm_inner"),
+            "ssm_A": s(None),               # per-head scalar (nh ∤ tp)
+            "ssm_B": s("ssm_inner", None),
+            "ssm_C": s("ssm_inner", None),
+            "ssm_D": s("ssm_inner"),
+            "ssm_out": s("ssm_inner", "embed"),
+            "ssm_norm": s("ssm_inner"),
+            "attn_norm": s("head_dim"),
+        })
+    if cfg.moe is not None:
+        layer.update({
+            "router": s("embed", "expert"),
+            "we_in": s("expert", "embed", "mlp"),
+            "we_gate": s("expert", "embed", "mlp"),
+            "we_out": s("expert", "mlp", "embed"),
+        })
+        if cfg.moe.d_shared:
+            layer.update({
+                "ws_in": s("embed", "mlp"), "ws_gate": s("embed", "mlp"),
+                "ws_out": s("mlp", "embed"),
+                "shared_gate": s("embed"),
+            })
+    elif cfg.mlp_kind == "swiglu":
+        layer.update({"w_in": s("embed", "mlp"), "w_gate": s("embed", "mlp"),
+                      "w_out": s("mlp", "embed")})
+    elif cfg.mlp_kind == "gelu":
+        layer.update({"w_in": s("embed", "mlp"), "w_out": s("mlp", "embed"),
+                      "b_in": s("mlp"), "b_out": s("embed")})
+    elif cfg.mlp_kind == "rwkv_cm":
+        layer.update({"cm_mix": s(None, "embed"),
+                      "w_in": s("embed", "mlp"), "w_out": s("mlp", "embed"),
+                      "w_recv": s("embed", "dmodel_tp")})
+
+    # stacked-layer leaves carry a leading L axis (scan-over-layers)
+    layer = {k: P(None, *v) for k, v in layer.items()}
+    out = {
+        "embed": s("vocab", "embed"),
+        "final_norm": s("norm"),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = s("embed", "vocab")
+    return out
+
+
+def tree_shardings(mesh: Mesh, spec_tree) -> object:
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

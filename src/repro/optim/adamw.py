@@ -1,0 +1,74 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+No optax offline — this is a minimal, sharding-transparent implementation:
+optimizer state mirrors the parameter pytree, so whatever PartitionSpecs the
+params carry (TP over `model`, ZeRO/FSDP over `data`) apply to m/v too, and
+pjit keeps the update fully sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: Any) -> dict:
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(params: Any, grads: Any, state: dict, cfg: AdamWConfig,
+                 lr_scale: jnp.ndarray | float = 1.0
+                 ) -> Tuple[Any, dict, jnp.ndarray]:
+    """One AdamW step.  Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        new_p = p.astype(jnp.float32) - lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        )
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [n[0] for n in new])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [n[1] for n in new]),
+        "v": jax.tree.unflatten(treedef, [n[2] for n in new]),
+        "step": step,
+    }
+    return new_params, new_state, gnorm

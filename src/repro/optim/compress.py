@@ -1,0 +1,36 @@
+"""Gradient compression for cross-pod all-reduce.
+
+At 2+ pods the `pod` axis rides the slow inter-pod links; int8 block
+quantization cuts those collective bytes 4x.  Scheme: per-block (last dim
+tiles of 256) max-abs scaling, stochastic-rounding-free symmetric int8.
+Used by the train step when ``TrainStepConfig.compress_pod_grads`` is set:
+grads are psum'ed in int8 across `pod` (decompress-after), full precision
+within a pod.  Error feedback (residual carry) keeps the bias bounded.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (...) → (int8 payload, per-block scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray,
+                    shape: tuple, dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)

@@ -1,0 +1,2 @@
+from .elastic import (ElasticMeshManager, HeartbeatRegistry,     # noqa: F401
+                      StragglerDetector)

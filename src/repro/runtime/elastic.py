@@ -1,0 +1,157 @@
+"""Fault tolerance and elasticity for pod-scale runs.
+
+Three cooperating pieces, all host-side control plane (the data plane stays
+pure XLA):
+
+* ``HeartbeatRegistry`` — liveness tracking.  Hosts stamp a monotonic
+  heartbeat; the controller marks hosts dead after ``timeout_s`` silence.
+  (In-process here; the transport on a real cluster is a KV store — the
+  interface is transport-agnostic on purpose.)
+* ``StragglerDetector`` — per-host step-time EWMA + variance; hosts slower
+  than mean + k·σ for ``patience`` consecutive steps are quarantined: at
+  synchronous-SGD scale one slow host gates the fleet, so quarantining is
+  equivalent to failure (the elastic manager then reshapes without it).
+* ``ElasticMeshManager`` — given the set of live hosts, picks the largest
+  usable mesh (data axis shrinks to the largest divisor ≤ live hosts; the
+  model axis is preserved because TP width is baked into parameter shapes),
+  triggering re-lowering + checkpoint restore.  Because the data pipeline is
+  stateless-addressed (see data/tokens.py), a reshape never replays or skips
+  batches.
+
+The failure drill in tests/test_runtime.py: kill a host → registry notices →
+manager proposes the shrunk mesh → train loop re-lowers and resumes from the
+last committed checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+
+class HeartbeatRegistry:
+    def __init__(self, hosts: Sequence[int], timeout_s: float = 60.0,
+                 clock=time.monotonic):
+        self.timeout_s = timeout_s
+        self._clock = clock
+        now = clock()
+        self._last: Dict[int, float] = {h: now for h in hosts}
+        self._dead: set[int] = set()
+
+    def beat(self, host: int) -> None:
+        if host not in self._dead:
+            self._last[host] = self._clock()
+
+    def mark_dead(self, host: int) -> None:
+        self._dead.add(host)
+
+    def live_hosts(self) -> List[int]:
+        now = self._clock()
+        return sorted(h for h, t in self._last.items()
+                      if h not in self._dead and now - t <= self.timeout_s)
+
+    def dead_hosts(self) -> List[int]:
+        now = self._clock()
+        return sorted(h for h, t in self._last.items()
+                      if h in self._dead or now - t > self.timeout_s)
+
+
+class StragglerDetector:
+    """EWMA step-time tracker; quarantine = treat as failed."""
+
+    def __init__(self, hosts: Sequence[int], alpha: float = 0.1,
+                 k_sigma: float = 3.0, patience: int = 5):
+        self.alpha = alpha
+        self.k_sigma = k_sigma
+        self.patience = patience
+        self._mean: Dict[int, float] = {h: 0.0 for h in hosts}
+        self._var: Dict[int, float] = {h: 0.0 for h in hosts}
+        self._strikes: Dict[int, int] = {h: 0 for h in hosts}
+        self._initialized: set[int] = set()
+
+    def observe(self, host: int, step_time_s: float) -> None:
+        if host not in self._initialized:
+            self._mean[host] = step_time_s
+            self._initialized.add(host)
+            return
+        m = self._mean[host]
+        self._mean[host] = (1 - self.alpha) * m + self.alpha * step_time_s
+        self._var[host] = (1 - self.alpha) * self._var[host] \
+            + self.alpha * (step_time_s - m) ** 2
+
+    def fleet_stats(self) -> tuple[float, float]:
+        """Robust (median, MAD·1.4826) — a straggler must not inflate the
+        spread that decides whether it is a straggler."""
+        means = sorted(self._mean.values())
+        n = len(means)
+        if n == 0:
+            return 0.0, 0.0
+        med = means[n // 2] if n % 2 else 0.5 * (means[n // 2 - 1]
+                                                 + means[n // 2])
+        devs = sorted(abs(x - med) for x in means)
+        mad = devs[n // 2] if n % 2 else 0.5 * (devs[n // 2 - 1]
+                                                + devs[n // 2])
+        return med, 1.4826 * mad
+
+    def check(self) -> List[int]:
+        """Returns hosts to quarantine after this round of observations."""
+        mu, sd = self.fleet_stats()
+        # floor the spread at 20% of the median so benign jitter on a
+        # tightly-clustered fleet never quarantines anyone.
+        threshold = mu + self.k_sigma * max(sd, 0.2 * mu, 1e-9) + 1e-9
+        out = []
+        for h, m in self._mean.items():
+            if m > threshold:
+                self._strikes[h] += 1
+                if self._strikes[h] >= self.patience:
+                    out.append(h)
+            else:
+                self._strikes[h] = 0
+        return out
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    data: int
+    model: int
+    pods: int
+    dropped_hosts: List[int]
+
+    @property
+    def n_devices(self) -> int:
+        return self.data * self.model * self.pods
+
+
+class ElasticMeshManager:
+    """Chooses the largest runnable mesh given live capacity.
+
+    The model (TP) axis is structural — parameter shards are laid out for a
+    fixed TP width — so elasticity happens on the data (and pod) axes:
+    shrink `data` to the largest power-of-two (or divisor) that live hosts
+    support, round down whole pods first when an entire pod is unreachable.
+    """
+
+    def __init__(self, data: int, model: int, pods: int = 1,
+                 devices_per_host: int = 4):
+        self.data0, self.model, self.pods0 = data, model, pods
+        self.devices_per_host = devices_per_host
+
+    def plan(self, live_hosts: Sequence[int],
+             total_hosts: Optional[int] = None) -> MeshPlan:
+        total = total_hosts or (self.data0 * self.model * self.pods0
+                                // self.devices_per_host)
+        live = len(live_hosts)
+        if live == 0:
+            raise RuntimeError("no live hosts")
+        hosts_per_pod = max(total // self.pods0, 1)
+        # drop unreachable whole pods first
+        pods = max(1, min(self.pods0, live // hosts_per_pod))
+        live_per_pod = live // pods
+        live_devices = live_per_pod * self.devices_per_host
+        # data axis: largest divisor of the original data width that fits
+        data = self.data0
+        while data > 1 and data * self.model > live_devices * 1:
+            data //= 2
+        dropped = sorted(set(range(total)) - set(live_hosts))
+        return MeshPlan(data=data, model=self.model, pods=pods,
+                        dropped_hosts=dropped)

@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py (its own
+process) forces 512 host devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def randwalk_small():
+    rng = np.random.default_rng(7)
+    return rng.standard_normal((4000, 96), dtype=np.float32).cumsum(axis=1)
+
+
+@pytest.fixture(scope="session")
+def queries_small(randwalk_small):
+    from repro.data.series import make_query_set
+    return make_query_set(randwalk_small, 32, noise=0.2, seed=3)

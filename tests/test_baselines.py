@@ -1,0 +1,66 @@
+"""Comparison-approach simulators: semantics and orderings from the paper."""
+import numpy as np
+import pytest
+
+from repro.core import baselines
+
+
+@pytest.fixture(scope="module")
+def sim_matrices():
+    rng = np.random.default_rng(1)
+    Q, L = 40, 80
+    d_L = rng.uniform(1, 20, (Q, L)).astype(np.float32)
+    d_lb = (d_L * rng.uniform(0.2, 0.95, (Q, L))).astype(np.float32)
+    return d_lb, d_L
+
+
+def test_exact_search_full_recall(sim_matrices):
+    d_lb, d_L = sim_matrices
+    res = baselines.exact_search(d_lb, d_L)
+    assert res.recall.mean() == 1.0
+    np.testing.assert_allclose(res.bsf, d_L.min(1))
+
+
+def test_epsilon_prunes_more_recall_may_drop(sim_matrices):
+    d_lb, d_L = sim_matrices
+    r0 = baselines.exact_search(d_lb, d_L)
+    r2 = baselines.epsilon_search(d_lb, d_L, epsilon=2.0)
+    assert r2.searched.mean() <= r0.searched.mean()
+    # ε-search guarantee: answer within (1+ε) of the true NN
+    assert (r2.bsf <= d_L.min(1) * 3.0 + 1e-5).all()
+
+
+def test_lr_optimal_reordering_dominates_exact(sim_matrices):
+    d_lb, d_L = sim_matrices
+    r0 = baselines.exact_search(d_lb, d_L)
+    r1 = baselines.lr_optimal_search(d_lb, d_L)
+    assert r1.recall.mean() == 1.0
+    assert r1.searched.mean() <= r0.searched.mean() + 1e-9
+
+
+def test_leafi_sim_with_oracle_filters_is_optimal(sim_matrices):
+    """Perfect filters (d_F = d_L) ⇒ only leaves that improve bsf are
+    searched — the paper's Figure 3 'optimal' curve."""
+    d_lb, d_L = sim_matrices
+    res = baselines.leafi_search(d_lb, d_L, d_F=d_L)
+    assert res.recall.mean() == 1.0
+    base = baselines.exact_search(d_lb, d_L)
+    assert res.searched.mean() < base.searched.mean()
+
+
+def test_delta_epsilon_stops_early(sim_matrices):
+    d_lb, d_L = sim_matrices
+    thr = float(np.quantile(d_L.min(1), 0.5))
+    res = baselines.delta_epsilon_search(d_lb, d_L, thr)
+    base = baselines.exact_search(d_lb, d_L)
+    assert res.searched.mean() <= base.searched.mean()
+
+
+def test_pros_and_lt_train_and_run(sim_matrices):
+    d_lb, d_L = sim_matrices
+    pros = baselines.train_pros(d_lb, d_L, checkpoints=(4, 8, 16))
+    r = baselines.pros_search(d_lb, d_L, pros)
+    assert 0.0 <= r.recall.mean() <= 1.0
+    lt = baselines.train_lt(d_lb, d_L, checkpoints=(1, 2, 4))
+    r2 = baselines.lt_search(d_lb, d_L, lt)
+    assert r2.recall.mean() >= 0.5

@@ -1,0 +1,70 @@
+"""Property tests (hypothesis): the lower-bound invariant.
+
+For any index and any query:  lb(q, leaf) ≤ min_{s ∈ leaf} ||q − s||.
+This is the correctness foundation of the whole pruning cascade — if it
+holds, exact search can never lose the true nearest neighbor.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds, summaries, tree
+
+
+def _check_lb(index, queries):
+    lb = np.asarray(bounds.lower_bounds(index, jnp.asarray(queries)))
+    series = np.asarray(index.series)
+    for li in range(index.n_leaves):
+        s = int(index.leaf_start[li])
+        z = int(index.leaf_size[li])
+        d = np.sqrt(((queries[:, None, :] - series[None, s:s + z]) ** 2)
+                    .sum(-1)).min(1)
+        assert (lb[:, li] <= d + 1e-3).all(), \
+            f"LB violated at leaf {li}: {lb[:, li]} > {d}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(80, 400),
+       m=st.sampled_from([16, 40, 64]),
+       cap=st.sampled_from([16, 50]),
+       backbone=st.sampled_from(["dstree", "isax"]))
+def test_lower_bound_never_exceeds_true_distance(seed, n, m, cap, backbone):
+    rng = np.random.default_rng(seed)
+    S = rng.standard_normal((n, m), dtype=np.float32).cumsum(axis=1)
+    if backbone == "dstree":
+        idx = tree.build_dstree(S, leaf_capacity=cap, n_segments=4)
+    else:
+        idx = tree.build_isax(S, leaf_capacity=cap, word_len=4)
+    q = summaries.znormalize(
+        S[rng.integers(0, n, 8)]
+        + rng.standard_normal((8, m), dtype=np.float32))
+    _check_lb(idx, q)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_eapca_bound_math(seed):
+    """Direct check of the segment inequality used by the DSTree bound."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal(32).astype(np.float32)
+    x = rng.standard_normal(32).astype(np.float32)
+    true = np.sqrt(((q - x) ** 2).sum())
+    qs = np.asarray(summaries.segment_stats(jnp.asarray(q)[None], 4))[0]
+    xs = np.asarray(summaries.segment_stats(jnp.asarray(x)[None], 4))[0]
+    seg_len = np.full(4, 8.0, np.float32)
+    lb2 = (seg_len * ((qs[:, 0] - xs[:, 0]) ** 2
+                      + (qs[:, 1] - xs[:, 1]) ** 2)).sum()
+    assert np.sqrt(lb2) <= true + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(1, 8))
+def test_sax_symbol_edges_contain_value(seed, bits):
+    """A PAA value always lies inside its own SAX symbol's box."""
+    rng = np.random.default_rng(seed)
+    vals = rng.standard_normal((64,)).astype(np.float32) * 2
+    sym = np.asarray(summaries.sax_from_paa(jnp.asarray(vals), bits))
+    edges = summaries.sax_symbol_edges(sym[None], np.full((1, 64), bits))
+    lo, hi = edges[0, :, 0], edges[0, :, 1]
+    assert (vals >= lo - 1e-6).all() and (vals <= hi + 1e-6).all()

@@ -1,0 +1,59 @@
+"""Checkpoint manager: atomicity, retention, restart semantics."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _tree(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (17, 5)),
+                       "b": jnp.zeros(5)},
+            "opt": {"m": jnp.ones((17, 5)), "step": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree(0)
+    save_pytree(str(tmp_path / "ck"), t, {"note": "hi"})
+    restored, meta = load_pytree(str(tmp_path / "ck"), like=t)
+    assert meta["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_uncommitted_checkpoint_is_invisible(tmp_path):
+    p = str(tmp_path / "ck")
+    save_pytree(p, _tree(0))
+    os.remove(os.path.join(p, "DONE"))      # simulate a torn write
+    with pytest.raises(FileNotFoundError):
+        load_pytree(p, like=_tree(0))
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [20, 30]
+    assert mgr.latest_step() == 30
+    restored, meta = mgr.restore(like=_tree(0))
+    assert meta["step"] == 30
+
+
+def test_manager_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, _tree(1))
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_restore_structure_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(0, _tree(0))
+    bad = {"params": {"w": jnp.zeros((17, 5))}}   # missing leaves is fine...
+    restored, _ = mgr.restore(like=bad)           # subset restore works
+    with pytest.raises(KeyError):
+        mgr.restore(like={"nope": jnp.zeros(3)})

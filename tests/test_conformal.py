@@ -1,0 +1,96 @@
+"""Conformal auto-tuners: simulation exactness, spline monotonicity, recall
+monotonicity in the offset."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import conformal
+
+
+def _numpy_sim(d_lb, d_pred, offsets, d_L):
+    """Literal Alg. 2 replay in python — oracle for the jitted simulator."""
+    Q, L = d_lb.shape
+    order = np.argsort(d_lb, axis=1)
+    bsf = np.full(Q, np.inf, np.float32)
+    searched = np.zeros(Q, np.int64)
+    for qi in range(Q):
+        for leaf in order[qi]:
+            if d_lb[qi, leaf] > bsf[qi]:
+                continue
+            if d_pred[qi, leaf] - offsets[leaf] > bsf[qi]:
+                continue
+            searched[qi] += 1
+            bsf[qi] = min(bsf[qi], d_L[qi, leaf])
+    return bsf, searched
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), Q=st.integers(1, 8),
+       L=st.integers(2, 30))
+def test_simulator_matches_sequential_oracle(seed, Q, L):
+    rng = np.random.default_rng(seed)
+    d_L = rng.uniform(1, 20, (Q, L)).astype(np.float32)
+    d_lb = (d_L * rng.uniform(0.2, 1.0, (Q, L))).astype(np.float32)
+    d_pred = (d_L + rng.normal(0, 1, (Q, L))).astype(np.float32)
+    offsets = rng.uniform(0, 2, L).astype(np.float32)
+    bsf, searched = conformal.simulate_search(
+        jnp.asarray(d_lb), jnp.asarray(d_pred), jnp.asarray(offsets),
+        jnp.asarray(d_L))
+    want_bsf, want_searched = _numpy_sim(d_lb, d_pred, offsets, d_L)
+    np.testing.assert_allclose(np.asarray(bsf), want_bsf, rtol=1e-6)
+    assert (np.asarray(searched) == want_searched).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_recall_monotone_in_offset(seed):
+    """Bigger conformal offsets ⇒ less filter pruning ⇒ recall can only rise."""
+    rng = np.random.default_rng(seed)
+    Q, L = 16, 40
+    d_L = rng.uniform(1, 20, (Q, L)).astype(np.float32)
+    d_lb = (d_L * rng.uniform(0.2, 1.0, (Q, L))).astype(np.float32)
+    d_pred = (d_L + rng.normal(0, 2, (Q, L))).astype(np.float32)
+    d_nn = d_L.min(1)
+    recalls = []
+    for off in [0.0, 1.0, 3.0, 10.0, 100.0]:
+        bsf, _ = conformal.simulate_search(
+            jnp.asarray(d_lb), jnp.asarray(d_pred),
+            jnp.full((L,), off, jnp.float32), jnp.asarray(d_L))
+        recalls.append(float(conformal.recall_at_1(
+            bsf, jnp.asarray(d_nn)).mean()))
+    assert all(a <= b + 1e-9 for a, b in zip(recalls, recalls[1:])), recalls
+    assert recalls[-1] == 1.0         # huge offsets disable filter pruning
+
+
+def test_fit_autotuners_end_to_end():
+    rng = np.random.default_rng(0)
+    C, L = 120, 50
+    leaf_ids = np.arange(0, L, 2)
+    d_L = rng.uniform(1, 20, (C, L)).astype(np.float32)
+    d_lb = (d_L * rng.uniform(0.2, 0.9, (C, L))).astype(np.float32)
+    d_pred = np.full((C, L), -np.inf, np.float32)
+    d_pred[:, leaf_ids] = d_L[:, leaf_ids] + rng.normal(
+        0, 1.5, (C, len(leaf_ids)))
+    tuner, report = conformal.fit_autotuners(d_lb, d_pred, d_L, leaf_ids)
+    # spline output must be monotone in the target
+    offs = [tuner.offsets(t).mean() for t in (0.5, 0.9, 0.99, 0.999)]
+    assert all(a <= b + 1e-6 for a, b in zip(offs, offs[1:])), offs
+    # asking for more than ever achieved → most conservative offsets
+    top = tuner.offsets(1.1)
+    np.testing.assert_allclose(top, tuner.max_offset)
+
+
+def test_steffen_spline_is_monotone_and_interpolating():
+    x = np.array([0.0, 0.3, 0.7, 0.9, 1.0])
+    y = np.array([[0.0, 1.0, 1.5, 4.0, 4.5]])
+    slopes = conformal._steffen_slopes(x, y)
+    tuner = conformal.AutoTuner(knots_q=x, knots_o=y.astype(np.float32),
+                                slopes=slopes.astype(np.float32),
+                                max_offset=y[:, -1].astype(np.float32))
+    # interpolates the knots
+    for xi, yi in zip(x[:-1], y[0][:-1]):
+        assert abs(tuner.offsets(float(xi))[0] - yi) < 1e-5
+    # monotone between knots
+    qs = np.linspace(0, 1, 101)
+    vals = np.array([tuner.offsets(float(q))[0] for q in qs])
+    assert (np.diff(vals) >= -1e-6).all()

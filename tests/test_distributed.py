@@ -1,0 +1,49 @@
+"""Distributed (shard_map) LeaFi search == single-device search.
+
+Runs in a subprocess so the 4 placeholder host devices don't leak into the
+rest of the suite.
+"""
+import subprocess
+import sys
+
+CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import build, distributed, filter_training
+from repro.core.summaries import znormalize
+
+rng = np.random.default_rng(0)
+S = rng.standard_normal((3000, 64), dtype=np.float32).cumsum(axis=1)
+cfg = build.LeaFiConfig(backbone="dstree", leaf_capacity=64, n_global=120,
+                        n_local=24, t_filter_over_t_series=10.0,
+                        train=filter_training.TrainConfig(epochs=20))
+lfi = build.build_leafi(S, cfg)
+Q = znormalize(S[rng.integers(0, len(S), 16)]
+               + 0.3 * rng.standard_normal((16, 64)).astype(np.float32))
+
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sharded = distributed.shard_leafi(lfi, n_shards=2, quality_target=0.99)
+run, *_ = distributed.make_distributed_search(mesh, sharded)
+with mesh:
+    nn, searched = run(jnp.asarray(Q))
+
+ref = lfi.search(Q, quality_target=0.99)
+ref_exact = lfi.search_exact(Q)
+nn = np.asarray(nn)
+# distributed result must be >= exact NN and match the single-device LeaFi
+# search up to pruning-path differences; exactness: recall vs exact
+recall = (nn <= ref_exact.dists[:, 0] * (1 + 1e-5) + 1e-6).mean()
+assert recall >= 0.9, recall
+assert (nn >= ref_exact.dists[:, 0] - 1e-4).all()
+print("DIST_OK recall", recall, "searched", np.asarray(searched).mean())
+"""
+
+
+def test_distributed_search_matches(tmp_path):
+    r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
+                       text=True, timeout=600)
+    assert "DIST_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]

@@ -1,0 +1,26 @@
+"""Dry-run smoke: lower+compile representative cells in a subprocess with
+512 placeholder devices (the deliverable-(e) mechanics, smoke-sized mesh
+checks are in the full sweep under experiments/dryrun)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+CELLS = [("glm4-9b", "train_4k"), ("rwkv6-1.6b", "long_500k"),
+         ("mixtral-8x7b", "decode_32k")]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", CELLS)
+def test_cell_compiles_single_pod(arch, shape, tmp_path):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "OK " in r.stdout, r.stdout[-1500:] + r.stderr[-1500:]
+    rec = json.load(open(next(tmp_path.glob("*.json"))))
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["flops_per_device"] > 0
+    assert rec["memory"]["total_hbm_bytes"] > 0

@@ -1,0 +1,69 @@
+"""DTW + LB_Keogh invariants (paper §3: LeaFi is metric-agnostic)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dtw
+
+
+def dtw_oracle(q, x, band):
+    """Literal O(m²) DP in numpy."""
+    m = len(q)
+    D = np.full((m + 1, m + 1), np.inf)
+    D[0, 0] = 0.0
+    for i in range(1, m + 1):
+        lo, hi = max(1, i - band), min(m, i + band)
+        for j in range(lo, hi + 1):
+            c = (q[i - 1] - x[j - 1]) ** 2
+            D[i, j] = c + min(D[i - 1, j - 1], D[i - 1, j], D[i, j - 1])
+    return np.sqrt(D[m, m])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.sampled_from([8, 16, 33]),
+       band=st.sampled_from([2, 4, 8]))
+def test_dtw_matches_oracle(seed, m, band):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal(m).astype(np.float32)
+    x = rng.standard_normal(m).astype(np.float32)
+    got = float(dtw.dtw(jnp.asarray(q), jnp.asarray(x), band=band))
+    want = dtw_oracle(q, x, band)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), band=st.sampled_from([2, 6]))
+def test_lb_keogh_lower_bounds_dtw_and_dtw_bounds_euclidean(seed, band):
+    rng = np.random.default_rng(seed)
+    m = 24
+    q = rng.standard_normal(m).astype(np.float32)
+    x = rng.standard_normal(m).astype(np.float32)
+    lb = float(dtw.lb_keogh(jnp.asarray(q), jnp.asarray(x), band=band))
+    d = float(dtw.dtw(jnp.asarray(q), jnp.asarray(x), band=band))
+    eu = float(np.sqrt(((q - x) ** 2).sum()))
+    assert lb <= d + 1e-4, (lb, d)
+    assert d <= eu + 1e-4, (d, eu)          # band-DTW ≤ identity alignment
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_leaf_envelope_bound_underestimates_member_dtw(seed):
+    """Node-level LB_Keogh ≤ min DTW to any member: the Alg. 2 invariant
+    for a DTW-backed index."""
+    rng = np.random.default_rng(seed)
+    m, n_members, band = 16, 6, 3
+    members = rng.standard_normal((n_members, m)).astype(np.float32)
+    q = rng.standard_normal(m).astype(np.float32)
+    # leaf envelope: pointwise min/max of member envelopes
+    los, his = [], []
+    for s in members:
+        L, U = dtw.keogh_envelope(jnp.asarray(s), band)
+        los.append(np.asarray(L))
+        his.append(np.asarray(U))
+    env_lo = np.min(los, axis=0)[None, :]
+    env_hi = np.max(his, axis=0)[None, :]
+    lb = float(dtw.lb_keogh_leaves(jnp.asarray(q), jnp.asarray(env_lo),
+                                   jnp.asarray(env_hi))[0])
+    true = min(float(dtw.dtw(jnp.asarray(q), jnp.asarray(s), band=band))
+               for s in members)
+    assert lb <= true + 1e-4, (lb, true)

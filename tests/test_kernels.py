@@ -1,0 +1,87 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.box_lb import ops as box_ops, ref as box_ref
+from repro.kernels.filter_mlp import ops as mlp_ops, ref as mlp_ref
+from repro.kernels.l2_scan import ops as l2_ops, ref as l2_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("Q,B,m", [(1, 1, 8), (3, 17, 96), (16, 300, 128),
+                                   (130, 64, 256), (5, 1000, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2_scan_matches_oracle(Q, B, m, dtype):
+    q = jnp.asarray(RNG.standard_normal((Q, m)), dtype)
+    s = jnp.asarray(RNG.standard_normal((B, m)), dtype)
+    got = l2_ops.pairwise_l2(q, s, interpret=True)
+    want = l2_ref.pairwise_l2(q.astype(jnp.float32), s.astype(jnp.float32))
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_l2_scan_masked_min():
+    q = jnp.asarray(RNG.standard_normal((4, 64)), jnp.float32)
+    slab = jnp.asarray(RNG.standard_normal((50, 64)), jnp.float32)
+    valid = jnp.arange(50) < 37
+    dmin, amin = l2_ops.masked_min_l2(q, slab, valid, interpret=True)
+    want = np.asarray(l2_ref.pairwise_l2(q, slab))[:, :37]
+    np.testing.assert_allclose(np.asarray(dmin), want.min(1), rtol=1e-5,
+                               atol=1e-4)
+    assert (np.asarray(amin) == want.argmin(1)).all()
+
+
+@pytest.mark.parametrize("F,Q,m,h", [(1, 1, 8, 8), (5, 7, 96, 96),
+                                     (13, 140, 64, 128), (3, 32, 256, 17)])
+def test_filter_mlp_matches_oracle(F, Q, m, h):
+    w1 = jnp.asarray(RNG.standard_normal((F, m, h)) * 0.1, jnp.float32)
+    b1 = jnp.asarray(RNG.standard_normal((F, h)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(RNG.standard_normal((F, h)) * 0.1, jnp.float32)
+    b2 = jnp.asarray(RNG.standard_normal((F,)), jnp.float32)
+    q = jnp.asarray(RNG.standard_normal((Q, m)), jnp.float32)
+    got = mlp_ops.filter_predict(w1, b1, w2, b2, q, interpret=True)
+    want = mlp_ref.filter_predict(w1, b1, w2, b2, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("Q,L,d", [(1, 1, 4), (9, 200, 16), (150, 37, 8)])
+def test_box_lb_matches_oracle(Q, L, d):
+    q = jnp.asarray(RNG.standard_normal((Q, d)), jnp.float32)
+    centers = RNG.standard_normal((L, d))
+    width = np.abs(RNG.standard_normal((L, d)))
+    lo = jnp.asarray(centers - width, jnp.float32)
+    hi = jnp.asarray(centers + width, jnp.float32)
+    # open boxes on some edges (±inf) as produced by SAX extremes
+    lo = lo.at[0].set(-jnp.inf)
+    hi = hi.at[-1].set(jnp.inf)
+    got = box_ops.box_lb(q, lo, hi, interpret=True)
+    want = box_ref.box_lb(q, lo, hi)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_paths_agree_with_bound_oracles(randwalk_small):
+    """sax_lb / eapca_lb kernel wrappers == core.bounds jnp forms."""
+    from repro.core import bounds, summaries, tree
+    S = randwalk_small[:1500]
+    q = jnp.asarray(summaries.znormalize(S[:9] + 0.5))
+    idx_i = tree.build_isax(S, leaf_capacity=64)
+    idx_d = tree.build_dstree(S, leaf_capacity=64)
+    edges = jnp.asarray(idx_i.payload["sax_edges"])
+    qp = summaries.paa(q, edges.shape[1])
+    got = box_ops.sax_lb(qp, edges, length=S.shape[1], interpret=True)
+    want = bounds.sax_lower_bound(qp, edges, S.shape[1])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+    boxes = jnp.asarray(idx_d.payload["eapca_box"])
+    seg = jnp.asarray(idx_d.payload["seg_len"])
+    qs = summaries.segment_stats(q, boxes.shape[1])
+    got = box_ops.eapca_lb(qs, boxes, seg, interpret=True)
+    want = bounds.eapca_lower_bound(qs, boxes, seg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,99 @@
+"""Chunked linear attention vs the literal per-step recurrence oracle.
+
+Locks semantics before §Perf optimizations: any chunking/factorization
+change must keep these green.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import linear_attention as la
+
+
+def _oracle(q, k, v, ld, state0, bonus, include_current):
+    """Direct recurrence, per (batch, head)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    state = state0.copy()
+    out = np.zeros((B, S, H, dv), np.float32)
+    for b in range(B):
+        for h in range(H):
+            St = state[b, h].copy()
+            for t in range(S):
+                kv = np.outer(k[b, t, h], v[b, t, h])
+                if include_current:
+                    St = np.exp(ld[b, t, h])[:, None] * St + kv
+                    out[b, t, h] = q[b, t, h] @ St
+                else:
+                    out[b, t, h] = q[b, t, h] @ St
+                    if bonus is not None:
+                        out[b, t, h] += (q[b, t, h] * bonus[h] * k[b, t, h]
+                                         ).sum() * v[b, t, h]
+                    St = np.exp(ld[b, t, h])[:, None] * St + kv
+            state[b, h] = St
+    return out, state
+
+
+@pytest.mark.parametrize("include_current,with_bonus",
+                         [(False, True), (False, False), (True, False)])
+@pytest.mark.parametrize("S,chunk", [(16, 4), (20, 8), (7, 8), (64, 16)])
+def test_chunked_matches_recurrence(include_current, with_bonus, S, chunk):
+    rng = np.random.default_rng(0)
+    B, H, dk, dv = 2, 3, 8, 5
+    q = rng.standard_normal((B, S, H, dk)).astype(np.float32)
+    k = rng.standard_normal((B, S, H, dk)).astype(np.float32)
+    v = rng.standard_normal((B, S, H, dv)).astype(np.float32)
+    ld = -np.exp(rng.normal(-1.5, 1.0, (B, S, H, dk))).astype(np.float32)
+    state0 = rng.standard_normal((B, H, dk, dv)).astype(np.float32) * 0.1
+    bonus = (rng.standard_normal((H, dk)).astype(np.float32)
+             if with_bonus else None)
+
+    got, got_state = la.chunked_linear_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(ld),
+        jnp.asarray(state0),
+        bonus=None if bonus is None else jnp.asarray(bonus),
+        include_current=include_current, chunk=chunk)
+    want, want_state = _oracle(q, k, v, ld, state0, bonus, include_current)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_state), want_state,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_extreme_decay_stays_finite():
+    """Fast decay (ld very negative) must not produce inf/nan — the reason
+    the implementation avoids the naive exp(+cum) factorization."""
+    rng = np.random.default_rng(1)
+    B, S, H, dk, dv = 1, 32, 2, 4, 4
+    q = rng.standard_normal((B, S, H, dk)).astype(np.float32)
+    k = rng.standard_normal((B, S, H, dk)).astype(np.float32)
+    v = rng.standard_normal((B, S, H, dv)).astype(np.float32)
+    ld = np.full((B, S, H, dk), -20.0, np.float32)     # decay ≈ 2e-9/step
+    out, state = la.chunked_linear_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(ld),
+        include_current=True, chunk=8)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(np.asarray(state)).all()
+
+
+def test_step_matches_chunked():
+    rng = np.random.default_rng(2)
+    B, H, dk, dv = 2, 3, 8, 5
+    S = 10
+    q = rng.standard_normal((B, S, H, dk)).astype(np.float32)
+    k = rng.standard_normal((B, S, H, dk)).astype(np.float32)
+    v = rng.standard_normal((B, S, H, dv)).astype(np.float32)
+    ld = -np.exp(rng.normal(-1.5, 1.0, (B, S, H, dk))).astype(np.float32)
+    full, full_state = la.chunked_linear_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(ld),
+        include_current=True, chunk=4)
+    state = jnp.zeros((B, H, dk, dv))
+    outs = []
+    for t in range(S):
+        o, state = la.linear_attention_step(
+            jnp.asarray(q[:, t]), jnp.asarray(k[:, t]), jnp.asarray(v[:, t]),
+            jnp.asarray(ld[:, t]), state, include_current=True)
+        outs.append(o)
+    np.testing.assert_allclose(np.stack([np.asarray(o) for o in outs], 1),
+                               np.asarray(full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(full_state),
+                               rtol=2e-4, atol=2e-4)

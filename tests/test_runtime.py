@@ -1,0 +1,90 @@
+"""Fault tolerance drill: heartbeat → straggler → elastic re-mesh."""
+from repro.runtime import (ElasticMeshManager, HeartbeatRegistry,
+                           StragglerDetector)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_detects_silence():
+    clock = FakeClock()
+    reg = HeartbeatRegistry(range(4), timeout_s=10, clock=clock)
+    clock.t = 5
+    for h in (0, 1, 2):
+        reg.beat(h)
+    clock.t = 12
+    assert reg.dead_hosts() == [3]
+    assert reg.live_hosts() == [0, 1, 2]
+
+
+def test_straggler_quarantine_after_patience():
+    det = StragglerDetector(range(8), patience=3, k_sigma=3.0)
+    for step in range(6):
+        for h in range(8):
+            det.observe(h, 1.0 if h != 5 else 9.0)
+        bad = det.check()
+    assert bad == [5]
+
+
+def test_straggler_recovers_on_good_steps():
+    det = StragglerDetector(range(4), patience=3)
+    for h in range(4):
+        det.observe(h, 1.0)
+    # one slow round: a strike, but no quarantine
+    for h in range(4):
+        det.observe(h, 5.0 if h == 2 else 1.0)
+    assert det.check() == []
+    # many good rounds: EWMA decays back, strikes reset, never quarantined
+    for _ in range(20):
+        for h in range(4):
+            det.observe(h, 1.0)
+        assert det.check() == []
+
+
+def test_elastic_plan_shrinks_data_axis():
+    # 16×16 = 256 devices = 64 hosts of 4 devices
+    mgr = ElasticMeshManager(data=16, model=16, pods=1, devices_per_host=4)
+    full = mgr.plan(list(range(64)))
+    assert (full.data, full.model, full.pods) == (16, 16, 1)
+    # lose 8 hosts → 56 live → data shrinks to 8 (largest pow2 fitting)
+    plan = mgr.plan(list(range(56)))
+    assert plan.model == 16                 # TP width is structural
+    assert plan.data * plan.model <= 56 * 4
+    assert plan.data in (8, 16) and plan.data * 16 <= 224
+
+
+def test_elastic_drops_whole_pod():
+    mgr = ElasticMeshManager(data=16, model=16, pods=2, devices_per_host=4)
+    # 128 hosts total, one pod entirely unreachable
+    plan = mgr.plan(list(range(64)))
+    assert plan.pods == 1
+    assert plan.dropped_hosts == list(range(64, 128))
+
+
+def test_end_to_end_failure_drill(tmp_path):
+    """Kill a host → registry notices → plan shrinks → resume from ckpt."""
+    import jax.numpy as jnp
+    from repro.checkpoint import CheckpointManager
+
+    clock = FakeClock()
+    reg = HeartbeatRegistry(range(8), timeout_s=5, clock=clock)
+    mgr = ElasticMeshManager(data=4, model=2, pods=1, devices_per_host=1)
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    state = {"w": jnp.ones(4), "step": jnp.int32(100)}
+    ckpt.save(100, state)
+
+    clock.t = 3
+    for h in range(7):
+        reg.beat(h)                        # host 7 dies silently
+    clock.t = 7                            # 7−3 = 4 ≤ 5 alive; 7−0 = 7 dead
+    dead = reg.dead_hosts()
+    assert dead == [7]
+    plan = mgr.plan(reg.live_hosts(), total_hosts=8)
+    assert plan.data * plan.model <= len(reg.live_hosts())
+    restored, meta = ckpt.restore(like=state)
+    assert meta["step"] == 100             # resume point

@@ -1,0 +1,86 @@
+"""Search semantics: exactness, pruning accounting, k-NN, filter cascade."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build, filter_training, search, tree
+from repro.core.summaries import znormalize
+
+
+@pytest.fixture(scope="module", params=["dstree", "isax"])
+def index_small(request, randwalk_small):
+    if request.param == "dstree":
+        return tree.build_dstree(randwalk_small[:2000], leaf_capacity=64)
+    return tree.build_isax(randwalk_small[:2000], leaf_capacity=64)
+
+
+def brute_force(index, queries, k=1):
+    S = np.asarray(index.series[: index.n_series])
+    d = np.sqrt(((queries[:, None, :] - S[None]) ** 2).sum(-1))
+    rows = np.argsort(d, axis=1)[:, :k]
+    return np.take_along_axis(d, rows, 1), np.asarray(index.order)[rows]
+
+
+def test_exact_search_equals_brute_force(index_small, queries_small):
+    res = search.search_batched(index_small, queries_small, use_filters=False)
+    want_d, want_i = brute_force(index_small, queries_small)
+    np.testing.assert_allclose(res.dists[:, 0], want_d[:, 0], rtol=1e-4)
+    assert (res.ids[:, 0] == want_i[:, 0]).all()
+    # pruning accounting is consistent
+    assert (res.searched + res.pruned_lb + res.pruned_filter
+            == index_small.n_leaves).all()
+    assert (res.pruned_filter == 0).all()
+
+
+def test_knn_search_matches_brute_force(index_small, queries_small):
+    k = 5
+    res = search.search_batched(index_small, queries_small, k=k,
+                                use_filters=False)
+    want_d, want_i = brute_force(index_small, queries_small, k=k)
+    np.testing.assert_allclose(res.dists, want_d, rtol=1e-4)
+    assert (np.sort(res.ids, 1) == np.sort(want_i, 1)).all()
+
+
+def test_early_search_equals_batched(index_small, queries_small):
+    for qi in range(4):
+        r1 = search.search_early(index_small, queries_small[qi],
+                                 use_filters=False)
+        r2 = search.search_batched(index_small, queries_small[qi:qi + 1],
+                                   use_filters=False)
+        np.testing.assert_allclose(r1.dists, r2.dists, rtol=1e-5)
+        assert r1.ids[0, 0] == r2.ids[0, 0]
+
+
+def test_filters_only_prune_never_corrupt_results(randwalk_small):
+    """With absurdly conservative offsets the LeaFi search stays exact."""
+    cfg = build.LeaFiConfig(backbone="dstree", leaf_capacity=64,
+                            n_global=60, n_local=16,
+                            t_filter_over_t_series=10.0,
+                            train=filter_training.TrainConfig(epochs=5))
+    lfi = build.build_leafi(randwalk_small[:1500], cfg)
+    q = znormalize(randwalk_small[:8] + 0.3)
+    exact = lfi.search_exact(q)
+    # +1e6 offsets → d_F is far below any bsf → no filter pruning
+    big = np.full(lfi.index.n_leaves, 1e6, np.float32)
+    res = search.search_batched(
+        lfi.index, q, filter_params=lfi.filter_params,
+        leaf_ids=lfi.leaf_ids, tuner=None, quality_target=None,
+        use_filters=True)
+    np.testing.assert_allclose(res.dists, exact.dists, rtol=1e-4)
+
+
+def test_quality_target_search_recall(randwalk_small):
+    cfg = build.LeaFiConfig(backbone="dstree", leaf_capacity=64,
+                            n_global=200, n_local=50,
+                            t_filter_over_t_series=10.0,
+                            train=filter_training.TrainConfig(epochs=40))
+    lfi = build.build_leafi(randwalk_small, cfg)
+    q = znormalize(randwalk_small[np.random.default_rng(5).integers(
+        0, len(randwalk_small), 64)] + 0.2 * np.random.default_rng(6)
+        .standard_normal((64, randwalk_small.shape[1])).astype(np.float32))
+    exact = lfi.search_exact(q)
+    res = lfi.search(q, quality_target=0.99)
+    recall = float((res.dists[:, 0] <= exact.dists[:, 0] * (1 + 1e-5) + 1e-6)
+                   .mean())
+    assert recall >= 0.9, recall           # loose bound for a tiny build
+    assert res.searched.mean() <= exact.searched.mean() + 1e-9

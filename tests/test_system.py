@@ -1,0 +1,85 @@
+"""End-to-end behaviour of the paper's system (Alg. 1 + Alg. 2).
+
+Builds a LeaFi-enhanced index on a RandWalk collection (the paper's
+synthetic protocol), then checks the paper's headline behaviours at test
+scale: exactness with filters off, recall at the quality target with
+filters on, pruning-ratio improvement, and the build-report accounting.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build, filter_training
+from repro.core.summaries import znormalize
+from repro.data.series import make_query_set
+
+
+@pytest.fixture(scope="module")
+def leafi_index():
+    rng = np.random.default_rng(11)
+    S = rng.standard_normal((8000, 96), dtype=np.float32).cumsum(axis=1)
+    cfg = build.LeaFiConfig(
+        backbone="dstree", leaf_capacity=96, n_global=240, n_local=60,
+        t_filter_over_t_series=20.0,
+        train=filter_training.TrainConfig(epochs=60, batch=64))
+    return S, build.build_leafi(S, cfg)
+
+
+@pytest.fixture(scope="module")
+def test_queries(leafi_index):
+    S, _ = leafi_index
+    return make_query_set(S, 48, noise=0.2, seed=23)
+
+
+def test_build_report_accounting(leafi_index):
+    _, lfi = leafi_index
+    r = lfi.build_report
+    assert r["n_filters"] > 0
+    assert r["n_filters"] <= r["n_leaves"]
+    for key in ("t_index_build", "t_collect", "t_train", "t_calibrate"):
+        assert r[key] > 0
+
+
+def test_exact_mode_is_exact(leafi_index, test_queries):
+    S, lfi = leafi_index
+    res = lfi.search_exact(test_queries)
+    d = np.sqrt(((test_queries[:, None] - znormalize(S)[None]) ** 2).sum(-1))
+    np.testing.assert_allclose(res.dists[:, 0], d.min(1), rtol=1e-4)
+
+
+def test_leafi_meets_quality_target(leafi_index, test_queries):
+    _, lfi = leafi_index
+    exact = lfi.search_exact(test_queries)
+    res = lfi.search(test_queries, quality_target=0.99)
+    recall = float((res.dists[:, 0] <= exact.dists[:, 0] * (1 + 1e-5) + 1e-6)
+                   .mean())
+    assert recall >= 0.9, recall
+    # filters must prune at least as much as the summarization-only search
+    assert res.pruning_ratio.mean() >= exact.pruning_ratio.mean() - 1e-9
+
+
+def test_lower_quality_target_prunes_more(leafi_index, test_queries):
+    _, lfi = leafi_index
+    hi = lfi.search(test_queries, quality_target=0.999)
+    lo = lfi.search(test_queries, quality_target=0.5)
+    assert lo.searched.mean() <= hi.searched.mean() + 1e-9
+
+
+def test_per_query_targets_are_independent(leafi_index, test_queries):
+    """The paper's key UX claim: quality target chosen at query time."""
+    _, lfi = leafi_index
+    a = lfi.search(test_queries[:4], quality_target=0.95)
+    b = lfi.search(test_queries[:4], quality_target=0.99)
+    assert a.dists.shape == b.dists.shape
+
+
+def test_index_checkpoint_roundtrip(leafi_index, tmp_path):
+    _, lfi = leafi_index
+    from repro.checkpoint import save_pytree, load_pytree
+    tree = {"filters": lfi.filter_params,
+            "leaf_start": lfi.index.leaf_start,
+            "leaf_size": lfi.index.leaf_size}
+    save_pytree(str(tmp_path / "lfi"), tree)
+    restored, _ = load_pytree(str(tmp_path / "lfi"), like=tree)
+    np.testing.assert_array_equal(
+        np.asarray(restored["filters"]["w1"]),
+        np.asarray(lfi.filter_params["w1"]))
