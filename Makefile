@@ -1,0 +1,26 @@
+# Tier-1 verification and common dev entry points.
+#
+# `make test` is the exact command the ROADMAP's tier-1 gate runs; keep them
+# in sync.  The suite must collect and pass on a bare runtime image (no
+# requirements-dev.txt extras) — tests/_hypothesis_compat.py guarantees the
+# property tests degrade rather than break collection.
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+export PYTHONPATH
+
+.PHONY: test test-fast bench bench-engine dev-deps
+
+test:
+	python -m pytest -x -q
+
+test-fast:
+	python -m pytest -x -q -m "not slow"
+
+bench:
+	python -m benchmarks.run --quick
+
+bench-engine:
+	python -m benchmarks.engine_bench --out experiments/engine_bench.json
+
+dev-deps:
+	pip install -r requirements-dev.txt

@@ -1,0 +1,113 @@
+"""Scan-vs-compact engine wall-clock across pruning ratios.
+
+The compact engine's claim is that search compute — not just the reported
+searched-leaf count — shrinks with the pruning ratio.  This benchmark pins
+that: one index, one query batch, and a sweep of filter aggressiveness
+levels; at each level both engine strategies answer the same cascade (they
+are bitwise-identical, see tests/test_engine.py) and we record wall-clock,
+searched leaves, and the leaves the compact engine actually paid distance
+compute for.
+
+Pruning is controlled with synthetic rank-threshold filter predictions
+(prune every leaf beyond the r best by lower bound) rather than trained
+filters, so the sweep hits precise, reproducible ratios — the engine only
+ever sees a (Q, L) prediction matrix either way.
+
+    PYTHONPATH=src python -m benchmarks.engine_bench \
+        --out experiments/engine_bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds, engine, tree
+from repro.data.series import make_query_set
+
+from . import common
+
+
+def _rank_threshold_predictions(d_lb: np.ndarray, keep: int) -> np.ndarray:
+    """d_F that filter-prunes every leaf beyond the ``keep`` best-lb ones."""
+    ranks = np.argsort(np.argsort(d_lb, axis=1), axis=1)
+    return np.where(ranks < keep, -np.inf, np.inf).astype(np.float32)
+
+
+def bench_engine(n: int = 50_000, m: int = 128, leaf_capacity: int = 128,
+                 n_queries: int = 32, k: int = 5,
+                 repeat: int = 3) -> Tuple[List[str], Dict]:
+    rng = np.random.default_rng(1)
+    S = rng.standard_normal((n, m), dtype=np.float32).cumsum(axis=1)
+    index = tree.build_dstree(S, leaf_capacity=leaf_capacity)
+    L = index.n_leaves
+    queries = make_query_set(S, n_queries, noise=0.3, seed=7)
+    q = jnp.asarray(queries)
+    d_lb = bounds.lower_bounds(index, q)
+    lb_np = np.asarray(d_lb)
+    series = jnp.asarray(index.series)
+    starts = jnp.asarray(index.leaf_start)
+    sizes = jnp.asarray(index.leaf_size)
+
+    def run(strategy, d_F):
+        res = engine.run_cascade(series, starts, sizes, q, d_lb,
+                                 jnp.asarray(d_F), k=k,
+                                 max_leaf=index.max_leaf_size,
+                                 strategy=strategy)
+        jax.block_until_ready(res.topk_d)
+        return res
+
+    levels = [("none", None)] + [("keep%d" % r, r)
+                                 for r in (L // 2, L // 8, L // 32, L // 64)]
+    rows, payload = [], {"n": n, "m": m, "L": L, "k": k,
+                         "n_queries": n_queries, "levels": []}
+    for name, keep in levels:
+        d_F = (np.full_like(lb_np, -np.inf) if keep is None
+               else _rank_threshold_predictions(lb_np, keep))
+        rec = {"level": name}
+        for strategy in ("scan", "compact"):
+            res = run(strategy, d_F)                      # warmup / compile
+            t0 = time.perf_counter()
+            for _ in range(repeat):
+                res = run(strategy, d_F)
+            dt = (time.perf_counter() - t0) / repeat
+            rec[f"{strategy}_ms"] = dt * 1e3
+            rec[f"{strategy}_searched"] = float(
+                np.asarray(res.n_searched).mean())
+            rec[f"{strategy}_computed"] = float(
+                np.asarray(res.n_computed).mean())
+        rec["pruning_ratio"] = 1.0 - rec["compact_searched"] / L
+        rec["speedup"] = rec["scan_ms"] / max(rec["compact_ms"], 1e-12)
+        payload["levels"].append(rec)
+        rows.append(common.csv_line(
+            f"engine/{name}", rec["compact_ms"] * 1e3,
+            f"prune={rec['pruning_ratio']:.3f};"
+            f"scan={rec['scan_ms']:.1f}ms;"
+            f"compact={rec['compact_ms']:.1f}ms;"
+            f"speedup={rec['speedup']:.2f}x"))
+    return rows, payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/engine_bench.json")
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--queries", type=int, default=32)
+    args = ap.parse_args()
+    rows, payload = bench_engine(n=args.n, n_queries=args.queries)
+    for r in rows:
+        print(r)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"# → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

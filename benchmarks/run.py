@@ -13,7 +13,7 @@ import json
 import os
 import time
 
-from . import common, kernels_bench, paper_tables, wallclock
+from . import common, engine_bench, kernels_bench, paper_tables, wallclock
 
 
 def main() -> None:
@@ -70,6 +70,12 @@ def main() -> None:
     rows, payload = kernels_bench.bench_kernels()
     all_rows += rows
     payloads["kernels"] = payload
+
+    # scan-vs-compact engine wall-clock across pruning ratios
+    rows, payload = engine_bench.bench_engine(
+        n=10_000 if args.quick else 50_000)
+    all_rows += rows
+    payloads["engine"] = payload
 
     for r in all_rows:
         print(r)

@@ -1,10 +1,11 @@
 """Real wall-clock search latency (not the surrogate): early-termination
 LeaFi vs exact on this host's CPU.
 
-The batched (masked-SPMD) search can't show pruning wall-clock wins by
-construction; ``search_early`` runs the paper's sequential semantics with
-genuine leaf-scan skips (lax.while_loop + cond), so its timing reflects the
-pruning ratio directly.
+``search_early`` runs the paper's sequential semantics with genuine
+leaf-scan skips (lax.while_loop + cond), so its timing reflects the pruning
+ratio directly.  The batched path gets its wall-clock pruning wins from the
+compact engine strategy instead — that comparison lives in
+benchmarks/engine_bench.py.
 """
 from __future__ import annotations
 

@@ -6,6 +6,7 @@ Public API:
     LeaFiIndex.search_exact(queries)                 (filters disabled)
 """
 from .build import LeaFiConfig, LeaFiIndex, build_leafi          # noqa: F401
+from .engine import EngineResult, run_cascade                    # noqa: F401
 from .flat_index import FlatIndex                                # noqa: F401
 from .search import SearchResult, search_batched, search_early   # noqa: F401
 from .tree import build_dstree, build_isax                       # noqa: F401

@@ -23,7 +23,6 @@ leafi-serve`` lowers on the production mesh.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -32,7 +31,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import conformal
+from . import conformal, engine
 from .build import LeaFiIndex
 
 _INF = jnp.float32(jnp.inf)
@@ -173,30 +172,14 @@ def shard_leafi(lfi: LeaFiIndex, n_shards: int,
 
 def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
                   bsf0):
-    """Cascade over this shard's leaves given a starting global bsf."""
-    Pn = lb.shape[1]
-    row_ids = jnp.arange(max_leaf)
-    order = jnp.argsort(lb, axis=1)
+    """Cascade over this shard's leaves given a starting global bsf.
 
-    def per_query(q, lb_row, dF_row, order_row, bsf_init):
-        def step(carry, leaf):
-            bsf, n_s = carry
-            valid = sh_size[leaf] > 0
-            p_lb = jnp.logical_or(lb_row[leaf] > bsf, ~valid)
-            p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
-            pruned = p_lb | p_f
-            slab = jax.lax.dynamic_slice_in_dim(
-                sh_series, sh_start[leaf], max_leaf, 0)
-            diff = slab - q[None, :]
-            d = jnp.sqrt((diff * diff).sum(-1))
-            d = jnp.where((row_ids < sh_size[leaf]) & ~pruned, d, _INF)
-            bsf = jnp.minimum(bsf, d.min())
-            return (bsf, n_s + (~pruned).astype(jnp.int32)), None
-
-        (bsf, n_s), _ = jax.lax.scan(step, (bsf_init, jnp.int32(0)), order_row)
-        return bsf, n_s
-
-    return jax.vmap(per_query)(queries, lb, d_F, order, bsf0)
+    Thin wrapper over the common engine's shard_map-safe masked scan —
+    compaction needs data-dependent shapes, so inside shard_map the scan
+    form is the engine's only valid plan.
+    """
+    return engine.masked_bsf_scan(sh_series, sh_start, sh_size, lb, d_F,
+                                  queries, max_leaf, bsf0)
 
 
 def search_input_specs(n_shards: int, leaves_per_shard: int,
@@ -225,48 +208,57 @@ def search_input_specs(n_shards: int, leaves_per_shard: int,
     )
 
 
-def build_search_fn(mesh: Mesh, max_leaf: int, data_axes=("data",),
-                    model_axis: str = "model"):
-    """The shard_map'ped search as a jit-able function of explicit args."""
+def _make_shard_body(max_leaf: int, model_axis: str):
+    """The per-shard two-phase search body (runs under shard_map).
+
+    Phase 1 probes each query's most promising local leaf (engine probe) and
+    establishes a global bsf via pmin; phase 2 runs the engine's masked bsf
+    cascade against it and reduces the answer.  Shared by
+    ``build_search_fn`` (dry-run lowering) and ``make_distributed_search``.
+    """
 
     def search_fn(series, start, size, lo, hi, w1, b1, w2, b2, y_mean,
                   y_std, offsets, has_filter, queries, qcoords):
+        # inside shard_map: leading shard axis is size 1 → squeeze
         series, start, size = series[0], start[0], size[0]
         lo, hi = lo[0], hi[0]
         w1, b1, w2, b2 = w1[0], b1[0], w2[0], b2[0]
         y_mean, y_std = y_mean[0], y_std[0]
         offsets, has_filter = offsets[0], has_filter[0]
 
+        # local lower bounds for all local leaves: (Q, P)
         d = jnp.maximum(jnp.maximum(lo[None] - qcoords[:, None],
                                     qcoords[:, None] - hi[None]), 0.0)
         d = jnp.where(jnp.isfinite(d), d, 0.0)
         lb = jnp.sqrt((d * d).sum(-1))
 
+        # local filter predictions: einsum over stacked per-leaf MLPs
         hdd = jax.nn.relu(jnp.einsum("qm,pmh->pqh", queries, w1)
                           + b1[:, None, :])
         pred = jnp.einsum("pqh,ph->pq", hdd, w2) + b2[:, None]
         pred = pred * y_std[:, None] + y_mean[:, None]
         d_F = jnp.where(has_filter[:, None], pred - offsets[:, None], -_INF)
-        d_F = d_F.T
+        d_F = d_F.T                                             # (Q, P)
 
-        best_leaf = lb.argmin(axis=1)
-        row_ids = jnp.arange(max_leaf)
+        # phase 1: scan the single most promising local leaf
+        bsf_local = engine.probe_best_leaf(series, start, size, lb,
+                                           queries, max_leaf)
+        bsf0 = jax.lax.pmin(bsf_local, model_axis)              # collective 1
 
-        def probe(q, leaf):
-            slab = jax.lax.dynamic_slice_in_dim(
-                series, start[leaf], max_leaf, 0)
-            dd = jnp.sqrt(((slab - q[None]) ** 2).sum(-1))
-            return jnp.where(row_ids < size[leaf], dd, _INF).min()
-
-        bsf_local = jax.vmap(probe)(queries, best_leaf)
-        bsf0 = jax.lax.pmin(bsf_local, model_axis)
-
+        # phase 2: full cascade against the global bsf
         bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
                                  max_leaf, bsf0)
-        nn = jax.lax.pmin(bsf, model_axis)
+        nn = jax.lax.pmin(bsf, model_axis)                      # collective 2
         total_searched = jax.lax.psum(n_s, model_axis)
         return nn[None], total_searched[None]
 
+    return search_fn
+
+
+def build_search_fn(mesh: Mesh, max_leaf: int, data_axes=("data",),
+                    model_axis: str = "model"):
+    """The shard_map'ped search as a jit-able function of explicit args."""
+    search_fn = _make_shard_body(max_leaf, model_axis)
     spec_idx = P(model_axis)
     spec_q = P(data_axes)
     smapped = shard_map(
@@ -290,49 +282,7 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
     max_leaf = sharded.max_leaf
     spec_idx = P(model_axis)
     spec_q = P(data_axes)
-
-    def search_fn(series, start, size, lo, hi, w1, b1, w2, b2, y_mean, y_std,
-                  offsets, has_filter, queries, qcoords):
-        # inside shard_map: leading shard axis is size 1 → squeeze
-        series, start, size = series[0], start[0], size[0]
-        lo, hi = lo[0], hi[0]
-        w1, b1, w2, b2 = w1[0], b1[0], w2[0], b2[0]
-        y_mean, y_std = y_mean[0], y_std[0]
-        offsets, has_filter = offsets[0], has_filter[0]
-
-        # local lower bounds for all local leaves: (Q, P)
-        d = jnp.maximum(jnp.maximum(lo[None] - qcoords[:, None],
-                                    qcoords[:, None] - hi[None]), 0.0)
-        d = jnp.where(jnp.isfinite(d), d, 0.0)
-        lb = jnp.sqrt((d * d).sum(-1))
-
-        # local filter predictions: einsum over stacked per-leaf MLPs
-        hdd = jax.nn.relu(jnp.einsum("qm,pmh->pqh", queries, w1)
-                          + b1[:, None, :])
-        pred = jnp.einsum("pqh,ph->pq", hdd, w2) + b2[:, None]
-        pred = pred * y_std[:, None] + y_mean[:, None]
-        d_F = jnp.where(has_filter[:, None], pred - offsets[:, None], -_INF)
-        d_F = d_F.T                                             # (Q, P)
-
-        # phase 1: scan the single most promising local leaf
-        best_leaf = lb.argmin(axis=1)                           # (Q,)
-        row_ids = jnp.arange(max_leaf)
-
-        def probe(q, leaf):
-            slab = jax.lax.dynamic_slice_in_dim(
-                series, start[leaf], max_leaf, 0)
-            dd = jnp.sqrt(((slab - q[None]) ** 2).sum(-1))
-            return jnp.where(row_ids < size[leaf], dd, _INF).min()
-
-        bsf_local = jax.vmap(probe)(queries, best_leaf)
-        bsf0 = jax.lax.pmin(bsf_local, model_axis)              # collective 1
-
-        # phase 2: full cascade against the global bsf
-        bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
-                                 max_leaf, bsf0)
-        nn = jax.lax.pmin(bsf, model_axis)                      # collective 2
-        total_searched = jax.lax.psum(n_s, model_axis)
-        return nn[None], total_searched[None]
+    search_fn = _make_shard_body(max_leaf, model_axis)
 
     idx_args = (sharded.series, sharded.leaf_start, sharded.leaf_size,
                 sharded.lb_lo, sharded.lb_hi, sharded.w1, sharded.b1,

@@ -5,9 +5,14 @@ Two execution styles over the same semantics:
 * ``search_batched`` — throughput form.  Lower bounds and filter predictions
   for *all* leaves are computed up front (hoisting them out of the visit loop
   is exact — neither depends on d_bsf), then the bsf-ordered pruning cascade
-  runs as a lax.scan.  Leaf scans are masked rather than skipped (SPMD), so
-  wall-clock savings come at the fleet level while the paper's
-  hardware-agnostic cost metric (searched-leaf count) is reported exactly.
+  runs through :mod:`repro.core.engine`.  The default ``strategy="compact"``
+  computes distances only for cascade survivors (prune → compact → batched
+  MXU candidate pass), so wall-clock shrinks with the pruning ratio;
+  ``strategy="scan"`` is the validated masked-``lax.scan`` fallback that
+  computes every leaf.  Both report the paper's hardware-agnostic cost
+  metric (searched-leaf count) exactly and return identical results —
+  bitwise with the ``direct`` distance impl (the off-TPU default), to float
+  tolerance with the TPU-default ``matmul`` impl (see the engine module).
 
 * ``search_early`` — latency form for a single query: a while_loop that
   terminates at the first lower bound exceeding d_bsf (visiting in LB order
@@ -31,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bounds as bounds_mod
-from . import conformal, filters
+from . import conformal, engine, filters
 from .flat_index import FlatIndex
 
 _INF = jnp.float32(jnp.inf)
@@ -45,6 +50,9 @@ class SearchResult:
     pruned_lb: np.ndarray        # (Q,) leaves pruned by summarization LB
     pruned_filter: np.ndarray    # (Q,) leaves pruned by learned filters
     n_leaves: int
+    # leaves the engine paid distance compute for (== n_leaves on the scan
+    # strategy; the phase-1 survivor superset on the compact strategy)
+    computed: Optional[np.ndarray] = None
 
     @property
     def pruning_ratio(self) -> np.ndarray:
@@ -61,12 +69,12 @@ def predictions_for_all_leaves(index: FlatIndex, filter_params,
                                queries: jnp.ndarray,
                                offsets: np.ndarray | None,
                                use_kernel: bool = True) -> jnp.ndarray:
-    """(Q, L) conformal-adjusted filter lower bounds; +inf ⇒ never prunes.
+    """(Q, L) conformal-adjusted filter lower bounds; −inf ⇒ never prunes.
 
-    +inf is the correct neutral element: an unfiltered leaf's cascade check
-    `d_F > bsf` must never fire... inverted — see search: prune needs
-    d_F > bsf, and +inf would always prune.  We therefore use −inf for
-    unfiltered leaves (never prunes) and scatter predictions onto leaf slots.
+    The cascade prunes a leaf when ``d_F > bsf``, so −inf is the neutral
+    element for leaves without a filter: the check can never fire.  Filtered
+    leaves get their (offset-adjusted) predictions scattered onto their leaf
+    slots.
     """
     L = index.n_leaves
     Q = queries.shape[0]
@@ -78,11 +86,6 @@ def predictions_for_all_leaves(index: FlatIndex, filter_params,
     full = jnp.full((L, Q), -_INF)
     full = full.at[jnp.asarray(leaf_ids)].set(preds)
     return full.T                                                   # (Q, L)
-
-
-def _leaf_slab(index_series: jnp.ndarray, start: jnp.ndarray,
-               max_leaf: int) -> jnp.ndarray:
-    return jax.lax.dynamic_slice_in_dim(index_series, start, max_leaf, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -101,8 +104,15 @@ def search_batched(
     quality_target: Optional[float] = None,
     use_filters: bool = True,
     use_kernel: bool = True,
+    strategy: str = "auto",
+    dist_impl: Optional[str] = None,
 ) -> SearchResult:
-    """Batched LeaFi search.  Exact when filters are disabled."""
+    """Batched LeaFi search.  Exact when filters are disabled.
+
+    ``strategy``/``dist_impl`` select the engine execution plan (see
+    :mod:`repro.core.engine`): "compact" (the "auto" default) only computes
+    distances for cascade survivors; "scan" is the masked fallback.
+    """
     queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
     d_lb = bounds_mod.lower_bounds(index, queries)                  # (Q, L)
     offsets = None
@@ -115,53 +125,21 @@ def search_batched(
     else:
         d_F = jnp.full(d_lb.shape, -_INF)
 
-    topk_d, topk_i, n_s, n_plb, n_pf = _search_batched_core(
+    res = engine.run_cascade(
         jnp.asarray(index.series), jnp.asarray(index.leaf_start),
         jnp.asarray(index.leaf_size), queries, d_lb, d_F,
-        k=k, max_leaf=index.max_leaf_size)
-    ids_sorted = np.asarray(topk_i)
+        k=k, max_leaf=index.max_leaf_size, strategy=strategy,
+        dist_impl=dist_impl)
+    ids_sorted = np.asarray(res.topk_i)
     valid = ids_sorted >= 0
     orig = np.where(valid, np.asarray(index.order)[
         np.clip(ids_sorted, 0, index.n_series - 1)], -1)
     return SearchResult(
-        dists=np.asarray(topk_d), ids=orig, searched=np.asarray(n_s),
-        pruned_lb=np.asarray(n_plb), pruned_filter=np.asarray(n_pf),
-        n_leaves=index.n_leaves)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "max_leaf"))
-def _search_batched_core(series, leaf_start, leaf_size, queries, d_lb, d_F,
-                         k, max_leaf):
-    order = jnp.argsort(d_lb, axis=1)
-    row_ids = jnp.arange(max_leaf)
-
-    def per_query(q, lb_row, dF_row, order_row):
-        def step(carry, leaf):
-            topk_d, topk_i, n_s, n_plb, n_pf = carry
-            bsf = topk_d[-1]
-            p_lb = lb_row[leaf] > bsf
-            p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
-            pruned = p_lb | p_f
-            start = leaf_start[leaf]
-            slab = jax.lax.dynamic_slice_in_dim(series, start, max_leaf, 0)
-            diff = slab - q[None, :]
-            d = jnp.sqrt((diff * diff).sum(-1))
-            d = jnp.where((row_ids < leaf_size[leaf]) & ~pruned, d, _INF)
-            ids = (start + row_ids).astype(jnp.int32)
-            alld = jnp.concatenate([topk_d, d])
-            alli = jnp.concatenate([topk_i, ids])
-            neg_top, arg = jax.lax.top_k(-alld, k)
-            return (-neg_top, alli[arg],
-                    n_s + (~pruned).astype(jnp.int32),
-                    n_plb + p_lb.astype(jnp.int32),
-                    n_pf + p_f.astype(jnp.int32)), None
-
-        init = (jnp.full((k,), _INF), jnp.full((k,), -1, jnp.int32),
-                jnp.int32(0), jnp.int32(0), jnp.int32(0))
-        (td, ti, n_s, n_plb, n_pf), _ = jax.lax.scan(step, init, order_row)
-        return td, ti, n_s, n_plb, n_pf
-
-    return jax.vmap(per_query)(queries, d_lb, d_F, order)
+        dists=np.asarray(res.topk_d), ids=orig,
+        searched=np.asarray(res.n_searched),
+        pruned_lb=np.asarray(res.n_pruned_lb),
+        pruned_filter=np.asarray(res.n_pruned_filter),
+        n_leaves=index.n_leaves, computed=np.asarray(res.n_computed))
 
 
 # ---------------------------------------------------------------------------

@@ -76,5 +76,62 @@ def masked_min_l2(
     return d.min(axis=1), d.argmin(axis=1)
 
 
+def default_gathered_impl() -> str:
+    """Distance formulation the search engine should use on this backend.
+
+    ``matmul`` is the kernel's decomposition (‖q‖² + ‖s‖² − 2·q·sᵀ): for the
+    per-query gathered slabs of the compact search engine it lowers to one
+    batched GEMM, which is the MXU mapping of the candidate pass.  Off-TPU we
+    default to ``direct`` (elementwise diff-square), which is bitwise-stable
+    against the sequential scan path — the engine's parity suite relies on
+    that.
+    """
+    return "matmul" if jax.default_backend() == "tpu" else "direct"
+
+
+def gathered_leaf_l2(
+    queries: jnp.ndarray,          # (N, m)
+    slabs: jnp.ndarray,            # (N, C, R, m) per-query gathered leaf rows
+    impl: str | None = None,
+) -> jnp.ndarray:
+    """Euclidean distances from each query to its own candidate slab.
+
+    Unlike :func:`pairwise_l2` (one shared series block for all queries) each
+    query here owns a different (C·R)-row candidate set — the output of the
+    engine's survivor compaction — so the all-pairs kernel would recompute
+    every other query's candidates too.  The ``matmul`` impl keeps the
+    kernel's exact algebra but contracts per query (batched GEMM → MXU); the
+    ``direct`` impl matches the scan path bit-for-bit.  Returns (N, C, R).
+    """
+    impl = impl or default_gathered_impl()
+    q = queries.astype(jnp.float32)
+    s = slabs.astype(jnp.float32)
+    if impl == "direct":
+        diff = s - q[:, None, None, :]
+        return jnp.sqrt((diff * diff).sum(-1))
+    if impl == "matmul":
+        qn = (q * q).sum(-1)
+        sn = (s * s).sum(-1)
+        dot = jnp.einsum("ncrm,nm->ncr", s, q,
+                         preferred_element_type=jnp.float32)
+        return jnp.sqrt(jnp.maximum(qn[:, None, None] + sn - 2.0 * dot, 0.0))
+    raise ValueError(f"unknown gathered-l2 impl {impl!r}")
+
+
+def leaf_topk(
+    dists: jnp.ndarray,            # (N, C, R) masked distances (+inf invalid)
+    rows: jnp.ndarray,             # (N, C, R) global row ids
+    k: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-leaf k smallest distances and their row ids → ((N,C,k), (N,C,k)).
+
+    ``lax.top_k`` breaks ties toward the lower index, i.e. toward the lower
+    row within the leaf — the same order the sequential scan path merges
+    candidates in, which keeps the engine's replay bitwise-faithful.
+    """
+    neg, arg = jax.lax.top_k(-dists, k)
+    return -neg, jnp.take_along_axis(rows, arg, axis=-1).astype(jnp.int32)
+
+
 # the oracle, re-exported for benchmarks that compare both paths
 reference = ref.pairwise_l2

@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
         --batch 4 --prompt-len 64 --gen 32
+
+LeaFi retrieval serving (the similarity-search substrate) goes through the
+same driver with ``--arch leafi``: it builds a smoke-sized LeaFi index and
+answers batched k-NN requests through the :mod:`repro.core.engine` cascade,
+reporting per-batch latency for both engine strategies.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch leafi --batch 32
 """
 from __future__ import annotations
 
@@ -15,6 +22,36 @@ from .. import configs
 from ..models import transformer
 
 
+def serve_leafi(args) -> None:
+    """Batched retrieval serving through the engine (scan vs compact)."""
+    import numpy as np
+
+    from ..core import build, filter_training
+    from ..core.summaries import znormalize
+
+    rng = np.random.default_rng(args.seed)
+    n, m = 20_000, 128
+    S = rng.standard_normal((n, m), dtype=np.float32).cumsum(axis=1)
+    print(f"building LeaFi index over {n}x{m} series...")
+    lfi = build.build_leafi(S, build.LeaFiConfig(
+        backbone="dstree", leaf_capacity=256, n_global=200, n_local=60,
+        t_filter_over_t_series=20.0,
+        train=filter_training.TrainConfig(epochs=40)))
+    q = znormalize(S[rng.integers(0, n, args.batch)]
+                   + 0.3 * rng.standard_normal((args.batch, m))
+                   .astype(np.float32))
+
+    for strategy in ("scan", "compact"):
+        lfi.search(q, k=5, quality_target=0.99, strategy=strategy)  # warmup
+        t0 = time.perf_counter()
+        res = lfi.search(q, k=5, quality_target=0.99, strategy=strategy)
+        dt = time.perf_counter() - t0
+        print(f"serve[{strategy:7s}] {args.batch} queries k=5: "
+              f"{dt*1e3:.1f}ms  searched {res.searched.mean():.1f} "
+              f"computed {res.computed.mean():.1f} "
+              f"of {res.n_leaves} leaves/query")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="codeqwen1.5-7b")
@@ -24,6 +61,10 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.arch == "leafi":
+        serve_leafi(args)
+        return
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))

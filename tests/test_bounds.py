@@ -6,7 +6,7 @@ holds, exact search can never lose the true nearest neighbor.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import bounds, summaries, tree
 

@@ -24,8 +24,11 @@ lfi = build.build_leafi(S, cfg)
 Q = znormalize(S[rng.integers(0, len(S), 16)]
                + 0.3 * rng.standard_normal((16, 64)).astype(np.float32))
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+if hasattr(jax.sharding, "AxisType"):  # jax >= 0.5 wants explicit axis types
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+else:
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
 sharded = distributed.shard_leafi(lfi, n_shards=2, quality_target=0.99)
 run, *_ = distributed.make_distributed_search(mesh, sharded)
 with mesh:

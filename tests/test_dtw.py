@@ -1,7 +1,7 @@
 """DTW + LB_Keogh invariants (paper §3: LeaFi is metric-agnostic)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import dtw
 

@@ -1,0 +1,157 @@
+"""Engine exactness parity: strategy="compact" vs strategy="scan" vs brute
+force.
+
+The compact path replays the sequential cascade over per-leaf top-k
+summaries, so it must reproduce the scan path's top-k ids/dists AND its
+pruning counters bitwise — including under active (lossy) filter pruning,
+where the decisions depend on the evolving best-so-far.  These tests pin
+that contract across backbones, k, filter regimes, and the adversarial
+all-leaves-survive case.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bounds, build, engine, filter_training, search, tree
+
+
+@pytest.fixture(scope="module", params=["dstree", "isax"])
+def index_small(request, randwalk_small):
+    if request.param == "dstree":
+        return tree.build_dstree(randwalk_small[:2000], leaf_capacity=64)
+    return tree.build_isax(randwalk_small[:2000], leaf_capacity=64)
+
+
+def _run(index, queries, d_lb, d_F, k, strategy):
+    return engine.run_cascade(
+        jnp.asarray(index.series), jnp.asarray(index.leaf_start),
+        jnp.asarray(index.leaf_size), queries, d_lb, d_F,
+        k=k, max_leaf=index.max_leaf_size, strategy=strategy)
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a.topk_d), np.asarray(b.topk_d))
+    np.testing.assert_array_equal(np.asarray(a.topk_i), np.asarray(b.topk_i))
+    np.testing.assert_array_equal(np.asarray(a.n_searched),
+                                  np.asarray(b.n_searched))
+    np.testing.assert_array_equal(np.asarray(a.n_pruned_lb),
+                                  np.asarray(b.n_pruned_lb))
+    np.testing.assert_array_equal(np.asarray(a.n_pruned_filter),
+                                  np.asarray(b.n_pruned_filter))
+
+
+def _synthetic_predictions(d_lb, seed=0):
+    """Deterministic noisy per-leaf NN 'predictions' → real filter pruning."""
+    lb = np.asarray(d_lb)
+    rng = np.random.default_rng(seed)
+    noise = rng.standard_normal(lb.shape).astype(np.float32)
+    return jnp.asarray(lb * (1.4 + 0.4 * noise) + 2.0)
+
+
+@pytest.mark.parametrize("k", [1, 10])
+def test_compact_matches_scan_bitwise_exact(index_small, queries_small, k):
+    q = jnp.asarray(queries_small)
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_F = jnp.full(d_lb.shape, -jnp.inf)
+    a = _run(index_small, q, d_lb, d_F, k, "scan")
+    b = _run(index_small, q, d_lb, d_F, k, "compact")
+    _assert_bitwise(a, b)
+    # compact must not have paid for more leaves than exist, nor fewer than
+    # it reports as scanned
+    assert (np.asarray(b.n_computed) <= index_small.n_leaves).all()
+    assert (np.asarray(b.n_computed) >= np.asarray(b.n_searched)).all()
+
+
+@pytest.mark.parametrize("k", [1, 10])
+def test_compact_matches_scan_bitwise_with_filter_pruning(
+        index_small, queries_small, k):
+    q = jnp.asarray(queries_small)
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_F = _synthetic_predictions(d_lb)
+    a = _run(index_small, q, d_lb, d_F, k, "scan")
+    b = _run(index_small, q, d_lb, d_F, k, "compact")
+    assert np.asarray(a.n_pruned_filter).sum() > 0   # the cascade is active
+    _assert_bitwise(a, b)
+
+
+def test_all_leaves_survive_adversarial(index_small, queries_small):
+    """Zero lower bounds + no filters: nothing prunes, the compact path must
+    degrade to the full-width bucket (empty-pruning path) and stay exact."""
+    q = jnp.asarray(queries_small)
+    d_lb = jnp.zeros((q.shape[0], index_small.n_leaves), jnp.float32)
+    d_F = jnp.full(d_lb.shape, -jnp.inf)
+    a = _run(index_small, q, d_lb, d_F, 3, "scan")
+    b = _run(index_small, q, d_lb, d_F, 3, "compact")
+    _assert_bitwise(a, b)
+    assert (np.asarray(b.n_computed) == index_small.n_leaves).all()
+    assert (np.asarray(b.n_searched) == index_small.n_leaves).all()
+
+
+def test_k_larger_than_leaf_capacity(index_small, queries_small):
+    q = jnp.asarray(queries_small[:8])
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_F = _synthetic_predictions(d_lb, seed=3)
+    k = index_small.max_leaf_size + 17
+    a = _run(index_small, q, d_lb, d_F, k, "scan")
+    b = _run(index_small, q, d_lb, d_F, k, "compact")
+    _assert_bitwise(a, b)
+
+
+def _brute_force(index, queries, k):
+    S = np.asarray(index.series[: index.n_series])
+    d = np.sqrt(((queries[:, None, :] - S[None]) ** 2).sum(-1))
+    rows = np.argsort(d, axis=1)[:, :k]
+    return np.take_along_axis(d, rows, 1), np.asarray(index.order)[rows]
+
+
+@pytest.mark.parametrize("strategy", ["scan", "compact"])
+def test_exact_search_equals_brute_force(index_small, queries_small,
+                                         strategy):
+    res = search.search_batched(index_small, queries_small, k=5,
+                                use_filters=False, strategy=strategy)
+    want_d, want_i = _brute_force(index_small, queries_small, k=5)
+    np.testing.assert_allclose(res.dists, want_d, rtol=1e-4)
+    assert (np.sort(res.ids, 1) == np.sort(want_i, 1)).all()
+    want_computed = (index_small.n_leaves if strategy == "scan"
+                     else res.searched)
+    assert (res.computed >= want_computed).all()
+
+
+def test_leafi_end_to_end_strategies_agree(randwalk_small):
+    """Built index with trained filters + conformal offsets: both engine
+    strategies return identical results through the public search API."""
+    cfg = build.LeaFiConfig(backbone="dstree", leaf_capacity=64,
+                            n_global=60, n_local=16,
+                            t_filter_over_t_series=10.0,
+                            train=filter_training.TrainConfig(epochs=5))
+    lfi = build.build_leafi(randwalk_small[:1500], cfg)
+    rng = np.random.default_rng(11)
+    q = (randwalk_small[rng.integers(0, 1500, 16)]
+         + 0.25 * rng.standard_normal((16, randwalk_small.shape[1]))
+         .astype(np.float32))
+    for k in (1, 10):
+        a = lfi.search(q, k=k, quality_target=0.99, strategy="scan")
+        b = lfi.search(q, k=k, quality_target=0.99, strategy="compact")
+        np.testing.assert_array_equal(a.dists, b.dists)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.searched, b.searched)
+        np.testing.assert_array_equal(a.pruned_lb, b.pruned_lb)
+        np.testing.assert_array_equal(a.pruned_filter, b.pruned_filter)
+
+
+def test_matmul_impl_close_to_direct(index_small, queries_small):
+    """The MXU (matmul-decomposed) distance impl is numerically different
+    from the scan path but must agree to float tolerance and make identical
+    id choices on well-separated data."""
+    q = jnp.asarray(queries_small[:8])
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_F = jnp.full(d_lb.shape, -jnp.inf)
+    a = _run(index_small, q, d_lb, d_F, 5, "scan")
+    b = engine.run_cascade(
+        jnp.asarray(index_small.series), jnp.asarray(index_small.leaf_start),
+        jnp.asarray(index_small.leaf_size), q, d_lb, d_F,
+        k=5, max_leaf=index_small.max_leaf_size, strategy="compact",
+        dist_impl="matmul")
+    np.testing.assert_allclose(np.asarray(a.topk_d), np.asarray(b.topk_d),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(a.topk_i), np.asarray(b.topk_i))

@@ -1,6 +1,6 @@
 """Leaf-node selection: greedy rule (Alg. 3) vs the exact knapsack (Eq. 1)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import selection
 
