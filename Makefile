@@ -8,19 +8,32 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast bench bench-engine dev-deps
+.PHONY: test test-fast lint bench bench-engine bench-build dev-deps
 
-test:
+test: lint
 	python -m pytest -x -q
 
 test-fast:
 	python -m pytest -x -q -m "not slow"
 
+# ruff is a dev extra (requirements-dev.txt); the bare runtime image must
+# still pass `make test`, so a missing ruff degrades to a notice, not a
+# failure.  Config: ruff.toml.
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src benchmarks tests examples; \
+	else \
+		echo "lint: ruff not installed (make dev-deps); skipping"; \
+	fi
+
 bench:
 	python -m benchmarks.run --quick
 
 bench-engine:
-	python -m benchmarks.engine_bench --out experiments/engine_bench.json
+	python -m benchmarks.run --suite engine
+
+bench-build:
+	python -m benchmarks.run --suite build
 
 dev-deps:
 	pip install -r requirements-dev.txt

@@ -1,0 +1,130 @@
+"""Build-phase wall-clock: batched leaf-slab collection vs the seed path.
+
+The paper reports training-data generation as the largest build overhead
+(Alg. 1 steps 2–3), and the seed reproduced it with per-leaf Python loops:
+one RNG + ``dynamic_slice`` + masked-min dispatch per filter.  The engine's
+leaf-slab layer replaces those with single jitted chunked sweeps
+(``engine.nn_distance_all_leaves`` / ``nn_distance_own_leaf`` plus one
+vmapped RNG pass).  This benchmark builds a ≥64-filter index, runs both
+collection paths end to end, verifies they agree (the local-query samples
+bitwise, the distance targets to float tolerance), and records the
+speedup — per phase and total.
+
+    PYTHONPATH=src python -m benchmarks.build_bench \
+        --out experiments/build_bench.json
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import filter_training, tree
+
+from . import common
+
+
+def _timed(fn, repeat: int):
+    out, dt = common.timed(fn, repeat=repeat)
+    return out, dt * 1e3
+
+
+def bench_build(n: int = 30_000, m: int = 128, leaf_capacity: int = 192,
+                n_global: int = 400, n_local: int = 100,
+                repeat: int = 3) -> Tuple[List[str], Dict]:
+    rng = np.random.default_rng(1)
+    S = rng.standard_normal((n, m), dtype=np.float32).cumsum(axis=1)
+    index = tree.build_dstree(S, leaf_capacity=leaf_capacity)
+    sizes = np.asarray(index.leaf_size)
+    leaf_ids = np.arange(index.n_leaves)[sizes >= leaf_capacity // 4]
+    assert len(leaf_ids) >= 64, f"want ≥64 filters, got {len(leaf_ids)}"
+    key = jax.random.PRNGKey(0)
+    kg, kl = jax.random.split(key)
+    gq = filter_training.make_noisy_queries(S, n_global, kg)
+    gq_j = jnp.asarray(gq)
+
+    payload: Dict = {"n": n, "m": m, "L": index.n_leaves,
+                     "n_filters": int(len(leaf_ids)),
+                     "n_global": n_global, "n_local": n_local,
+                     "phases": {}}
+
+    # -- phase: local query generation (vmapped RNG vs per-leaf loop) -------
+    lq_new, t_new = _timed(lambda: jnp.asarray(filter_training.make_local_queries(
+        index, leaf_ids, n_local, kl)), repeat)
+    lq_ref, t_ref = _timed(lambda: jnp.asarray(
+        filter_training._reference_local_queries(
+            index, leaf_ids, n_local, kl)), repeat)
+    assert np.array_equal(np.asarray(lq_new), np.asarray(lq_ref))
+    payload["phases"]["local_queries"] = {
+        "batched_ms": t_new, "reference_ms": t_ref,
+        "speedup": t_ref / max(t_new, 1e-12), "parity": "bitwise"}
+    lq = np.asarray(lq_new)
+
+    # -- phase: local NN targets (slab sweep vs per-leaf dynamic_slice) -----
+    ld_new, t_new = _timed(lambda: jnp.asarray(
+        filter_training.local_nn_distances(index, lq, leaf_ids)), repeat)
+    ld_ref, t_ref = _timed(lambda: jnp.asarray(
+        filter_training._reference_local_nn_distances(
+            index, lq, leaf_ids)), repeat)
+    err = float(np.abs(np.asarray(ld_new) - np.asarray(ld_ref)).max())
+    payload["phases"]["local_nn"] = {
+        "batched_ms": t_new, "reference_ms": t_ref,
+        "speedup": t_ref / max(t_new, 1e-12), "max_abs_diff": err}
+
+    # -- phase: node-wise NN targets (slab sweep vs blocked segment-min) ----
+    dL_new, t_new = _timed(lambda: filter_training.nodewise_nn_distances(
+        index, gq_j), repeat)
+    dL_ref, t_ref = _timed(lambda: filter_training._reference_nodewise_nn_distances(
+        index, gq_j), repeat)
+    err = float(np.abs(np.asarray(dL_new) - np.asarray(dL_ref)).max())
+    payload["phases"]["nodewise_nn"] = {
+        "batched_ms": t_new, "reference_ms": t_ref,
+        "speedup": t_ref / max(t_new, 1e-12), "max_abs_diff": err}
+
+    # -- end-to-end collection (Alg. 1 steps 2-3) ---------------------------
+    def run_batched():
+        d = filter_training.collect_training_data(
+            index, leaf_ids, n_global, n_local, key)
+        return jnp.asarray(d.local_d_L)
+
+    def run_reference():
+        d = filter_training._reference_collect_training_data(
+            index, leaf_ids, n_global, n_local, key)
+        return jnp.asarray(d.local_d_L)
+
+    _, t_new = _timed(run_batched, repeat)
+    _, t_ref = _timed(run_reference, repeat)
+    payload["collect_batched_ms"] = t_new
+    payload["collect_reference_ms"] = t_ref
+    payload["collect_speedup"] = t_ref / max(t_new, 1e-12)
+
+    rows = [common.csv_line(
+        f"build_collect/{name}", rec["batched_ms"] * 1e3,
+        f"batched={rec['batched_ms']:.1f}ms;"
+        f"reference={rec['reference_ms']:.1f}ms;"
+        f"speedup={rec['speedup']:.2f}x")
+        for name, rec in payload["phases"].items()]
+    rows.append(common.csv_line(
+        "build_collect/total", payload["collect_batched_ms"] * 1e3,
+        f"batched={payload['collect_batched_ms']:.1f}ms;"
+        f"reference={payload['collect_reference_ms']:.1f}ms;"
+        f"speedup={payload['collect_speedup']:.2f}x;"
+        f"filters={payload['n_filters']}"))
+    return rows, payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/build_bench.json")
+    ap.add_argument("--n", type=int, default=30_000)
+    ap.add_argument("--repeat", type=int, default=3)
+    args = ap.parse_args()
+    rows, payload = bench_build(n=args.n, repeat=args.repeat)
+    common.write_suite_payload(rows, payload, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,17 +9,17 @@ matrices) are cached under experiments/bench_cache/.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import pickle
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, build, filter_training, search
-from repro.core.summaries import znormalize
+from repro.core import build, filter_training, search
 from repro.data.series import SERIES_GENERATORS, DEFAULT_LENGTHS, make_query_set
 
 CACHE_DIR = os.environ.get("BENCH_CACHE", "experiments/bench_cache")
@@ -125,13 +125,26 @@ def leafi_adjusted(setup: BenchSetup, noise: float,
 
 
 def timed(fn, *args, repeat: int = 3, **kw):
-    fn(*args, **kw)                                     # warmup / compile
+    # block the warmup too: async dispatch must not bleed into the window
+    jax.block_until_ready(fn(*args, **kw))              # warmup / compile
     t0 = time.perf_counter()
     for _ in range(repeat):
         out = fn(*args, **kw)
-    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    jax.block_until_ready(out)
     return out, (time.perf_counter() - t0) / repeat
 
 
 def csv_line(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def write_suite_payload(rows: List[str], payload: Dict, out: str) -> None:
+    """Shared suite emitter: print the CSV rows, dump the JSON payload."""
+    for r in rows:
+        print(r)
+    d = os.path.dirname(out)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"# → {out}")

@@ -19,8 +19,6 @@ ever sees a (Q, L) prediction matrix either way.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 from typing import Dict, List, Tuple
 
@@ -55,11 +53,11 @@ def bench_engine(n: int = 50_000, m: int = 128, leaf_capacity: int = 128,
     starts = jnp.asarray(index.leaf_start)
     sizes = jnp.asarray(index.leaf_size)
 
-    def run(strategy, d_F):
+    def run(strategy, d_F, dist_impl=None):
         res = engine.run_cascade(series, starts, sizes, q, d_lb,
                                  jnp.asarray(d_F), k=k,
                                  max_leaf=index.max_leaf_size,
-                                 strategy=strategy)
+                                 strategy=strategy, dist_impl=dist_impl)
         jax.block_until_ready(res.topk_d)
         return res
 
@@ -71,25 +69,32 @@ def bench_engine(n: int = 50_000, m: int = 128, leaf_capacity: int = 128,
         d_F = (np.full_like(lb_np, -np.inf) if keep is None
                else _rank_threshold_predictions(lb_np, keep))
         rec = {"level": name}
-        for strategy in ("scan", "compact"):
-            res = run(strategy, d_F)                      # warmup / compile
+        # "pairwise" = compact with the union-slab all-pairs candidate pass
+        # (the l2_scan Pallas kernel path on TPU; same matmul algebra off it)
+        plans = (("scan", "scan", None), ("compact", "compact", None),
+                 ("pairwise", "compact", "pairwise"))
+        for tag, strategy, dist_impl in plans:
+            res = run(strategy, d_F, dist_impl)           # warmup / compile
             t0 = time.perf_counter()
             for _ in range(repeat):
-                res = run(strategy, d_F)
+                res = run(strategy, d_F, dist_impl)
             dt = (time.perf_counter() - t0) / repeat
-            rec[f"{strategy}_ms"] = dt * 1e3
-            rec[f"{strategy}_searched"] = float(
+            rec[f"{tag}_ms"] = dt * 1e3
+            rec[f"{tag}_searched"] = float(
                 np.asarray(res.n_searched).mean())
-            rec[f"{strategy}_computed"] = float(
+            rec[f"{tag}_computed"] = float(
                 np.asarray(res.n_computed).mean())
         rec["pruning_ratio"] = 1.0 - rec["compact_searched"] / L
         rec["speedup"] = rec["scan_ms"] / max(rec["compact_ms"], 1e-12)
+        rec["speedup_pairwise"] = rec["scan_ms"] / max(rec["pairwise_ms"],
+                                                       1e-12)
         payload["levels"].append(rec)
         rows.append(common.csv_line(
             f"engine/{name}", rec["compact_ms"] * 1e3,
             f"prune={rec['pruning_ratio']:.3f};"
             f"scan={rec['scan_ms']:.1f}ms;"
             f"compact={rec['compact_ms']:.1f}ms;"
+            f"pairwise={rec['pairwise_ms']:.1f}ms;"
             f"speedup={rec['speedup']:.2f}x"))
     return rows, payload
 
@@ -101,12 +106,7 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=32)
     args = ap.parse_args()
     rows, payload = bench_engine(n=args.n, n_queries=args.queries)
-    for r in rows:
-        print(r)
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-    print(f"# → {args.out}")
+    common.write_suite_payload(rows, payload, args.out)
 
 
 if __name__ == "__main__":

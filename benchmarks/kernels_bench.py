@@ -7,16 +7,14 @@ not by wall-clock here.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.box_lb import ops as box_ops
-from repro.kernels.filter_mlp import ops as mlp_ops, ref as mlp_ref
-from repro.kernels.l2_scan import ops as l2_ops, ref as l2_ref
+from repro.kernels.filter_mlp import ref as mlp_ref
+from repro.kernels.l2_scan import ref as l2_ref
 from . import common
 
 

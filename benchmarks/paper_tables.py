@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, build, conformal, filter_training, filters
+from repro.core import baselines, filters
 from . import common
 
 

@@ -3,8 +3,14 @@
 Prints ``name,us_per_call,derived`` CSV rows and writes the full payloads to
 experiments/bench_results.json (EXPERIMENTS.md is generated from those).
 
-  PYTHONPATH=src python -m benchmarks.run            # full sweep
-  PYTHONPATH=src python -m benchmarks.run --quick    # randwalk-only
+  PYTHONPATH=src python -m benchmarks.run                  # full sweep
+  PYTHONPATH=src python -m benchmarks.run --quick          # randwalk-only
+  PYTHONPATH=src python -m benchmarks.run --suite build    # one suite only
+
+Standalone suites (``--suite``) run a single benchmark module and write its
+own experiments/ payload: ``build`` → build_bench (batched vs per-leaf
+training-data collection), ``engine`` → engine_bench (scan vs compact vs
+pairwise cascade execution).
 """
 from __future__ import annotations
 
@@ -13,7 +19,19 @@ import json
 import os
 import time
 
-from . import common, engine_bench, kernels_bench, paper_tables, wallclock
+from . import (build_bench, common, engine_bench, kernels_bench,
+               paper_tables, wallclock)
+
+SUITES = {
+    "build": (build_bench.bench_build, "experiments/build_bench.json"),
+    "engine": (engine_bench.bench_engine, "experiments/engine_bench.json"),
+}
+
+
+def _run_suite(name: str, out: str | None) -> None:
+    fn, default_out = SUITES[name]
+    rows, payload = fn()
+    common.write_suite_payload(rows, payload, out or default_out)
 
 
 def main() -> None:
@@ -22,8 +40,15 @@ def main() -> None:
                     help="randwalk-only, skips sweeps")
     ap.add_argument("--datasets", default=None,
                     help="comma-separated subset")
-    ap.add_argument("--out", default="experiments/bench_results.json")
+    ap.add_argument("--suite", default=None, choices=sorted(SUITES),
+                    help="run one registered suite and exit")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    if args.suite:
+        _run_suite(args.suite, args.out)
+        return
+    args.out = args.out or "experiments/bench_results.json"
 
     datasets = (args.datasets.split(",") if args.datasets
                 else (("randwalk",) if args.quick else common.DATASETS))

@@ -12,7 +12,6 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Tuple
 
-import numpy as np
 
 from repro.core import search
 from . import common

@@ -11,7 +11,6 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
 
 from repro.core import build, filter_training
 from repro.data.series import make_query_set, make_series_dataset

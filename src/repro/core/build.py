@@ -6,6 +6,16 @@
     4. train all filters (vmapped SGD)                           [filter_training.py]
     5. fit conformal auto-tuners on the calibration split        [conformal.py]
 
+Steps 3–5 — the build-cost hot path the paper identifies (training-data
+generation dominates build overhead) — all run on the engine's leaf-slab
+batch layer: target collection is two jitted chunked sweeps over padded
+leaf slabs (:func:`engine.nn_distance_all_leaves` /
+:func:`engine.nn_distance_own_leaf`, the Pallas all-pairs kernel on TPU),
+and calibration replays the same bsf cascade the search engine uses
+(:func:`engine.replay_cascade` via ``conformal.simulate_search``).  No step
+iterates leaves in Python; ``benchmarks/build_bench.py`` tracks the gap to
+the seed per-leaf reference path.
+
 The returned LeaFiIndex is a pytree: it jits, shards, and checkpoints.
 """
 from __future__ import annotations
@@ -18,8 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import (bounds as bounds_mod, conformal, filter_training, filters,
-               search, selection, tree)
+from . import conformal, filter_training, filters, search, selection, tree
 from .flat_index import FlatIndex
 
 

@@ -12,18 +12,20 @@ query time.
 The search simulation is exact w.r.t. Alg. 2 semantics: it replays the
 lower-bound-ordered visit with the pruning cascade on the precollected
 (d_lb, d_f, d_L) matrices, so no series data is touched during calibration.
+The cascade itself lives in :func:`repro.core.engine.replay_cascade` — the
+same code path the compact search engine replays over candidate summaries —
+so calibration and search can never drift apart on pruning semantics.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-_INF = jnp.float32(jnp.inf)
+from . import engine
 
 
 # ---------------------------------------------------------------------------
@@ -31,30 +33,27 @@ _INF = jnp.float32(jnp.inf)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
 def simulate_search(d_lb: jnp.ndarray, d_pred: jnp.ndarray,
-                    offsets: jnp.ndarray, d_L: jnp.ndarray,
-                    k: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                    offsets: jnp.ndarray, d_L: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Replay Alg. 2 on precollected matrices.
 
     d_lb, d_pred, d_L: (Q, L); d_pred is +inf where a leaf has no filter.
     offsets: (L,) conformal adjustments (0 where no filter).
     Returns (bsf_final (Q,), searched_count (Q,)).
+
+    Thin adapter over the engine's shared cascade replay: each leaf's
+    precollected NN distance d_L is its k=1 "summary", so the engine replays
+    the identical prune/merge decisions it makes during search — this module
+    no longer owns a second copy of the bsf cascade.
     """
-    order = jnp.argsort(d_lb, axis=1)
     d_F = d_pred - offsets[None, :]
-
-    def per_query(lb_row, dF_row, dL_row, order_row):
-        def step(carry, leaf):
-            bsf, searched = carry
-            prune = (lb_row[leaf] > bsf) | (dF_row[leaf] > bsf)
-            bsf = jnp.where(prune, bsf, jnp.minimum(bsf, dL_row[leaf]))
-            return (bsf, searched + (~prune).astype(jnp.int32)), None
-
-        (bsf, searched), _ = jax.lax.scan(step, (_INF, 0), order_row)
-        return bsf, searched
-
-    return jax.vmap(per_query)(d_lb, d_F, d_L, order)
+    order = jnp.argsort(d_lb, axis=1)
+    leaf_d = d_L[..., None]                              # (Q, L, 1)
+    leaf_i = jnp.zeros(leaf_d.shape, jnp.int32)
+    bsf, _, n_s, _, _ = engine.replay_cascade(
+        leaf_d, leaf_i, d_lb, d_F, order, k=1)
+    return bsf[:, 0], n_s
 
 
 def recall_at_1(bsf_final: jnp.ndarray, d_nn: jnp.ndarray,

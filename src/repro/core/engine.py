@@ -62,6 +62,15 @@ The reported ``searched``/``pruned_*`` counters follow the paper's
 searched-leaf accounting of the sequential cascade (both strategies agree
 exactly); ``computed`` additionally reports how many leaves the compact
 engine actually paid distance compute for (the phase-1 superset).
+
+The same leaf-slab layer serves the *build* side (paper Alg. 1 steps 2–5):
+``nn_distance_all_leaves`` / ``nn_distance_own_leaf`` are the batched
+training-target passes filter_training routes through (no per-leaf Python
+loops), and ``replay_cascade`` is the one copy of the bsf cascade that
+conformal calibration replays on precollected matrices.  The compact search
+path additionally accepts ``dist_impl="pairwise"``: each bucket's survivor
+leaves union into one shared slab scored by the ``l2_scan`` Pallas kernel
+all-pairs (ROADMAP follow-up; float-tolerance parity like ``matmul``).
 """
 from __future__ import annotations
 
@@ -183,7 +192,7 @@ def _bucket_leaf_topk(series, leaf_start, leaf_size, queries_b, leaf_b,
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def _replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k):
+def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k):
     """Exact sequential-cascade replay over per-leaf top-k summaries.
 
     Identical decision logic and merge arithmetic to ``_scan_cascade`` — the
@@ -191,6 +200,11 @@ def _replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k):
     of (running top-k ∪ all the leaf's distances), and ties resolve the same
     way because the running top-k precedes the leaf block in both concats —
     but each step merges k values instead of computing max_leaf·m distances.
+
+    This is the single copy of the bsf cascade's decision logic: the compact
+    search strategy runs it over gathered candidate summaries, and conformal
+    calibration (``conformal.simulate_search``) runs it with k=1 over the
+    precollected d_L matrices — no series data touched.
     """
 
     def per_query(ld, li, lb_row, dF_row, order_row):
@@ -217,13 +231,59 @@ def _replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k):
     return jax.vmap(per_query)(leaf_d, leaf_i, d_lb, d_F, order)
 
 
-def _chunk_for(Qb: int, C: int, max_leaf: int, m: int) -> int:
-    """Power-of-two leaf-chunk width bounding the gathered slab to
-    ~_CHUNK_BYTES (the caller pads C up to a multiple of it)."""
-    per_leaf = max(Qb * max_leaf * m * 4, 1)
-    chunk = max(_CHUNK_BYTES // per_leaf, 1)
+def _pow2_chunk(per_leaf_bytes: int, cap: int) -> int:
+    """Power-of-two leaf-chunk width keeping a per-step working set of
+    ``chunk · per_leaf_bytes`` around ~_CHUNK_BYTES (capped at ``cap``; the
+    caller pads its leaf axis up to a multiple of the result)."""
+    chunk = max(_CHUNK_BYTES // max(per_leaf_bytes, 1), 1)
     chunk = 1 << (int(chunk).bit_length() - 1)           # pow2 floor
-    return min(chunk, _next_pow2(C))
+    return min(chunk, cap)
+
+
+def _chunk_for(Qb: int, C: int, max_leaf: int, m: int) -> int:
+    """Chunk width for per-query gathered slabs ((Qb, chunk, R, m) f32)."""
+    return _pow2_chunk(Qb * max_leaf * m * 4, _next_pow2(C))
+
+
+def _union_chunk_for(Qb: int, U: int, max_leaf: int, m: int) -> int:
+    """Chunk width for the shared union slab: one (chunk·R, m) slab plus a
+    (Qb, chunk·R) distance block per step."""
+    return _pow2_chunk((max_leaf * m + Qb * max_leaf) * 4, _next_pow2(U))
+
+
+@functools.partial(jax.jit, static_argnames=("kk", "max_leaf", "chunk"))
+def _union_leaf_topk(series, leaf_start, leaf_size, queries_b, leaf_u,
+                     kk, max_leaf, chunk):
+    """Per-leaf k-smallest distances over a *shared* survivor-leaf union.
+
+    queries_b: (Qb, m); leaf_u: (U,) the union of the bucket's survivor leaf
+    ids (padded with L), U a multiple of ``chunk``.  Every query is scored
+    against every union leaf through one all-pairs ``l2_scan`` call per chunk
+    — the Pallas kernel path on TPU — trading the per-query gather of
+    ``_bucket_leaf_topk`` for kernel-tiled MXU sweeps over one shared slab.
+    Returns (vals (Qb, U, kk), ids (Qb, U, kk)) with +inf/−1 padding.
+    """
+    Qb = queries_b.shape[0]
+    U = leaf_u.shape[0]
+
+    def step(i, acc):
+        vals_acc, ids_acc = acc
+        lu = jax.lax.dynamic_slice_in_dim(leaf_u, i * chunk, chunk, 0)
+        slabs, rows, valid = l2_ops.gather_leaf_slabs(
+            series, leaf_start, leaf_size, lu, max_leaf)
+        d = l2_ops.shared_slab_l2(queries_b, slabs, "pairwise")  # (Qb, c, R)
+        d = jnp.where(valid[None, :, :], d, _INF)
+        vals, ids = l2_ops.leaf_topk(
+            d, jnp.broadcast_to(rows[None], d.shape), kk)
+        ids = jnp.where(jnp.isfinite(vals), ids, -1)
+        vals_acc = jax.lax.dynamic_update_slice_in_dim(vals_acc, vals,
+                                                       i * chunk, 1)
+        ids_acc = jax.lax.dynamic_update_slice_in_dim(ids_acc, ids,
+                                                      i * chunk, 1)
+        return vals_acc, ids_acc
+
+    init = (jnp.full((Qb, U, kk), _INF), jnp.full((Qb, U, kk), -1, jnp.int32))
+    return jax.lax.fori_loop(0, U // chunk, step, init)
 
 
 def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
@@ -234,16 +294,21 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
     order = jnp.argsort(d_lb, axis=1)                    # (Q, L)
 
     # -- phase 1: probe the best-lb leaf, mask survivors --------------------
+    # (the probe is per-query-gathered either way; under dist_impl="pairwise"
+    # it uses the same ‖q‖²+‖s‖²−2qs algebra as the shared-slab kernel, and
+    # its values are written verbatim below so the replay stays consistent)
+    probe_impl = "matmul" if dist_impl == "pairwise" else dist_impl
     leaf0 = order[:, :1]                                 # (Q, 1)
     p_vals, p_ids = _bucket_leaf_topk(
         series, leaf_start, leaf_size, queries, leaf0,
-        kk=kk, max_leaf=max_leaf, chunk=1, dist_impl=dist_impl)
+        kk=kk, max_leaf=max_leaf, chunk=1, dist_impl=probe_impl)
     bsf0 = p_vals[:, 0, k - 1] if k <= kk else jnp.full((Q,), _INF)
     mask = (d_lb <= bsf0[:, None]) & (d_F <= bsf0[:, None])
     mask = mask.at[jnp.arange(Q), leaf0[:, 0]].set(True)
 
     # -- phase 2: bucket queries by survivor count, compact leaf lists ------
     counts = np.asarray(mask.sum(axis=1))
+    computed = counts.astype(np.int32).copy()            # per-query paid leaves
     leaf_d = jnp.full((Q, L, kk), _INF)
     leaf_i = jnp.full((Q, L, kk), -1, jnp.int32)
     # survivors first, in ascending-lb order (argsort of bool is stable)
@@ -256,8 +321,6 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
 
     for C, qis in sorted(buckets.items()):
         Qb = _next_pow2(len(qis))
-        chunk = _chunk_for(Qb, C, max_leaf, m)
-        Cp = -(-C // chunk) * chunk                      # pad C to chunks
         qidx = jnp.asarray((qis + [qis[0]] * (Qb - len(qis)))[:Qb])
         pad_q = jnp.arange(Qb) >= len(qis)
         sel = sel_all[qidx][:, :C]                       # (Qb, C)
@@ -265,16 +328,41 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
         valid = valid & ~pad_q[:, None]
         leaf = jnp.where(valid,
                          jnp.take_along_axis(order[qidx], sel, axis=1), L)
-        if Cp > C:                                       # invalid-slot pad
-            leaf = jnp.pad(leaf, ((0, 0), (0, Cp - C)), constant_values=L)
-        vals, ids = _bucket_leaf_topk(
-            series, leaf_start, leaf_size, queries[qidx], leaf,
-            kk=kk, max_leaf=max_leaf, chunk=chunk, dist_impl=dist_impl)
+        if dist_impl == "pairwise":
+            # union the bucket's survivor leaves into one shared slab and
+            # run the all-pairs l2_scan kernel over it; leaves that are not
+            # a given query's survivors come along for free but their
+            # summaries are never consulted (the replay prunes them — their
+            # d_lb/d_F exceeded that query's bsf0, and bsf only decreases).
+            leaf_np = np.asarray(leaf)
+            uni = np.unique(leaf_np[leaf_np < L])
+            if uni.size == 0:
+                continue                                 # all-padding bucket
+            # every bucket query pays distance compute for the whole union
+            computed[qis] = uni.size
+            chunk = _union_chunk_for(Qb, uni.size, max_leaf, m)
+            Up = max(_next_pow2(uni.size), chunk)
+            leaf_u = jnp.asarray(np.pad(uni, (0, Up - uni.size),
+                                        constant_values=L))
+            vals, ids = _union_leaf_topk(
+                series, leaf_start, leaf_size, queries[qidx], leaf_u,
+                kk=kk, max_leaf=max_leaf, chunk=chunk)
+            # padded queries must not scatter: aim their writes at leaf L
+            leaf_sc = jnp.where(pad_q[:, None], L, leaf_u[None, :])
+        else:
+            chunk = _chunk_for(Qb, C, max_leaf, m)
+            Cp = -(-C // chunk) * chunk                  # pad C to chunks
+            if Cp > C:                                   # invalid-slot pad
+                leaf = jnp.pad(leaf, ((0, 0), (0, Cp - C)), constant_values=L)
+            vals, ids = _bucket_leaf_topk(
+                series, leaf_start, leaf_size, queries[qidx], leaf,
+                kk=kk, max_leaf=max_leaf, chunk=chunk, dist_impl=dist_impl)
+            leaf_sc = leaf
         # scatter into the (Q, L, kk) summaries; leaf==L slots drop
-        leaf_d = leaf_d.at[qidx[:, None, None], leaf[:, :, None],
+        leaf_d = leaf_d.at[qidx[:, None, None], leaf_sc[:, :, None],
                            jnp.arange(kk)[None, None, :]].set(
                                vals, mode="drop")
-        leaf_i = leaf_i.at[qidx[:, None, None], leaf[:, :, None],
+        leaf_i = leaf_i.at[qidx[:, None, None], leaf_sc[:, :, None],
                            jnp.arange(kk)[None, None, :]].set(
                                ids, mode="drop")
 
@@ -287,9 +375,9 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
                        jnp.arange(kk)[None, None, :]].set(p_ids)
 
     # -- phase 3: exact cascade replay over the per-leaf summaries ----------
-    td, ti, n_s, n_plb, n_pf = _replay_cascade(
+    td, ti, n_s, n_plb, n_pf = replay_cascade(
         leaf_d, leaf_i, d_lb, d_F, order, k=k)
-    return td, ti, n_s, n_plb, n_pf, jnp.asarray(counts, jnp.int32)
+    return td, ti, n_s, n_plb, n_pf, jnp.asarray(computed)
 
 
 # ---------------------------------------------------------------------------
@@ -320,8 +408,12 @@ def run_cascade(
     to float tolerance — pass dist_impl="direct" there if exact replay
     parity matters more than throughput.  See the module docstring for the
     cost model.
-    dist_impl: "direct" | "matmul" | None (backend default) — forwarded to
-    ``kernels.l2_scan.ops.gathered_leaf_l2`` on the compact path.
+    dist_impl: "direct" | "matmul" | "pairwise" | None (backend default) —
+    forwarded to the compact candidate pass.  "pairwise" unions each
+    bucket's survivor leaves into one shared slab and runs the ``l2_scan``
+    Pallas kernel all-pairs over it (kernel-tiled MXU use, float-tolerance
+    parity like "matmul"; off-TPU it lowers to the same matmul algebra);
+    "direct"/"matmul" gather per-query candidate slabs instead.
     """
     if strategy == "auto":
         strategy = "compact"
@@ -337,6 +429,114 @@ def run_cascade(
     else:
         raise ValueError(f"unknown engine strategy {strategy!r}")
     return EngineResult(td, ti, n_s, n_plb, n_pf, n_c)
+
+
+# ---------------------------------------------------------------------------
+# leaf-slab build passes (filter_training's training-data collection)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_leaf", "chunk", "dist_impl"))
+def _all_leaves_min(series, leaf_start, leaf_size, queries,
+                    max_leaf, chunk, dist_impl):
+    Q = queries.shape[0]
+    L = leaf_start.shape[0]
+    Lp = -(-L // chunk) * chunk
+    leaf_ids = jnp.arange(Lp)                            # ids ≥ L are padding
+
+    def step(i, out):
+        lu = jax.lax.dynamic_slice_in_dim(leaf_ids, i * chunk, chunk, 0)
+        slabs, _, valid = l2_ops.gather_leaf_slabs(
+            series, leaf_start, leaf_size, lu, max_leaf)
+        d = l2_ops.shared_slab_l2(queries, slabs, dist_impl)  # (Q, c, R)
+        dmin = jnp.where(valid[None, :, :], d, _INF).min(-1)  # (Q, c)
+        return jax.lax.dynamic_update_slice_in_dim(out, dmin, i * chunk, 1)
+
+    out = jax.lax.fori_loop(0, Lp // chunk, step, jnp.full((Q, Lp), _INF))
+    return out[:, :L]
+
+
+def nn_distance_all_leaves(
+    series: jnp.ndarray,
+    leaf_start: jnp.ndarray,
+    leaf_size: jnp.ndarray,
+    queries: jnp.ndarray,          # (Q, m)
+    *,
+    max_leaf: int,
+    dist_impl: Optional[str] = None,
+    chunk: Optional[int] = None,
+) -> jnp.ndarray:
+    """Min distance from every query to every leaf → (Q, L).
+
+    The build side's "first pass" (paper Alg. 1 target collection), as one
+    jitted sweep over the padded leaf-slab layer: leaves stream through in
+    cache-resident chunks (same budget as the compact engine's candidate
+    buckets), each scored by ``shared_slab_l2`` — the ``pairwise`` Pallas
+    kernel on TPU, its matmul decomposition elsewhere — and masked-min
+    reduced.  No per-leaf Python iteration, no per-leaf retracing.
+    """
+    Q, m = queries.shape
+    L = leaf_start.shape[0]
+    dist_impl = dist_impl or l2_ops.default_slab_impl()
+    if chunk is None:
+        chunk = _pow2_chunk((Q * max_leaf + max_leaf * m) * 4,
+                            _next_pow2(L))
+    return _all_leaves_min(series, leaf_start, leaf_size, queries,
+                           max_leaf=max_leaf, chunk=chunk,
+                           dist_impl=dist_impl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_leaf", "chunk", "dist_impl"))
+def _own_leaf_min(series, leaf_start, leaf_size, local_queries, leaf_ids,
+                  max_leaf, chunk, dist_impl):
+    F, nq, m = local_queries.shape
+    L = leaf_start.shape[0]
+    Fp = -(-F // chunk) * chunk
+    ids_p = jnp.pad(jnp.asarray(leaf_ids), (0, Fp - F), constant_values=L)
+    q_p = jnp.pad(local_queries, ((0, Fp - F), (0, 0), (0, 0)))
+
+    def step(i, out):
+        ids = jax.lax.dynamic_slice_in_dim(ids_p, i * chunk, chunk, 0)
+        qs = jax.lax.dynamic_slice_in_dim(q_p, i * chunk, chunk, 0)
+        slabs, _, valid = l2_ops.gather_leaf_slabs(
+            series, leaf_start, leaf_size, ids, max_leaf)
+        d = l2_ops.slab_l2(qs, slabs, dist_impl)              # (c, nq, R)
+        dmin, _ = l2_ops.slab_masked_min(d, valid)            # (c, nq)
+        return jax.lax.dynamic_update_slice_in_dim(out, dmin, i * chunk, 0)
+
+    out = jax.lax.fori_loop(0, Fp // chunk, step, jnp.full((Fp, nq), _INF))
+    return out[:F]
+
+
+def nn_distance_own_leaf(
+    series: jnp.ndarray,
+    leaf_start: jnp.ndarray,
+    leaf_size: jnp.ndarray,
+    local_queries: jnp.ndarray,    # (F, nq, m) per-leaf query batches
+    leaf_ids: jnp.ndarray,         # (F,)
+    *,
+    max_leaf: int,
+    dist_impl: Optional[str] = None,
+    chunk: Optional[int] = None,
+) -> jnp.ndarray:
+    """Min distance of each leaf's own query batch to that leaf → (F, nq).
+
+    The build side's local-query target pass: one jitted sweep where every
+    selected leaf's slab is gathered once and scored against its own noisy
+    queries via the vmapped slab primitives (``slab_l2`` — the batched
+    ``slab_l2_kernel`` Pallas path on TPU).  Replaces the seed's per-leaf
+    ``dynamic_slice`` loop, which retraced and dispatched once per filter.
+    """
+    F, nq, m = local_queries.shape
+    dist_impl = dist_impl or l2_ops.default_slab_impl()
+    if chunk is None:
+        chunk = _pow2_chunk((nq * max_leaf + max_leaf * m + nq * m) * 4,
+                            _next_pow2(max(F, 1)))
+    return _own_leaf_min(series, leaf_start, leaf_size, local_queries,
+                         jnp.asarray(leaf_ids), max_leaf=max_leaf,
+                         chunk=chunk, dist_impl=dist_impl)
 
 
 # ---------------------------------------------------------------------------

@@ -2,10 +2,17 @@
 
 Two-fold query generation:
 * *global* queries — noisy uniform samples of the whole collection, searched
-  against every leaf (one blocked pairwise-distance pass + a segment-min —
-  the paper's "two-pass" collection strategy in array form);
+  against every leaf;
 * *local*  queries — noisy samples of each selected leaf, searched only
   against their own leaf.
+
+Both collection passes run on the engine's leaf-slab batch layer
+(:mod:`repro.core.engine`): local queries are sampled by one vmapped RNG
+sweep and both target passes are single jitted chunked sweeps over padded
+(F, R, m) leaf slabs — no per-leaf Python iteration, no per-leaf retracing.
+The seed's per-leaf forms are kept as ``_reference_*`` oracles; the parity
+suite (tests/test_build_pipeline.py) pins the batched paths to them, and
+``benchmarks/build_bench.py`` measures the gap.
 
 Training runs every filter simultaneously: parameters are stacked on a
 leading F axis and the SGD step is vmapped over it — the TPU-native
@@ -15,13 +22,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import filters, summaries
+from . import engine, filters, summaries
 from .flat_index import FlatIndex
 from . import bounds as bounds_mod
 from ..kernels.l2_scan import ops as l2_ops
@@ -46,10 +53,99 @@ def make_noisy_queries(series: np.ndarray, n_queries: int, key: jax.Array,
     return np.asarray(summaries.znormalize(np.asarray(noisy)))
 
 
+@functools.partial(jax.jit, static_argnames=("n_per_leaf", "m"))
+def _sample_local_rng(sizes, keys, n_per_leaf, m, noise_low, noise_high):
+    """One vmapped sweep of the per-leaf RNG recipe → (rows, lvl, noise).
+
+    Per filter: split its key exactly as the reference loop does, draw row
+    indices within the leaf, one noise level per query, gaussian noise — the
+    per-key PRNG streams are identical to the sequential version, so every
+    draw matches it bitwise.
+    """
+
+    def one(key, size):
+        kidx, knoise, klvl = jax.random.split(key, 3)
+        rows = jax.random.randint(kidx, (n_per_leaf,), 0, size)
+        lvl = jax.random.uniform(klvl, (n_per_leaf, 1), minval=noise_low,
+                                 maxval=noise_high)
+        noise = jax.random.normal(knoise, (n_per_leaf, m))
+        return rows, lvl, noise
+
+    return jax.vmap(one)(keys, sizes)
+
+
 def make_local_queries(index: FlatIndex, leaf_ids: np.ndarray, n_per_leaf: int,
                        key: jax.Array, noise_low: float = 0.1,
                        noise_high: float = 0.4) -> np.ndarray:
-    """(F, n_per_leaf, m) noisy samples drawn from each selected leaf."""
+    """(F, n_per_leaf, m) noisy samples drawn from each selected leaf.
+
+    Batched: one jitted vmapped RNG sweep plus one vectorized gather/add
+    replace the seed's per-leaf host loop (kept as
+    :func:`_reference_local_queries`).  The RNG key schedule is unchanged
+    and the noisy-sum stays in numpy (same elementwise rounding, no XLA FMA
+    refusion), so the output is bitwise-identical to the reference.
+    """
+    leaf_ids = np.asarray(leaf_ids)
+    keys = jax.random.split(key, len(leaf_ids))
+    sizes = jnp.asarray(index.leaf_size)[leaf_ids]
+    rows, lvl, noise = _sample_local_rng(
+        sizes, keys, n_per_leaf, index.length,
+        jnp.float32(noise_low), jnp.float32(noise_high))
+    rows = np.asarray(rows) + np.asarray(index.leaf_start)[leaf_ids][:, None]
+    noisy = np.asarray(index.series)[rows] \
+        + np.asarray(lvl) * np.asarray(noise)
+    return summaries.znormalize(noisy)
+
+
+# ---------------------------------------------------------------------------
+# Target collection ("two-pass" search, array form)
+# ---------------------------------------------------------------------------
+
+
+def nodewise_nn_distances(index: FlatIndex, queries: jnp.ndarray,
+                          dist_impl: Optional[str] = None) -> jnp.ndarray:
+    """d_L for every (query, leaf): (Q, L).
+
+    The paper's first collection pass — every leaf searched for every query
+    — as one jitted sweep over the engine's leaf-slab layer: leaves stream
+    through in cache-resident chunks, scored all-pairs (the ``l2_scan``
+    Pallas kernel on TPU, its matmul decomposition elsewhere) and masked-min
+    reduced per leaf.
+    """
+    queries = jnp.atleast_2d(jnp.asarray(queries))
+    return engine.nn_distance_all_leaves(
+        jnp.asarray(index.series), jnp.asarray(index.leaf_start),
+        jnp.asarray(index.leaf_size), queries,
+        max_leaf=index.max_leaf_size, dist_impl=dist_impl)
+
+
+def local_nn_distances(index: FlatIndex, local_queries: np.ndarray,
+                       leaf_ids: np.ndarray,
+                       dist_impl: Optional[str] = None) -> np.ndarray:
+    """d_L of each local query against its own leaf only: (F, n_loc).
+
+    One jitted chunked sweep over the gathered (F, R, m) leaf slabs
+    (:func:`engine.nn_distance_own_leaf`) instead of a per-leaf
+    ``dynamic_slice`` loop.
+    """
+    return np.asarray(engine.nn_distance_own_leaf(
+        jnp.asarray(index.series), jnp.asarray(index.leaf_start),
+        jnp.asarray(index.leaf_size), jnp.asarray(local_queries),
+        np.asarray(leaf_ids), max_leaf=index.max_leaf_size,
+        dist_impl=dist_impl))
+
+
+# ---------------------------------------------------------------------------
+# Seed per-leaf reference paths — the oracles the batched collection is
+# pinned against (tests/test_build_pipeline.py, benchmarks/build_bench.py).
+# ---------------------------------------------------------------------------
+
+
+def _reference_local_queries(index: FlatIndex, leaf_ids: np.ndarray,
+                             n_per_leaf: int, key: jax.Array,
+                             noise_low: float = 0.1,
+                             noise_high: float = 0.4) -> np.ndarray:
+    """Seed per-leaf loop for :func:`make_local_queries` (bitwise oracle)."""
     out = np.empty((len(leaf_ids), n_per_leaf, index.length), np.float32)
     keys = jax.random.split(key, len(leaf_ids))
     series = np.asarray(index.series)
@@ -67,19 +163,9 @@ def make_local_queries(index: FlatIndex, leaf_ids: np.ndarray, n_per_leaf: int,
     return out
 
 
-# ---------------------------------------------------------------------------
-# Target collection ("two-pass" search, array form)
-# ---------------------------------------------------------------------------
-
-
-def nodewise_nn_distances(index: FlatIndex, queries: jnp.ndarray,
-                          block: int = 4096) -> jnp.ndarray:
-    """d_L for every (query, leaf): (Q, L).
-
-    One blocked pairwise pass over the leaf-sorted collection, followed by a
-    per-leaf segment-min — equivalent to searching every leaf for every query
-    (the paper's first pass), but expressed as a single MXU-friendly sweep.
-    """
+def _reference_nodewise_nn_distances(index: FlatIndex, queries: jnp.ndarray,
+                                     block: int = 4096) -> jnp.ndarray:
+    """Seed blocked pairwise pass + segment-min for nodewise targets."""
     queries = jnp.atleast_2d(jnp.asarray(queries))
     n, L = index.n_series, index.n_leaves
     series = jnp.asarray(index.series)[:n]
@@ -96,9 +182,10 @@ def nodewise_nn_distances(index: FlatIndex, queries: jnp.ndarray,
     return jnp.stack(mins).min(axis=0).T                      # (Q, L)
 
 
-def local_nn_distances(index: FlatIndex, local_queries: np.ndarray,
-                       leaf_ids: np.ndarray) -> np.ndarray:
-    """d_L of each local query against its own leaf only: (F, n_loc)."""
+def _reference_local_nn_distances(index: FlatIndex,
+                                  local_queries: np.ndarray,
+                                  leaf_ids: np.ndarray) -> np.ndarray:
+    """Seed per-leaf ``dynamic_slice`` loop for the local targets."""
     series = jnp.asarray(index.series)
     starts = np.asarray(index.leaf_start)
     sizes = np.asarray(index.leaf_size)
@@ -125,15 +212,33 @@ class TrainingData:
 
 def collect_training_data(index: FlatIndex, leaf_ids: np.ndarray,
                           n_global: int, n_local: int, key: jax.Array,
-                          noise_low: float = 0.1, noise_high: float = 0.4
-                          ) -> TrainingData:
+                          noise_low: float = 0.1, noise_high: float = 0.4,
+                          dist_impl: Optional[str] = None) -> TrainingData:
+    """Alg. 1 steps 2–3 on the engine's leaf-slab layer (batched passes)."""
     kg, kl = jax.random.split(key)
     gq = make_noisy_queries(np.asarray(index.series[: index.n_series]),
                             n_global, kg, noise_low, noise_high)
-    d_L = np.asarray(nodewise_nn_distances(index, jnp.asarray(gq)))
+    d_L = np.asarray(nodewise_nn_distances(index, jnp.asarray(gq), dist_impl))
     d_lb = np.asarray(bounds_mod.lower_bounds(index, jnp.asarray(gq)))
     lq = make_local_queries(index, leaf_ids, n_local, kl, noise_low, noise_high)
-    ld = local_nn_distances(index, lq, leaf_ids)
+    ld = local_nn_distances(index, lq, leaf_ids, dist_impl)
+    return TrainingData(gq, d_L, d_lb, lq, ld, np.asarray(leaf_ids))
+
+
+def _reference_collect_training_data(index: FlatIndex, leaf_ids: np.ndarray,
+                                     n_global: int, n_local: int,
+                                     key: jax.Array,
+                                     noise_low: float = 0.1,
+                                     noise_high: float = 0.4) -> TrainingData:
+    """Seed per-leaf collection, kept as the parity/benchmark baseline."""
+    kg, kl = jax.random.split(key)
+    gq = make_noisy_queries(np.asarray(index.series[: index.n_series]),
+                            n_global, kg, noise_low, noise_high)
+    d_L = np.asarray(_reference_nodewise_nn_distances(index, jnp.asarray(gq)))
+    d_lb = np.asarray(bounds_mod.lower_bounds(index, jnp.asarray(gq)))
+    lq = _reference_local_queries(index, leaf_ids, n_local, kl,
+                                  noise_low, noise_high)
+    ld = _reference_local_nn_distances(index, lq, leaf_ids)
     return TrainingData(gq, d_L, d_lb, lq, ld, np.asarray(leaf_ids))
 
 

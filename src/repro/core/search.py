@@ -51,7 +51,8 @@ class SearchResult:
     pruned_filter: np.ndarray    # (Q,) leaves pruned by learned filters
     n_leaves: int
     # leaves the engine paid distance compute for (== n_leaves on the scan
-    # strategy; the phase-1 survivor superset on the compact strategy)
+    # strategy; the phase-1 survivor superset on the compact strategy, the
+    # bucket's survivor union under dist_impl="pairwise")
     computed: Optional[np.ndarray] = None
 
     @property

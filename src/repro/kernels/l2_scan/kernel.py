@@ -70,3 +70,63 @@ def pairwise_l2_kernel(
         ) if not interpret else None,
         interpret=interpret,
     )(queries, series, q_norms, s_norms)
+
+
+def _slab_l2_kernel(q_ref, s_ref, qn_ref, sn_ref, o_ref, *, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    s = s_ref[0].astype(jnp.float32)
+    o_ref[0] += -2.0 * jax.lax.dot_general(
+        q, s, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        d2 = o_ref[0] + qn_ref[0].T + sn_ref[0]
+        o_ref[0] = jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def slab_l2_kernel(
+    queries: jnp.ndarray,          # (F, Nq, m) per-slab query batches
+    slabs: jnp.ndarray,            # (F, R, m) padded leaf slabs
+    q_norms: jnp.ndarray,          # (F, 1, Nq) squared norms
+    s_norms: jnp.ndarray,          # (F, 1, R)
+    *,
+    bq: int = 128,
+    bb: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched pairwise-L2 over stacked leaf slabs → (F, Nq, R).
+
+    The slab axis F rides as a leading parallel grid dimension (block width
+    1): each grid step runs the same ‖q‖²+‖s‖²−2·q·sᵀ accumulation as
+    :func:`pairwise_l2_kernel` on one slab's tile, so the F filters of the
+    build pipeline share a single kernel launch instead of F dispatches.
+    """
+    F, Nq, m = queries.shape
+    _, R, _ = slabs.shape
+    nk = m // bk
+    grid = (F, Nq // bq, R // bb, nk)
+    return pl.pallas_call(
+        functools.partial(_slab_l2_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, bk), lambda f, i, j, k: (f, i, k)),
+            pl.BlockSpec((1, bb, bk), lambda f, i, j, k: (f, j, k)),
+            pl.BlockSpec((1, 1, bq), lambda f, i, j, k: (f, 0, i)),
+            pl.BlockSpec((1, 1, bb), lambda f, i, j, k: (f, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, bb), lambda f, i, j, k: (f, i, j)),
+        out_shape=jax.ShapeDtypeStruct((F, Nq, R), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=(
+                "parallel", "parallel", "parallel", "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(queries, slabs, q_norms, s_norms)

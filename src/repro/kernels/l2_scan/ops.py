@@ -133,5 +133,144 @@ def leaf_topk(
     return -neg, jnp.take_along_axis(rows, arg, axis=-1).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Leaf-slab batch layer: padded (F, R, m) gathers + vmapped masked primitives.
+# The build pipeline (filter_training via core/engine.py) and the engine's
+# pairwise candidate pass are expressed on these instead of per-leaf loops.
+# ---------------------------------------------------------------------------
+
+
+def gather_leaf_slabs(
+    series: jnp.ndarray,           # (n + max_leaf, m) leaf-sorted, padded
+    leaf_start: jnp.ndarray,       # (L,)
+    leaf_size: jnp.ndarray,        # (L,)
+    leaf_ids: jnp.ndarray,         # (F,) — ids == L are invalid sentinels
+    max_leaf: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Padded leaf slabs for a batch of leaves.
+
+    Returns (slabs (F, R, m), rows (F, R) global row ids, valid (F, R)).
+    Invalid leaf ids (== L, the engine's padding convention) clamp their
+    gathers harmlessly and come back with an all-False valid mask.
+    """
+    L = leaf_start.shape[0]
+    ids = jnp.asarray(leaf_ids)
+    ok = ids < L
+    safe = jnp.minimum(ids, L - 1)
+    starts = leaf_start[safe]                            # (F,)
+    sizes = jnp.where(ok, leaf_size[safe], 0)            # (F,)
+    rows = starts[:, None] + jnp.arange(max_leaf)[None, :]
+    slabs = series[rows]                                 # (F, R, m)
+    valid = jnp.arange(max_leaf)[None, :] < sizes[:, None]
+    return slabs, rows.astype(jnp.int32), valid
+
+
+def default_slab_impl() -> str:
+    """Distance formulation for the slab layer on this backend.
+
+    On TPU the batched ``pairwise`` Pallas kernel tiles the MXU directly; off
+    TPU ``matmul`` (the identical ‖q‖²+‖s‖²−2·q·sᵀ algebra as one einsum) is
+    the fast XLA form.  Both share the matmul decomposition the seed build
+    path already routed through, so build-side results stay within float
+    tolerance of the per-leaf reference either way.
+    """
+    return "pairwise" if jax.default_backend() == "tpu" else "matmul"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def slab_l2(
+    queries: jnp.ndarray,          # (F, Nq, m) per-slab query batches
+    slabs: jnp.ndarray,            # (F, R, m)
+    impl: str | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Distances from each slab's own query batch to the slab → (F, Nq, R).
+
+    impl: "direct" (elementwise, bitwise-stable vs the scan path), "matmul"
+    (one einsum of the kernel's decomposition), or "pairwise" (the batched
+    ``slab_l2_kernel`` Pallas path; off-TPU with interpret=None it falls back
+    to the mathematically identical matmul form, as :func:`pairwise_l2`
+    does).
+    """
+    impl = impl or default_slab_impl()
+    q = queries.astype(jnp.float32)
+    s = slabs.astype(jnp.float32)
+    if impl == "direct":
+        diff = q[:, :, None, :] - s[:, None, :, :]
+        return jnp.sqrt((diff * diff).sum(-1))
+    if impl == "matmul":
+        qn = (q * q).sum(-1)                             # (F, Nq)
+        sn = (s * s).sum(-1)                             # (F, R)
+        dot = jnp.einsum("fqm,frm->fqr", q, s,
+                         preferred_element_type=jnp.float32)
+        return jnp.sqrt(jnp.maximum(
+            qn[:, :, None] + sn[:, None, :] - 2.0 * dot, 0.0))
+    if impl == "pairwise":
+        if interpret is None:
+            if _use_interpret():
+                return slab_l2(queries, slabs, "matmul")
+            interpret = False
+        F, Nq, m = q.shape
+        _, R, _ = s.shape
+        bq = bb = bk = 128
+        qp = _pad_to(_pad_to(q, bq, 1), bk, 2)
+        sp = _pad_to(_pad_to(s, bb, 1), bk, 2)
+        qn = (qp ** 2).sum(-1)[:, None, :]               # (F, 1, Nq')
+        sn = (sp ** 2).sum(-1)[:, None, :]               # (F, 1, R')
+        out = kernel.slab_l2_kernel(qp, sp, qn, sn, bq=bq, bb=bb, bk=bk,
+                                    interpret=interpret)
+        return out[:, :Nq, :R]
+    raise ValueError(f"unknown slab-l2 impl {impl!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def shared_slab_l2(
+    queries: jnp.ndarray,          # (Q, m) one query batch shared by all slabs
+    slabs: jnp.ndarray,            # (C, R, m)
+    impl: str | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Distances from a shared query batch to every slab → (Q, C, R).
+
+    The all-pairs form: with impl="pairwise" the slabs flatten into one
+    (C·R, m) block and the ``l2_scan`` Pallas kernel runs over it directly —
+    this is the engine's union-slab candidate pass and the build side's
+    all-leaves sweep.
+    """
+    impl = impl or default_slab_impl()
+    q = queries.astype(jnp.float32)
+    s = slabs.astype(jnp.float32)
+    C, R, m = s.shape
+    if impl == "direct":
+        diff = q[:, None, None, :] - s[None, :, :, :]
+        return jnp.sqrt((diff * diff).sum(-1))
+    if impl == "matmul":
+        qn = (q * q).sum(-1)                             # (Q,)
+        sn = (s * s).sum(-1)                             # (C, R)
+        dot = jnp.einsum("qm,crm->qcr", q, s,
+                         preferred_element_type=jnp.float32)
+        return jnp.sqrt(jnp.maximum(
+            qn[:, None, None] + sn[None, :, :] - 2.0 * dot, 0.0))
+    if impl == "pairwise":
+        flat = s.reshape(C * R, m)
+        d = pairwise_l2(q, flat, interpret=interpret)
+        return d.reshape(q.shape[0], C, R)
+    raise ValueError(f"unknown slab-l2 impl {impl!r}")
+
+
+def slab_masked_min(
+    dists: jnp.ndarray,            # (F, Nq, R)
+    valid: jnp.ndarray,            # (F, R) bool
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Vmapped masked min over slab rows → (min (F, Nq), argmin (F, Nq)).
+
+    The min-reduction half of the slab layer; its top-k sibling is
+    :func:`leaf_topk`, which the engine's candidate passes call with
+    broadcast row ids.
+    """
+    d = jnp.where(valid[:, None, :], dists, _INF)
+    return d.min(axis=-1), d.argmin(axis=-1)
+
+
 # the oracle, re-exported for benchmarks that compare both paths
 reference = ref.pairwise_l2

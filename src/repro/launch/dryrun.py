@@ -19,13 +19,11 @@ Usage:
       --mesh both --out experiments/dryrun
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import configs

@@ -17,8 +17,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from .. import configs
 from ..checkpoint import CheckpointManager

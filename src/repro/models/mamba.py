@@ -14,7 +14,6 @@ skip D·x.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

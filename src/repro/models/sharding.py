@@ -15,7 +15,7 @@ according to the arch's policy (see config.resolve_attn_policy).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -15,8 +15,7 @@ All functions are pure; sharding is applied by the launchers via
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

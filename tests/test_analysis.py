@@ -1,7 +1,6 @@
 """HLO stats parser: trip counts, flops, collective detection."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis import hlo_stats

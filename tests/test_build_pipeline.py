@@ -1,0 +1,117 @@
+"""Build-pipeline guarantees of the leaf-slab batch layer.
+
+Two contracts the engine-backed build path must keep:
+
+* *collection parity* — the batched training-data collection
+  (``collect_training_data``) matches the seed per-leaf reference path on
+  both backbones: RNG-derived artifacts (queries) bitwise, distance targets
+  to float tolerance (they share the matmul decomposition; bitwise on CPU).
+* *determinism* — ``build_leafi`` is a pure function of (series, config,
+  key): building twice yields identical filters and tuner tables.  The seed
+  per-leaf path owed its determinism to Python iteration order; the batched
+  path must not regress it.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import build, filter_training, tree
+
+
+@pytest.fixture(scope="module", params=["dstree", "isax"])
+def index_small(request, randwalk_small):
+    if request.param == "dstree":
+        return tree.build_dstree(randwalk_small[:2500], leaf_capacity=64)
+    return tree.build_isax(randwalk_small[:2500], leaf_capacity=64)
+
+
+def _filtered_leaves(index, min_size=16, max_n=16):
+    sizes = np.asarray(index.leaf_size)
+    return np.arange(index.n_leaves)[sizes >= min_size][:max_n]
+
+
+def test_collection_matches_reference(index_small):
+    leaf_ids = _filtered_leaves(index_small)
+    key = jax.random.PRNGKey(11)
+    got = filter_training.collect_training_data(
+        index_small, leaf_ids, n_global=48, n_local=12, key=key)
+    want = filter_training._reference_collect_training_data(
+        index_small, leaf_ids, n_global=48, n_local=12, key=key)
+    # RNG-derived artifacts are bitwise (same key schedule, same host math)
+    np.testing.assert_array_equal(got.global_queries, want.global_queries)
+    np.testing.assert_array_equal(got.local_queries, want.local_queries)
+    np.testing.assert_array_equal(got.leaf_ids, want.leaf_ids)
+    np.testing.assert_array_equal(got.global_d_lb, want.global_d_lb)
+    # distance targets share the matmul decomposition → float tolerance
+    np.testing.assert_allclose(got.global_d_L, want.global_d_L,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got.local_d_L, want.local_d_L,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_local_queries_bitwise_and_loop_free(index_small):
+    """The vmapped sampler must reproduce the sequential key schedule."""
+    leaf_ids = _filtered_leaves(index_small, max_n=9)
+    key = jax.random.PRNGKey(3)
+    got = filter_training.make_local_queries(index_small, leaf_ids, 7, key)
+    want = filter_training._reference_local_queries(
+        index_small, leaf_ids, 7, key)
+    np.testing.assert_array_equal(got, want)
+    assert got.shape == (len(leaf_ids), 7, index_small.length)
+
+
+def _build_twice(series, cfg):
+    a = build.build_leafi(series, cfg, key=jax.random.PRNGKey(cfg.seed))
+    b = build.build_leafi(series, cfg, key=jax.random.PRNGKey(cfg.seed))
+    return a, b
+
+
+@pytest.mark.parametrize("backbone", ["dstree", "isax"])
+def test_build_is_deterministic(randwalk_small, backbone):
+    cfg = build.LeaFiConfig(
+        backbone=backbone, leaf_capacity=64, n_global=60, n_local=12,
+        t_filter_over_t_series=10.0,
+        train=filter_training.TrainConfig(epochs=4))
+    a, b = _build_twice(randwalk_small[:1500], cfg)
+    np.testing.assert_array_equal(a.leaf_ids, b.leaf_ids)
+    assert a.filter_params is not None, "config must select some filters"
+    for name in a.filter_params:
+        np.testing.assert_array_equal(
+            np.asarray(a.filter_params[name]),
+            np.asarray(b.filter_params[name]), err_msg=name)
+    np.testing.assert_array_equal(a.tuner.knots_q, b.tuner.knots_q)
+    np.testing.assert_array_equal(a.tuner.knots_o, b.tuner.knots_o)
+    np.testing.assert_array_equal(a.tuner.slopes, b.tuner.slopes)
+    np.testing.assert_array_equal(a.tuner.max_offset, b.tuner.max_offset)
+
+
+def test_build_dist_impl_plumbs_through(randwalk_small):
+    """collect_training_data accepts an explicit slab impl; 'direct' and
+    'matmul' targets agree to float tolerance."""
+    index = tree.build_dstree(randwalk_small[:1500], leaf_capacity=64)
+    leaf_ids = _filtered_leaves(index, max_n=6)
+    key = jax.random.PRNGKey(0)
+    a = filter_training.collect_training_data(
+        index, leaf_ids, 24, 8, key, dist_impl="direct")
+    b = filter_training.collect_training_data(
+        index, leaf_ids, 24, 8, key, dist_impl="matmul")
+    np.testing.assert_allclose(a.global_d_L, b.global_d_L,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(a.local_d_L, b.local_d_L,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_training_data_split_unchanged_by_calibration(randwalk_small):
+    """build_leafi's calibration split must leave TrainingData fields
+    consistent (regression guard for the engine-backed calibration)."""
+    cfg = build.LeaFiConfig(
+        backbone="dstree", leaf_capacity=64, n_global=60, n_local=12,
+        t_filter_over_t_series=10.0,
+        train=filter_training.TrainConfig(epochs=3))
+    lfi = build.build_leafi(randwalk_small[:1500], cfg)
+    assert lfi.tuner is not None
+    assert lfi.build_report["t_collect"] > 0
+    assert lfi.build_report["t_calibrate"] > 0
+    # tuner knots are sorted qualities in [0, 1]
+    q = lfi.tuner.knots_q
+    assert (np.diff(q) > 0).all() and q[0] >= 0.0 and q[-1] <= 1.0 + 1e-6

@@ -139,10 +139,12 @@ def test_leafi_end_to_end_strategies_agree(randwalk_small):
         np.testing.assert_array_equal(a.pruned_filter, b.pruned_filter)
 
 
-def test_matmul_impl_close_to_direct(index_small, queries_small):
-    """The MXU (matmul-decomposed) distance impl is numerically different
-    from the scan path but must agree to float tolerance and make identical
-    id choices on well-separated data."""
+@pytest.mark.parametrize("dist_impl", ["matmul", "pairwise"])
+def test_lossy_impls_close_to_direct(index_small, queries_small, dist_impl):
+    """The MXU distance impls (matmul decomposition; the union-slab pairwise
+    kernel path) are numerically different from the scan path but must agree
+    to float tolerance and make identical id choices on well-separated
+    data."""
     q = jnp.asarray(queries_small[:8])
     d_lb = bounds.lower_bounds(index_small, q)
     d_F = jnp.full(d_lb.shape, -jnp.inf)
@@ -151,7 +153,51 @@ def test_matmul_impl_close_to_direct(index_small, queries_small):
         jnp.asarray(index_small.series), jnp.asarray(index_small.leaf_start),
         jnp.asarray(index_small.leaf_size), q, d_lb, d_F,
         k=5, max_leaf=index_small.max_leaf_size, strategy="compact",
-        dist_impl="matmul")
+        dist_impl=dist_impl)
     np.testing.assert_allclose(np.asarray(a.topk_d), np.asarray(b.topk_d),
                                rtol=1e-3, atol=1e-3)
     np.testing.assert_array_equal(np.asarray(a.topk_i), np.asarray(b.topk_i))
+
+
+@pytest.mark.parametrize("k", [1, 10])
+def test_pairwise_impl_with_filter_pruning(index_small, queries_small, k):
+    """Union-slab pairwise candidates under an active filter cascade: the
+    non-survivor leaves that ride along in the shared slab must never leak
+    into results or counters (float-tolerance engine parity)."""
+    q = jnp.asarray(queries_small)
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_F = _synthetic_predictions(d_lb)
+    a = _run(index_small, q, d_lb, d_F, k, "scan")
+    b = engine.run_cascade(
+        jnp.asarray(index_small.series), jnp.asarray(index_small.leaf_start),
+        jnp.asarray(index_small.leaf_size), q, d_lb, d_F,
+        k=k, max_leaf=index_small.max_leaf_size, strategy="compact",
+        dist_impl="pairwise")
+    assert np.asarray(a.n_pruned_filter).sum() > 0
+    np.testing.assert_allclose(np.asarray(a.topk_d), np.asarray(b.topk_d),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(a.topk_i), np.asarray(b.topk_i))
+    np.testing.assert_array_equal(np.asarray(a.n_searched),
+                                  np.asarray(b.n_searched))
+    np.testing.assert_array_equal(np.asarray(a.n_pruned_lb),
+                                  np.asarray(b.n_pruned_lb))
+    np.testing.assert_array_equal(np.asarray(a.n_pruned_filter),
+                                  np.asarray(b.n_pruned_filter))
+
+
+def test_pairwise_impl_all_leaves_survive(index_small, queries_small):
+    """Adversarial empty-pruning case on the union path: the shared slab is
+    the whole index; results must still match scan."""
+    q = jnp.asarray(queries_small[:8])
+    d_lb = jnp.zeros((q.shape[0], index_small.n_leaves), jnp.float32)
+    d_F = jnp.full(d_lb.shape, -jnp.inf)
+    a = _run(index_small, q, d_lb, d_F, 3, "scan")
+    b = engine.run_cascade(
+        jnp.asarray(index_small.series), jnp.asarray(index_small.leaf_start),
+        jnp.asarray(index_small.leaf_size), q, d_lb, d_F,
+        k=3, max_leaf=index_small.max_leaf_size, strategy="compact",
+        dist_impl="pairwise")
+    np.testing.assert_allclose(np.asarray(a.topk_d), np.asarray(b.topk_d),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(a.topk_i), np.asarray(b.topk_i))
+    assert (np.asarray(b.n_searched) == index_small.n_leaves).all()

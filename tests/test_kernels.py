@@ -1,5 +1,4 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracles."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -22,6 +21,41 @@ def test_l2_scan_matches_oracle(Q, B, m, dtype):
     tol = 5e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("F,Nq,R,m", [(1, 1, 1, 8), (3, 5, 17, 96),
+                                      (4, 130, 40, 128), (2, 9, 300, 33)])
+def test_slab_l2_kernel_matches_oracle(F, Nq, R, m):
+    """The batched leaf-slab kernel (leading parallel F grid axis) against
+    the matmul oracle it shares its algebra with — the TPU production path
+    for the build side's per-leaf query batches."""
+    q = jnp.asarray(RNG.standard_normal((F, Nq, m)), jnp.float32)
+    s = jnp.asarray(RNG.standard_normal((F, R, m)), jnp.float32)
+    got = l2_ops.slab_l2(q, s, "pairwise", interpret=True)
+    want = l2_ops.slab_l2(q, s, "matmul")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=5e-4)
+
+
+def test_slab_gather_and_masked_min():
+    """gather_leaf_slabs + slab_masked_min against a per-leaf loop."""
+    series = jnp.asarray(RNG.standard_normal((80, 32)), jnp.float32)
+    starts = jnp.asarray([0, 20, 45]); sizes = jnp.asarray([20, 25, 11])
+    max_leaf = 30
+    # one leaf id past the end (== L) must come back all-invalid
+    slabs, rows, valid = l2_ops.gather_leaf_slabs(
+        series, starts, sizes, jnp.asarray([0, 1, 2, 3]), max_leaf)
+    assert list(np.asarray(valid).sum(1)) == [20, 25, 11, 0]
+    q = jnp.asarray(RNG.standard_normal((4, 7, 32)), jnp.float32)
+    d = l2_ops.slab_l2(q, slabs, "direct")
+    dmin, amin = l2_ops.slab_masked_min(d, valid)
+    for f, (s0, z) in enumerate([(0, 20), (20, 25), (45, 11)]):
+        want = np.sqrt((((np.asarray(q[f])[:, None, :]
+                          - np.asarray(series[s0:s0 + z])[None]) ** 2)
+                        .sum(-1)))
+        np.testing.assert_allclose(np.asarray(dmin[f]), want.min(1),
+                                   rtol=1e-5, atol=1e-4)
+    assert np.isinf(np.asarray(dmin[3])).all()
 
 
 def test_l2_scan_masked_min():

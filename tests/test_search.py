@@ -1,5 +1,4 @@
 """Search semantics: exactness, pruning accounting, k-NN, filter cascade."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
