@@ -8,7 +8,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast lint bench bench-engine bench-build dev-deps
+.PHONY: test test-fast lint bench bench-engine bench-build bench-dist dev-deps
 
 test: lint
 	python -m pytest -x -q
@@ -34,6 +34,9 @@ bench-engine:
 
 bench-build:
 	python -m benchmarks.run --suite build
+
+bench-dist:
+	python -m benchmarks.run --suite dist
 
 dev-deps:
 	pip install -r requirements-dev.txt

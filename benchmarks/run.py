@@ -10,7 +10,8 @@ experiments/bench_results.json (EXPERIMENTS.md is generated from those).
 Standalone suites (``--suite``) run a single benchmark module and write its
 own experiments/ payload: ``build`` → build_bench (batched vs per-leaf
 training-data collection), ``engine`` → engine_bench (scan vs compact vs
-pairwise cascade execution).
+pairwise cascade execution), ``dist`` → dist_bench (scan vs fixed-width
+compact shard bodies on a 1×N host-device mesh).
 """
 from __future__ import annotations
 
@@ -19,12 +20,13 @@ import json
 import os
 import time
 
-from . import (build_bench, common, engine_bench, kernels_bench,
+from . import (build_bench, common, dist_bench, engine_bench, kernels_bench,
                paper_tables, wallclock)
 
 SUITES = {
     "build": (build_bench.bench_build, "experiments/build_bench.json"),
     "engine": (engine_bench.bench_engine, "experiments/engine_bench.json"),
+    "dist": (dist_bench.bench_dist, "experiments/dist_bench.json"),
 }
 
 

@@ -15,10 +15,16 @@ batch along ``data``.  Search is a two-phase exchange:
             the answer (and an argmin exchange resolves the owner).
 
 Collectives used: two ``psum(min)`` on (Q,)-vectors and one final pair —
-bytes exchanged are O(Q), independent of collection size: the pruning
-cascade is what makes the index *communication*-scalable, not just
-compute-scalable.  This file is also what ``launch/dryrun.py --arch
-leafi-serve`` lowers on the production mesh.
+bytes exchanged are O(Q), independent of collection size, so the exchange
+is *communication*-scalable.  The per-shard body is also *compute*-scalable:
+by default it runs ``engine.compact_bsf_cascade``, the fixed-width survivor
+compaction (static shapes, legal inside shard_map), so each shard pays
+distance compute only for a bounded survivor buffer instead of every local
+leaf — the distributed analogue of the single-device engine's
+prune→compact→candidates plan, with the masked scan kept as the
+bitwise-parity fallback (``strategy="scan"``) and as the exact overflow
+path.  This file is also what ``launch/dryrun.py --arch leafi-serve``
+lowers on the production mesh.
 """
 from __future__ import annotations
 
@@ -71,6 +77,21 @@ class ShardedLeaFi:
             l = self.lb_lo.shape[-1]
             q = summaries.paa(queries, l)
         return q * jnp.asarray(self.qscale)
+
+
+def make_search_mesh(n_data: int, n_model: int,
+                     data_axis: str = "data", model_axis: str = "model"):
+    """A (data, model) mesh for the distributed search, across jax versions.
+
+    jax >= 0.5 wants explicit axis types on ``make_mesh``; older versions
+    don't have ``AxisType``.  One shared guard instead of three copies
+    (tests, benchmarks, serving).
+    """
+    shape, names = (n_data, n_model), (data_axis, model_axis)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh(shape, names)
 
 
 def shard_leafi(lfi: LeaFiIndex, n_shards: int,
@@ -170,16 +191,51 @@ def shard_leafi(lfi: LeaFiIndex, n_shards: int,
 # ---------------------------------------------------------------------------
 
 
+def _shard_pruning_inputs(lo, hi, w1, b1, w2, b2, y_mean, y_std, offsets,
+                          has_filter, leaf_size, queries, qcoords):
+    """Per-shard (Q, P) pruning inputs: box lower bounds + filter preds.
+
+    Padding leaves (size 0) carry (−inf, +inf) box edges, which the
+    ``isfinite`` squash collapses to a lower bound of 0 — low enough to win
+    the phase-1 probe's argmin and silently waste the bsf seed on an empty
+    leaf.  Their lb is therefore forced to +inf here, so they sort last,
+    never survive, and never probe.
+    """
+    d = jnp.maximum(jnp.maximum(lo[None] - qcoords[:, None],
+                                qcoords[:, None] - hi[None]), 0.0)
+    d = jnp.where(jnp.isfinite(d), d, 0.0)
+    lb = jnp.sqrt((d * d).sum(-1))
+    lb = jnp.where(leaf_size[None, :] > 0, lb, _INF)
+
+    # local filter predictions: einsum over stacked per-leaf MLPs
+    hdd = jax.nn.relu(jnp.einsum("qm,pmh->pqh", queries, w1)
+                      + b1[:, None, :])
+    pred = jnp.einsum("pqh,ph->pq", hdd, w2) + b2[:, None]
+    pred = pred * y_std[:, None] + y_mean[:, None]
+    d_F = jnp.where(has_filter[:, None], pred - offsets[:, None], -_INF)
+    return lb, d_F.T                                     # both (Q, P)
+
+
 def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
-                  bsf0):
+                  bsf0, strategy="compact", max_survivors=None,
+                  dist_impl=None):
     """Cascade over this shard's leaves given a starting global bsf.
 
-    Thin wrapper over the common engine's shard_map-safe masked scan —
-    compaction needs data-dependent shapes, so inside shard_map the scan
-    form is the engine's only valid plan.
+    Routes through the common engine's shard_map-safe forms:
+    ``"compact"`` (default) is the fixed-width survivor compaction — static
+    shapes, distance compute only for the survivor buffer, masked-scan
+    fallback for overflow queries; ``"scan"`` is the original masked scan,
+    kept as the parity fallback (bitwise-identical under the ``direct``
+    distance impl).
     """
-    return engine.masked_bsf_scan(sh_series, sh_start, sh_size, lb, d_F,
-                                  queries, max_leaf, bsf0)
+    if strategy == "scan":
+        return engine.masked_bsf_scan(sh_series, sh_start, sh_size, lb, d_F,
+                                      queries, max_leaf, bsf0)
+    if strategy == "compact":
+        return engine.compact_bsf_cascade(
+            sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf, bsf0,
+            max_survivors=max_survivors, dist_impl=dist_impl)
+    raise ValueError(f"unknown distributed shard strategy {strategy!r}")
 
 
 def search_input_specs(n_shards: int, leaves_per_shard: int,
@@ -208,12 +264,16 @@ def search_input_specs(n_shards: int, leaves_per_shard: int,
     )
 
 
-def _make_shard_body(max_leaf: int, model_axis: str):
+def _make_shard_body(max_leaf: int, model_axis: str,
+                     strategy: str = "compact",
+                     max_survivors: Optional[int] = None,
+                     dist_impl: Optional[str] = None):
     """The per-shard two-phase search body (runs under shard_map).
 
     Phase 1 probes each query's most promising local leaf (engine probe) and
-    establishes a global bsf via pmin; phase 2 runs the engine's masked bsf
-    cascade against it and reduces the answer.  Shared by
+    establishes a global bsf via pmin; phase 2 runs the engine's bsf cascade
+    against it — the fixed-width survivor compaction by default, the masked
+    scan with ``strategy="scan"`` — and reduces the answer.  Shared by
     ``build_search_fn`` (dry-run lowering) and ``make_distributed_search``.
     """
 
@@ -226,19 +286,10 @@ def _make_shard_body(max_leaf: int, model_axis: str):
         y_mean, y_std = y_mean[0], y_std[0]
         offsets, has_filter = offsets[0], has_filter[0]
 
-        # local lower bounds for all local leaves: (Q, P)
-        d = jnp.maximum(jnp.maximum(lo[None] - qcoords[:, None],
-                                    qcoords[:, None] - hi[None]), 0.0)
-        d = jnp.where(jnp.isfinite(d), d, 0.0)
-        lb = jnp.sqrt((d * d).sum(-1))
-
-        # local filter predictions: einsum over stacked per-leaf MLPs
-        hdd = jax.nn.relu(jnp.einsum("qm,pmh->pqh", queries, w1)
-                          + b1[:, None, :])
-        pred = jnp.einsum("pqh,ph->pq", hdd, w2) + b2[:, None]
-        pred = pred * y_std[:, None] + y_mean[:, None]
-        d_F = jnp.where(has_filter[:, None], pred - offsets[:, None], -_INF)
-        d_F = d_F.T                                             # (Q, P)
+        # (Q, P) lower bounds (padding leaves forced to +inf) + filter preds
+        lb, d_F = _shard_pruning_inputs(lo, hi, w1, b1, w2, b2, y_mean,
+                                        y_std, offsets, has_filter, size,
+                                        queries, qcoords)
 
         # phase 1: scan the single most promising local leaf
         bsf_local = engine.probe_best_leaf(series, start, size, lb,
@@ -247,7 +298,9 @@ def _make_shard_body(max_leaf: int, model_axis: str):
 
         # phase 2: full cascade against the global bsf
         bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
-                                 max_leaf, bsf0)
+                                 max_leaf, bsf0, strategy=strategy,
+                                 max_survivors=max_survivors,
+                                 dist_impl=dist_impl)
         nn = jax.lax.pmin(bsf, model_axis)                      # collective 2
         total_searched = jax.lax.psum(n_s, model_axis)
         return nn[None], total_searched[None]
@@ -256,9 +309,12 @@ def _make_shard_body(max_leaf: int, model_axis: str):
 
 
 def build_search_fn(mesh: Mesh, max_leaf: int, data_axes=("data",),
-                    model_axis: str = "model"):
+                    model_axis: str = "model", strategy: str = "compact",
+                    max_survivors: Optional[int] = None,
+                    dist_impl: Optional[str] = None):
     """The shard_map'ped search as a jit-able function of explicit args."""
-    search_fn = _make_shard_body(max_leaf, model_axis)
+    search_fn = _make_shard_body(max_leaf, model_axis, strategy,
+                                 max_survivors, dist_impl)
     spec_idx = P(model_axis)
     spec_q = P(data_axes)
     smapped = shard_map(
@@ -273,16 +329,29 @@ def build_search_fn(mesh: Mesh, max_leaf: int, data_axes=("data",),
 
 
 def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
-                            data_axes=("data",), model_axis: str = "model"):
+                            data_axes=("data",), model_axis: str = "model",
+                            strategy: str = "compact",
+                            max_survivors: Optional[int] = None,
+                            dist_impl: Optional[str] = None):
     """Build the jitted multi-chip search step over ``mesh``.
 
-    Returns fn(queries (Q, m)) → (nn_dist (Q,), searched_per_shard (Q,)).
-    Queries shard over ``data_axes``; the index over ``model_axis``.
+    Returns fn(queries (Q, m)) → (nn_dist (Q,), total_searched (Q,)), where
+    ``total_searched`` is the ``psum``-reduced **total** searched-leaf count
+    across all shards per query (replicated per shard by the collective; the
+    caller reads one replica) — i.e. it sums to the same accounting as
+    running the per-shard cascades on a single device.  Queries shard over
+    ``data_axes``; the index over ``model_axis``.
+
+    strategy: ``"compact"`` (default) = fixed-width survivor compaction per
+    shard (``engine.compact_bsf_cascade``; ``max_survivors`` caps the static
+    buffer, ``dist_impl`` picks the candidate distance algebra);
+    ``"scan"`` = the masked-scan parity fallback.
     """
     max_leaf = sharded.max_leaf
     spec_idx = P(model_axis)
     spec_q = P(data_axes)
-    search_fn = _make_shard_body(max_leaf, model_axis)
+    search_fn = _make_shard_body(max_leaf, model_axis, strategy,
+                                 max_survivors, dist_impl)
 
     idx_args = (sharded.series, sharded.leaf_start, sharded.leaf_size,
                 sharded.lb_lo, sharded.lb_hi, sharded.w1, sharded.b1,
@@ -302,7 +371,9 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
                           length=sharded.length, kind=sharded.kind,
                           qscale=sharded.qscale)
         qcoords = sh.query_coords(queries)
-        nn, searched = smapped(*idx_args, queries, qcoords)
-        return nn[0], searched[0]
+        nn, total_searched = smapped(*idx_args, queries, qcoords)
+        # collectives replicate both outputs across the model axis; row 0 is
+        # the global nn and the all-shard total searched count per query
+        return nn[0], total_searched[0]
 
     return run, idx_args, spec_idx, spec_q

@@ -71,6 +71,19 @@ conformal calibration replays on precollected matrices.  The compact search
 path additionally accepts ``dist_impl="pairwise"``: each bucket's survivor
 leaves union into one shared slab scored by the ``l2_scan`` Pallas kernel
 all-pairs (ROADMAP follow-up; float-tolerance parity like ``matmul``).
+
+The distributed per-shard body gets the same prune→compact economics from
+``compact_bsf_cascade``: a fixed-width variant of the compaction that is
+legal *inside* ``shard_map``, where the bucketing above (data-dependent
+shapes, host-side counts) is not.  Survivor leaf ids compact into one
+static ``max_survivors``-capacity buffer per query (stable argsort
+selection), the buffer is scored through the same batched candidate
+primitives, and :func:`replay_cascade` replays the exact cascade from the
+collective bsf seed — bitwise-identical to ``masked_bsf_scan`` under the
+``direct`` impl.  The static-shape trade: capacity is paid whether or not
+survivors fill it, and queries whose survivors overflow the capacity fall
+back to the masked scan (one ``lax.cond``), keeping semantics exact.
+``distributed._make_shard_body`` routes through it by default.
 """
 from __future__ import annotations
 
@@ -192,7 +205,8 @@ def _bucket_leaf_topk(series, leaf_start, leaf_size, queries_b, leaf_b,
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k):
+def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
+                   leaf_valid=None):
     """Exact sequential-cascade replay over per-leaf top-k summaries.
 
     Identical decision logic and merge arithmetic to ``_scan_cascade`` — the
@@ -202,16 +216,28 @@ def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k):
     but each step merges k values instead of computing max_leaf·m distances.
 
     This is the single copy of the bsf cascade's decision logic: the compact
-    search strategy runs it over gathered candidate summaries, and conformal
+    search strategy runs it over gathered candidate summaries, conformal
     calibration (``conformal.simulate_search``) runs it with k=1 over the
-    precollected d_L matrices — no series data touched.
-    """
+    precollected d_L matrices, and the distributed fixed-width compaction
+    (``compact_bsf_cascade``) runs it with k=1 from a collective bsf seed —
+    no series data touched.
 
-    def per_query(ld, li, lb_row, dF_row, order_row):
+    bsf0: optional (Q,) best-so-far seed — enters the running top-k as one
+    phantom candidate (id −1), matching ``masked_bsf_scan``'s scalar-bsf
+    init for k=1.  leaf_valid: optional (L,) mask; invalid (shard-padding)
+    leaves are lb-pruned unconditionally, exactly as the masked scan treats
+    ``leaf_size == 0``.
+    """
+    invalid = (jnp.zeros(leaf_d.shape[1], bool) if leaf_valid is None
+               else ~jnp.asarray(leaf_valid))
+    if bsf0 is None:
+        bsf0 = jnp.full(leaf_d.shape[0], _INF)
+
+    def per_query(ld, li, lb_row, dF_row, order_row, b0):
         def step(carry, leaf):
             topk_d, topk_i, n_s, n_plb, n_pf = carry
             bsf = topk_d[-1]
-            p_lb = lb_row[leaf] > bsf
+            p_lb = jnp.logical_or(lb_row[leaf] > bsf, invalid[leaf])
             p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
             pruned = p_lb | p_f
             vals = jnp.where(pruned, _INF, ld[leaf])
@@ -223,12 +249,14 @@ def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k):
                     n_plb + p_lb.astype(jnp.int32),
                     n_pf + p_f.astype(jnp.int32)), None
 
-        init = (jnp.full((k,), _INF), jnp.full((k,), -1, jnp.int32),
+        init = (jnp.full((k,), _INF).at[0].set(b0),
+                jnp.full((k,), -1, jnp.int32),
                 jnp.int32(0), jnp.int32(0), jnp.int32(0))
         (td, ti, n_s, n_plb, n_pf), _ = jax.lax.scan(step, init, order_row)
         return td, ti, n_s, n_plb, n_pf
 
-    return jax.vmap(per_query)(leaf_d, leaf_i, d_lb, d_F, order)
+    return jax.vmap(per_query, in_axes=(0, 0, 0, 0, 0, 0))(
+        leaf_d, leaf_i, d_lb, d_F, order, bsf0)
 
 
 def _pow2_chunk(per_leaf_bytes: int, cap: int) -> int:
@@ -549,7 +577,12 @@ def probe_best_leaf(series, leaf_start, leaf_size, lb, queries, max_leaf):
 
     jit/shard_map-safe (static shapes); the collective analogue of the
     engine's phase-1 probe, used by the distributed two-phase exchange.
+    Zero-size (shard-padding) leaves are skipped defensively: their lb is
+    forced to +inf before the argmin, so the probe never lands on an empty
+    leaf and wastes the seed on +inf — regardless of whether the caller
+    already masked ``lb``.
     """
+    lb = jnp.where(leaf_size[None, :] > 0, lb, _INF)
     best_leaf = lb.argmin(axis=1)
     row_ids = jnp.arange(max_leaf)
 
@@ -593,3 +626,99 @@ def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
         return bsf, n_s
 
     return jax.vmap(per_query)(queries, lb, d_F, order, bsf0)
+
+
+def default_max_survivors(n_leaves: int) -> int:
+    """Default fixed survivor capacity for ``compact_bsf_cascade``.
+
+    An eighth of the shard's leaf slots, rounded up to a power of two: small
+    enough that the candidate pass beats the masked scan by ~8× at high
+    pruning ratios, large enough that well-calibrated cascades rarely
+    overflow into the scan fallback.  Tune per deployment from observed
+    survivor-count statistics.
+    """
+    return min(_next_pow2(max(n_leaves // 8, 1)), _next_pow2(n_leaves))
+
+
+def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
+                        max_leaf, bsf0, *, max_survivors=None,
+                        dist_impl=None):
+    """Fixed-width survivor compaction form of ``masked_bsf_scan``.
+
+    Same contract — 1-NN bsf cascade from a seed ``bsf0`` over all leaves,
+    returning (bsf (Q,), n_searched (Q,)) — but distance compute is paid
+    only for a fixed-capacity buffer of cascade survivors, so the shapes
+    stay fully static and the whole thing is legal *inside* ``shard_map``
+    (where the single-device engine's data-dependent bucketing is not):
+
+      1. mask survivors (``lb ≤ bsf0``, ``d_F ≤ bsf0``, ``leaf_size > 0``;
+         since the cascade's bsf only decreases from ``bsf0``, survivors are
+         a superset of the leaves the masked scan actually scans);
+      2. compact survivor leaf ids, ascending-lb first, into a static
+         ``max_survivors``-wide buffer via stable argsorts (jit-safe), with
+         id ``P`` as the harmless-gather sentinel;
+      3. score the buffer through the batched ``l2_scan`` candidate
+         primitives and replay the exact cascade over the per-leaf minima
+         via :func:`replay_cascade` (k=1, seeded with ``bsf0``, padding
+         leaves lb-pruned) — bitwise-identical decisions, counters and bsf
+         to the masked scan under ``dist_impl="direct"`` given identical
+         inputs (tests/test_engine.py pins this; across *differently fused
+         programs* the usual XLA caveat applies — a prune threshold within
+         an ulp of the bsf may resolve differently, see
+         tests/test_distributed.py).
+
+    Queries whose survivor count exceeds the capacity fall back to the
+    masked scan (one ``lax.cond`` over the batch), so semantics stay exact
+    at any ``max_survivors``; the default capacity is
+    :func:`default_max_survivors` of the leaf-slot count.
+    """
+    Q, m = queries.shape
+    P = leaf_start.shape[0]
+    if max_survivors is None:
+        max_survivors = default_max_survivors(P)
+    C = max(min(int(max_survivors), P), 1)
+    dist_impl = dist_impl or l2_ops.default_gathered_impl()
+
+    valid = leaf_size > 0
+    lb = jnp.where(valid[None, :], lb, _INF)
+    survive = (lb <= bsf0[:, None]) & (d_F <= bsf0[:, None]) & valid[None, :]
+    n_surv = survive.sum(axis=1).astype(jnp.int32)
+
+    # survivors first, in ascending-lb order (stable argsort of the inverted
+    # mask over lb-ordered slots — the same compaction the single-device
+    # engine does per bucket, at one static width)
+    order = jnp.argsort(lb, axis=1)                      # (Q, P)
+    mask_ord = jnp.take_along_axis(survive, order, axis=1)
+    sel = jnp.argsort(~mask_ord, axis=1)[:, :C]
+    slot_ok = jnp.take_along_axis(mask_ord, sel, axis=1)
+    leaf_b = jnp.where(slot_ok, jnp.take_along_axis(order, sel, axis=1), P)
+
+    chunk = _chunk_for(Q, C, max_leaf, m)
+    Cp = -(-C // chunk) * chunk                          # pad C to chunks
+    if Cp > C:
+        leaf_b = jnp.pad(leaf_b, ((0, 0), (0, Cp - C)), constant_values=P)
+    vals, _ = _bucket_leaf_topk(series, leaf_start, leaf_size, queries,
+                                leaf_b, kk=1, max_leaf=max_leaf,
+                                chunk=chunk, dist_impl=dist_impl)
+    # per-leaf min-distance summaries; sentinel (== P) scatters drop
+    leaf_min = jnp.full((Q, P), _INF)
+    leaf_min = leaf_min.at[jnp.arange(Q)[:, None], leaf_b].set(
+        vals[:, :, 0], mode="drop")
+
+    td, _, n_s, _, _ = replay_cascade(
+        leaf_min[..., None], jnp.full((Q, P, 1), -1, jnp.int32),
+        lb, d_F, order, k=1, bsf0=bsf0, leaf_valid=valid)
+    bsf_c, ns_c = td[:, 0], n_s
+
+    # overflow queries (survivors > capacity) would replay against missing
+    # summaries — route the whole batch through the masked scan and select
+    # per query; the cond keeps the scan off the hot path when nobody
+    # overflows.
+    overflow = n_surv > C
+    bsf_s, ns_s = jax.lax.cond(
+        overflow.any(),
+        lambda: masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F,
+                                queries, max_leaf, bsf0),
+        lambda: (jnp.full((Q,), _INF), jnp.zeros((Q,), jnp.int32)))
+    return (jnp.where(overflow, bsf_s, bsf_c),
+            jnp.where(overflow, ns_s, ns_c))

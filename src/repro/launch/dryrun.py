@@ -133,13 +133,17 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return compiled, cfg, shape, meta
 
 
-def run_leafi_serve(multi_pod: bool) -> dict:
+def run_leafi_serve(multi_pod: bool, strategy: str = "compact") -> dict:
     """Dry-run the PAPER's own system at pod scale: the leaf-sharded LeaFi
     search (core/distributed.py) lowered on the production mesh.
 
     Sizing mirrors the paper's production setting: 25M series × len 256
     (= the paper's datasets), ~16k leaves (MESSI-like), ~10k max leaf size,
     one stacked MLP filter slot per leaf, 1024-query request batch.
+    ``strategy`` picks the per-shard phase-2 body: "compact" (default) is
+    the fixed-width survivor compaction — proves the static-shape plan
+    (survivor buffer + overflow conditional) lowers and fits on the
+    production mesh; "scan" is the masked-scan fallback.
     """
     mesh = make_production_mesh(multi_pod=multi_pod)
     from ..core import distributed
@@ -150,7 +154,8 @@ def run_leafi_serve(multi_pod: bool) -> dict:
     specs = distributed.search_input_specs(
         n_shards, leaves_per_shard, rows_per_shard, m, h,
         n_queries=1024, coord_dim=16)
-    fn, _, _ = distributed.build_search_fn(mesh, max_leaf=10_000)
+    fn, _, _ = distributed.build_search_fn(mesh, max_leaf=10_000,
+                                           strategy=strategy)
     t0 = time.perf_counter()
     with mesh:
         lowered = fn.lower(*specs)
@@ -160,6 +165,7 @@ def run_leafi_serve(multi_pod: bool) -> dict:
         compiled, n_devices=mesh.size, hlo_text=hlo)
     return {
         "arch": "leafi-serve", "shape": "q1024_n25m",
+        "strategy": strategy,
         "mesh": dict(mesh.shape), "status": "ok",
         "compile_s": round(time.perf_counter() - t0, 1),
         "memory": roofline_mod.memory_report(compiled),

@@ -9,6 +9,10 @@ answers batched k-NN requests through the :mod:`repro.core.engine` cascade,
 reporting per-batch latency for both engine strategies.
 
     PYTHONPATH=src python -m repro.launch.serve --arch leafi --batch 32
+
+``--dist`` additionally routes the batch through the leaf-sharded shard_map
+search (``core/distributed.py``) over every visible device, timing both
+per-shard strategies (masked scan vs fixed-width survivor compaction).
 """
 from __future__ import annotations
 
@@ -51,6 +55,42 @@ def serve_leafi(args) -> None:
               f"computed {res.computed.mean():.1f} "
               f"of {res.n_leaves} leaves/query")
 
+    if args.dist:
+        serve_leafi_distributed(lfi, q)
+
+
+def serve_leafi_distributed(lfi, q) -> None:
+    """Route the same requests through the shard_map search (1-NN).
+
+    Shards the index over every visible device on a 1×D mesh; run with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` to smoke the
+    multi-shard path off-TPU.  Compares both per-shard strategies — the
+    masked scan and the fixed-width survivor compaction (the default, which
+    skips non-survivor distance compute with fully static shapes).
+    """
+    import numpy as np
+
+    from ..core import distributed
+
+    D = max(len(jax.devices()), 1)
+    mesh = distributed.make_search_mesh(1, D)
+    sharded = distributed.shard_leafi(lfi, n_shards=D)
+    print(f"distributed serve: {D} shard(s), "
+          f"{sharded.leaf_size.shape[1]} leaf slots/shard")
+    for strategy in ("scan", "compact"):
+        run, *_ = distributed.make_distributed_search(
+            mesh, sharded, strategy=strategy)
+        with mesh:
+            nn, total = run(jnp.asarray(q))         # warmup / compile
+            jax.block_until_ready(nn)
+            t0 = time.perf_counter()
+            nn, total = run(jnp.asarray(q))
+            jax.block_until_ready(nn)
+            dt = time.perf_counter() - t0
+        print(f"serve[dist/{strategy:7s}] {q.shape[0]} queries 1-NN: "
+              f"{dt*1e3:.1f}ms  total searched "
+              f"{np.asarray(total).mean():.1f} leaves/query")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -60,6 +100,11 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dist", action="store_true",
+                    help="also smoke the sharded (shard_map) search path "
+                         "(--arch leafi only; set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N for N "
+                         "shards off-TPU)")
     args = ap.parse_args()
 
     if args.arch == "leafi":

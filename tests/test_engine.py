@@ -185,6 +185,103 @@ def test_pairwise_impl_with_filter_pruning(index_small, queries_small, k):
                                   np.asarray(b.n_pruned_filter))
 
 
+# ---------------------------------------------------------------------------
+# shard_map-safe pieces: probe + fixed-width compact cascade (1-NN forms)
+# ---------------------------------------------------------------------------
+
+
+def _bsf_args(index):
+    return (jnp.asarray(index.series), jnp.asarray(index.leaf_start),
+            jnp.asarray(index.leaf_size))
+
+
+def test_probe_best_leaf_skips_empty_leaves(index_small, queries_small):
+    q = jnp.asarray(queries_small[:8])
+    series, starts, sizes = _bsf_args(index_small)
+    ml = index_small.max_leaf_size
+    lb = bounds.lower_bounds(index_small, q)
+    want = engine.probe_best_leaf(series, starts, sizes, lb, q, ml)
+    # append an empty (shard-padding) leaf advertising an unbeatable lb of 0,
+    # exactly what the pre-fix distributed body produced: the probe must
+    # tie-break away from it instead of returning +inf
+    starts2 = jnp.concatenate([starts, jnp.zeros((1,), starts.dtype)])
+    sizes2 = jnp.concatenate([sizes, jnp.zeros((1,), sizes.dtype)])
+    lb2 = jnp.concatenate([lb, jnp.zeros((q.shape[0], 1))], axis=1)
+    got = engine.probe_best_leaf(series, starts2, sizes2, lb2, q, ml)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("cap", [None, 1, 4])
+def test_compact_bsf_cascade_matches_masked_scan(index_small, queries_small,
+                                                 cap):
+    """Fixed-width compaction == masked scan, bitwise, at any capacity
+    (cap=1 forces the overflow→scan fallback for nearly every query)."""
+    q = jnp.asarray(queries_small)
+    series, starts, sizes = _bsf_args(index_small)
+    ml = index_small.max_leaf_size
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_F = _synthetic_predictions(d_lb)
+    bsf0 = engine.probe_best_leaf(series, starts, sizes, d_lb, q, ml)
+    a = engine.masked_bsf_scan(series, starts, sizes, d_lb, d_F, q, ml, bsf0)
+    b = engine.compact_bsf_cascade(series, starts, sizes, d_lb, d_F, q, ml,
+                                   bsf0, max_survivors=cap)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_compact_bsf_cascade_all_survive(index_small, queries_small):
+    """Zero lower bounds + no filters: every leaf survives; small caps must
+    overflow into the exact scan fallback, a full cap must not overflow."""
+    q = jnp.asarray(queries_small[:8])
+    series, starts, sizes = _bsf_args(index_small)
+    ml = index_small.max_leaf_size
+    L = index_small.n_leaves
+    d_lb = jnp.zeros((q.shape[0], L), jnp.float32)
+    d_F = jnp.full(d_lb.shape, -jnp.inf)
+    bsf0 = engine.probe_best_leaf(series, starts, sizes, d_lb, q, ml)
+    a = engine.masked_bsf_scan(series, starts, sizes, d_lb, d_F, q, ml, bsf0)
+    for cap in (engine.default_max_survivors(L), L):
+        b = engine.compact_bsf_cascade(series, starts, sizes, d_lb, d_F, q,
+                                       ml, bsf0, max_survivors=cap)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+        assert (np.asarray(b[1]) == L).all()
+
+
+def test_compact_bsf_cascade_padding_leaves(index_small, queries_small):
+    """Shard-padding leaf slots (size 0) with adversarial raw lb 0: both
+    1-NN forms must prune them; an all-padding shard returns the seed."""
+    q = jnp.asarray(queries_small[:8])
+    series, starts, sizes = _bsf_args(index_small)
+    ml = index_small.max_leaf_size
+    extra = 5
+    starts2 = jnp.concatenate([starts, jnp.zeros((extra,), starts.dtype)])
+    sizes2 = jnp.concatenate([sizes, jnp.zeros((extra,), sizes.dtype)])
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_lb2 = jnp.concatenate(
+        [d_lb, jnp.zeros((q.shape[0], extra))], axis=1)
+    d_F2 = _synthetic_predictions(d_lb2)
+    bsf0 = engine.probe_best_leaf(series, starts2, sizes2, d_lb2, q, ml)
+    assert np.isfinite(np.asarray(bsf0)).all()
+    a = engine.masked_bsf_scan(series, starts2, sizes2, d_lb2, d_F2, q, ml,
+                               bsf0)
+    b = engine.compact_bsf_cascade(series, starts2, sizes2, d_lb2, d_F2, q,
+                                   ml, bsf0)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+    # all-padding: nothing to scan, bsf stays at the (+inf) seed, n_s == 0
+    allpad = jnp.zeros_like(sizes2)
+    bsf0p = engine.probe_best_leaf(series, starts2, allpad, d_lb2, q, ml)
+    c = engine.compact_bsf_cascade(series, starts2, allpad, d_lb2, d_F2, q,
+                                   ml, bsf0p)
+    d = engine.masked_bsf_scan(series, starts2, allpad, d_lb2, d_F2, q, ml,
+                               bsf0p)
+    np.testing.assert_array_equal(np.asarray(c[0]), np.asarray(d[0]))
+    assert (np.asarray(c[1]) == 0).all() and (np.asarray(d[1]) == 0).all()
+
+
 def test_pairwise_impl_all_leaves_survive(index_small, queries_small):
     """Adversarial empty-pruning case on the union path: the shared slab is
     the whole index; results must still match scan."""
