@@ -8,7 +8,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast lint bench bench-engine bench-build bench-dist dev-deps
+.PHONY: test test-fast lint bench bench-engine bench-build bench-dist \
+	bench-serve dev-deps
 
 test: lint
 	python -m pytest -x -q
@@ -37,6 +38,9 @@ bench-build:
 
 bench-dist:
 	python -m benchmarks.run --suite dist
+
+bench-serve:
+	python -m benchmarks.run --suite serve
 
 dev-deps:
 	pip install -r requirements-dev.txt

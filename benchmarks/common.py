@@ -124,6 +124,16 @@ def leafi_adjusted(setup: BenchSetup, noise: float,
     return setup.d_pred[noise] - offs[None, :]
 
 
+def latency_percentiles(samples, pcts=(50, 95, 99)) -> Dict[str, float]:
+    """{'p50': …, 'p95': …, 'p99': …} from a latency sample iterable.
+
+    Shared with the serving runtime's rolling telemetry — one definition
+    (``repro.serving.telemetry.latency_percentiles``) so benchmark reports
+    and live counters can never disagree on what a percentile means."""
+    from repro.serving.telemetry import latency_percentiles as _lp
+    return _lp(samples, pcts)
+
+
 def timed(fn, *args, repeat: int = 3, **kw):
     # block the warmup too: async dispatch must not bleed into the window
     jax.block_until_ready(fn(*args, **kw))              # warmup / compile

@@ -11,7 +11,9 @@ Standalone suites (``--suite``) run a single benchmark module and write its
 own experiments/ payload: ``build`` → build_bench (batched vs per-leaf
 training-data collection), ``engine`` → engine_bench (scan vs compact vs
 pairwise cascade execution), ``dist`` → dist_bench (scan vs fixed-width
-compact shard bodies on a 1×N host-device mesh).
+compact shard bodies on a 1×N host-device mesh), ``serve`` → serve_bench
+(micro-batched mixed-quality-target open-loop serving vs the homogeneous
+batch path).
 """
 from __future__ import annotations
 
@@ -21,12 +23,13 @@ import os
 import time
 
 from . import (build_bench, common, dist_bench, engine_bench, kernels_bench,
-               paper_tables, wallclock)
+               paper_tables, serve_bench, wallclock)
 
 SUITES = {
     "build": (build_bench.bench_build, "experiments/build_bench.json"),
     "engine": (engine_bench.bench_engine, "experiments/engine_bench.json"),
     "dist": (dist_bench.bench_dist, "experiments/dist_bench.json"),
+    "serve": (serve_bench.bench_serve, "experiments/serve_bench.json"),
 }
 
 

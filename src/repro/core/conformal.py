@@ -90,8 +90,15 @@ class AutoTuner:
     slopes: np.ndarray           # (F, K) Steffen slopes
     max_offset: np.ndarray       # (F,) most conservative offset observed
 
-    def offsets(self, target: float, safety: float = 0.0) -> np.ndarray:
-        """Per-filter offsets for one quality target (paper §4.4.2).
+    def offsets(self, target, safety: float = 0.0) -> np.ndarray:
+        """Per-filter offsets for quality target(s) (paper §4.4.2).
+
+        ``target`` may be one quality target (→ (F,) offsets, the paper's
+        form) or an array of B per-query targets (→ (B, F) offset rows —
+        what the serving runtime feeds a heterogeneous micro-batch).  The
+        batched form evaluates the same Steffen spline with identical
+        arithmetic, so each row is bitwise-equal to the scalar call
+        (tests/test_conformal.py pins this).
 
         ``safety`` (beyond-paper knob, default off = paper-faithful) aims the
         spline at target + safety·(1−target): a small calibration margin that
@@ -100,23 +107,34 @@ class AutoTuner:
         thinner — cf. the paper's own §5.3.1 explanation of the SIFT/95%
         miss).
         """
+        t = np.asarray(target, np.float64)
+        out = self._offsets_batch(np.atleast_1d(t), safety)
+        return out[0] if t.ndim == 0 else out
+
+    def _offsets_batch(self, targets: np.ndarray,
+                       safety: float = 0.0) -> np.ndarray:
+        """(B,) targets → (B, F) offsets; one vectorized spline evaluation."""
         if safety:
-            target = target + safety * (1.0 - target)
+            targets = targets + safety * (1.0 - targets)
         x, y, d = self.knots_q, self.knots_o, self.slopes
+        B, F = targets.shape[0], y.shape[0]
         if x.size == 1:
-            return y[:, 0].copy()
-        if target >= x[-1]:
-            # target beyond anything achieved in simulation: be maximally
-            # conservative (largest calibrated offset).
-            return self.max_offset.copy()
-        q = float(np.clip(target, x[0], x[-1]))
-        i = int(np.clip(np.searchsorted(x, q, side="right") - 1, 0, x.size - 2))
-        h = x[i + 1] - x[i]
-        t = q - x[i]
-        s = (y[:, i + 1] - y[:, i]) / h
-        a = (d[:, i] + d[:, i + 1] - 2 * s) / (h * h)
-        b = (3 * s - 2 * d[:, i] - d[:, i + 1]) / h
-        return ((a * t + b) * t + d[:, i]) * t + y[:, i]
+            return np.broadcast_to(y[:, 0], (B, F)).copy()
+        out = np.empty((B, F), y.dtype)
+        # targets beyond anything achieved in simulation: be maximally
+        # conservative (largest calibrated offset).
+        hi = targets >= x[-1]
+        out[hi] = self.max_offset
+        if (~hi).any():
+            q = np.clip(targets[~hi], x[0], x[-1])
+            i = np.clip(np.searchsorted(x, q, side="right") - 1, 0, x.size - 2)
+            h = x[i + 1] - x[i]                           # (b,)
+            t = q - x[i]
+            s = (y[:, i + 1] - y[:, i]) / h               # (F, b)
+            a = (d[:, i] + d[:, i + 1] - 2 * s) / (h * h)
+            b = (3 * s - 2 * d[:, i] - d[:, i + 1]) / h
+            out[~hi] = (((a * t + b) * t + d[:, i]) * t + y[:, i]).T
+        return out
 
 
 def _pava_nondecreasing(y: np.ndarray) -> np.ndarray:
@@ -199,11 +217,22 @@ def fit_autotuners(
 
 
 def scatter_offsets(tuner: Optional[AutoTuner], leaf_ids: np.ndarray,
-                    n_leaves: int, target: float | None) -> np.ndarray:
-    """(L,) offset vector for a quality target; zeros where no filter.
+                    n_leaves: int, target) -> np.ndarray:
+    """Offset vector(s) for quality target(s); zeros where no filter.
+
+    One target → (L,); an array of B per-query targets → (B, L) rows, one
+    per query of a heterogeneous serving micro-batch (each row equals the
+    scalar call for that target — the spline evaluation is shared, see
+    :meth:`AutoTuner.offsets`).
 
     tuner=None (an index that selected zero filters — e.g. every leaf under
     the size threshold) degrades gracefully to the exact index."""
+    t = None if target is None else np.asarray(target, np.float64)
+    if t is not None and t.ndim:
+        out = np.zeros((t.shape[0], n_leaves), np.float32)
+        if tuner is not None and len(leaf_ids):
+            out[:, leaf_ids] = tuner.offsets(t)
+        return out
     out = np.zeros(n_leaves, np.float32)
     if target is not None and tuner is not None and len(leaf_ids):
         out[leaf_ids] = tuner.offsets(target)

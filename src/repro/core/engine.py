@@ -634,10 +634,31 @@ def default_max_survivors(n_leaves: int) -> int:
     An eighth of the shard's leaf slots, rounded up to a power of two: small
     enough that the candidate pass beats the masked scan by ~8× at high
     pruning ratios, large enough that well-calibrated cascades rarely
-    overflow into the scan fallback.  Tune per deployment from observed
-    survivor-count statistics.
+    overflow into the scan fallback.  :func:`tuned_max_survivors` replaces
+    this static guess with a percentile of observed survivor counts.
     """
     return min(_next_pow2(max(n_leaves // 8, 1)), _next_pow2(n_leaves))
+
+
+def tuned_max_survivors(survivor_counts, n_leaves: int,
+                        pct: float = 99.0) -> int:
+    """Survivor capacity from observed per-query survivor-count statistics.
+
+    The ``pct``-th percentile of the observed counts, rounded up to a power
+    of two (the rounding is the drift headroom), clamped to
+    [1, next_pow2(n_leaves)] like the static default.  At matched traffic
+    the overflow-fallback frequency is then bounded by ~(100 − pct)% by
+    construction instead of hoping the P/8 default fits the workload
+    (tests/test_serving.py pins the bound on a drifting distribution).  The
+    serving runtime feeds this from its rolling survivor-count window
+    (``serving.telemetry.Telemetry.suggest_max_survivors``); with no
+    observations yet it degrades to :func:`default_max_survivors`.
+    """
+    counts = np.asarray(survivor_counts)
+    if counts.size == 0:
+        return default_max_survivors(n_leaves)
+    cap = int(np.ceil(np.percentile(counts, pct)))
+    return min(_next_pow2(max(cap, 1)), _next_pow2(n_leaves))
 
 
 def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,

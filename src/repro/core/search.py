@@ -76,6 +76,12 @@ def predictions_for_all_leaves(index: FlatIndex, filter_params,
     element for leaves without a filter: the check can never fire.  Filtered
     leaves get their (offset-adjusted) predictions scattered onto their leaf
     slots.
+
+    ``offsets`` is either one (F,) per-filter vector shared by every query
+    (the paper's form: one quality target per batch) or (Q, F) per-query
+    rows — the serving runtime's heterogeneous micro-batch form, where each
+    query carries its own quality target and hence its own conformal
+    adjustment of the same filter predictions.
     """
     L = index.n_leaves
     Q = queries.shape[0]
@@ -83,7 +89,8 @@ def predictions_for_all_leaves(index: FlatIndex, filter_params,
         return jnp.full((Q, L), -_INF)
     preds = filters.apply_mlp(filter_params, queries, use_kernel)   # (F, Q)
     if offsets is not None:
-        preds = preds - jnp.asarray(offsets)[:, None]
+        off = jnp.asarray(offsets)
+        preds = preds - (off.T if off.ndim == 2 else off[:, None])
     full = jnp.full((L, Q), -_INF)
     full = full.at[jnp.asarray(leaf_ids)].set(preds)
     return full.T                                                   # (Q, L)
@@ -102,7 +109,7 @@ def search_batched(
     filter_params=None,
     leaf_ids: np.ndarray | None = None,
     tuner: Optional[conformal.AutoTuner] = None,
-    quality_target: Optional[float] = None,
+    quality_target: float | np.ndarray | None = None,
     use_filters: bool = True,
     use_kernel: bool = True,
     strategy: str = "auto",
@@ -113,13 +120,30 @@ def search_batched(
     ``strategy``/``dist_impl`` select the engine execution plan (see
     :mod:`repro.core.engine`): "compact" (the "auto" default) only computes
     distances for cascade survivors; "scan" is the masked fallback.
+
+    ``quality_target`` is one target shared by the batch (the paper's form)
+    or an array of Q per-query targets — the serving runtime's heterogeneous
+    micro-batch form, lowered to (Q, F) per-query conformal offset rows (the
+    paper's §4.4 "quality target of each query", batched).  The grouped
+    fallback :func:`search_batched_grouped` answers the same mixed batch as
+    homogeneous sub-batches; tests pin the two equal to float tolerance.
     """
     queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
     d_lb = bounds_mod.lower_bounds(index, queries)                  # (Q, L)
+    if quality_target is not None:
+        nd = np.ndim(quality_target)
+        if nd > 1:
+            raise ValueError(
+                "quality_target must be a scalar or a (Q,) per-query "
+                f"array, got shape {np.shape(quality_target)}")
+        if nd == 1 and np.shape(quality_target)[0] != queries.shape[0]:
+            raise ValueError(
+                f"per-query quality_target has {np.shape(quality_target)[0]} "
+                f"entries for {queries.shape[0]} queries")
     offsets = None
     if use_filters and filter_params is not None and tuner is not None \
             and quality_target is not None:
-        offsets = tuner.offsets(quality_target)
+        offsets = tuner.offsets(quality_target)     # (F,) or (Q, F)
     if use_filters and filter_params is not None:
         d_F = predictions_for_all_leaves(
             index, filter_params, leaf_ids, queries, offsets, use_kernel)
@@ -141,6 +165,52 @@ def search_batched(
         pruned_lb=np.asarray(res.n_pruned_lb),
         pruned_filter=np.asarray(res.n_pruned_filter),
         n_leaves=index.n_leaves, computed=np.asarray(res.n_computed))
+
+
+def search_batched_grouped(
+    index: FlatIndex,
+    queries: np.ndarray,
+    quality_targets: np.ndarray,
+    *,
+    k: int = 1,
+    **kw,
+) -> SearchResult:
+    """Grouped-sub-batch fallback for per-query quality targets.
+
+    Partitions the batch by unique target, answers each homogeneous group
+    through :func:`search_batched` with a scalar target, and stitches the
+    results back in request order.  Semantically identical to passing the
+    target array straight to ``search_batched`` (the (Q, F)-offset path);
+    the sub-batches compile as separate XLA programs, so prune decisions
+    tied within an ulp of the bsf may fuse differently — the parity tests
+    pin the two paths equal to float tolerance, not bitwise
+    (tests/test_serving.py).
+    """
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    targets = np.asarray(quality_targets, np.float64).reshape(-1)
+    Q = queries.shape[0]
+    if targets.shape[0] != Q:
+        raise ValueError(f"{targets.shape[0]} targets for {Q} queries")
+    out: Optional[SearchResult] = None
+    for val in np.unique(targets):
+        sel = np.where(targets == val)[0]
+        r = search_batched(index, queries[sel], k=k,
+                           quality_target=float(val), **kw)
+        if out is None:
+            out = SearchResult(
+                dists=np.empty((Q, r.dists.shape[1]), r.dists.dtype),
+                ids=np.empty((Q, r.ids.shape[1]), r.ids.dtype),
+                searched=np.empty(Q, r.searched.dtype),
+                pruned_lb=np.empty(Q, r.pruned_lb.dtype),
+                pruned_filter=np.empty(Q, r.pruned_filter.dtype),
+                n_leaves=r.n_leaves,
+                computed=np.empty(Q, r.computed.dtype))
+        out.dists[sel], out.ids[sel] = r.dists, r.ids
+        out.searched[sel], out.computed[sel] = r.searched, r.computed
+        out.pruned_lb[sel], out.pruned_filter[sel] = (r.pruned_lb,
+                                                      r.pruned_filter)
+    assert out is not None
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -3,20 +3,28 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
         --batch 4 --prompt-len 64 --gen 32
 
-LeaFi retrieval serving (the similarity-search substrate) goes through the
-same driver with ``--arch leafi``: it builds a smoke-sized LeaFi index and
-answers batched k-NN requests through the :mod:`repro.core.engine` cascade,
-reporting per-batch latency for both engine strategies.
+LeaFi retrieval serving (the similarity-search substrate) is a thin driver
+over :mod:`repro.serving` with ``--arch leafi``: it cold-starts a
+:class:`~repro.serving.session.ServingSession` from a checkpoint (or builds
+a smoke-sized index and checkpoints it when ``--ckpt`` is given), pre-warms
+the per-(bucket, k) programs, and drives a seeded Poisson open-loop trace of
+heterogeneous requests (mixed per-query quality targets) through the
+dynamic micro-batcher, reporting p50/p95/p99 latency, throughput, pruning
+and per-target-group achieved recall.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch leafi --batch 32
+    PYTHONPATH=src python -m repro.launch.serve --arch leafi --batch 32 \
+        --requests 256 --rate 200 --targets 0.9,0.95,0.99 \
+        --ckpt /tmp/leafi_ckpt
 
-``--dist`` additionally routes the batch through the leaf-sharded shard_map
+``--dist`` additionally routes a batch through the leaf-sharded shard_map
 search (``core/distributed.py``) over every visible device, timing both
-per-shard strategies (masked scan vs fixed-width survivor compaction).
+per-shard strategies — with the fixed-width compaction's survivor capacity
+auto-tuned from the serving telemetry's observed survivor counts.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -27,59 +35,107 @@ from ..models import transformer
 
 
 def serve_leafi(args) -> None:
-    """Batched retrieval serving through the engine (scan vs compact)."""
+    """Open-loop micro-batched serving over the LeaFi engine."""
     import numpy as np
 
     from ..core import build, filter_training
     from ..core.summaries import znormalize
+    from ..serving import MicroBatcher, ServingSession, poisson_trace
 
-    rng = np.random.default_rng(args.seed)
-    n, m = 20_000, 128
-    S = rng.standard_normal((n, m), dtype=np.float32).cumsum(axis=1)
-    print(f"building LeaFi index over {n}x{m} series...")
-    lfi = build.build_leafi(S, build.LeaFiConfig(
-        backbone="dstree", leaf_capacity=256, n_global=200, n_local=60,
-        t_filter_over_t_series=20.0,
-        train=filter_training.TrainConfig(epochs=40)))
-    q = znormalize(S[rng.integers(0, n, args.batch)]
-                   + 0.3 * rng.standard_normal((args.batch, m))
-                   .astype(np.float32))
-
-    for strategy in ("scan", "compact"):
-        lfi.search(q, k=5, quality_target=0.99, strategy=strategy)  # warmup
+    targets = tuple(float(t) for t in args.targets.split(","))
+    if args.ckpt and os.path.exists(os.path.join(args.ckpt, "DONE")):
         t0 = time.perf_counter()
-        res = lfi.search(q, k=5, quality_target=0.99, strategy=strategy)
-        dt = time.perf_counter() - t0
-        print(f"serve[{strategy:7s}] {args.batch} queries k=5: "
-              f"{dt*1e3:.1f}ms  searched {res.searched.mean():.1f} "
-              f"computed {res.computed.mean():.1f} "
-              f"of {res.n_leaves} leaves/query")
+        session = ServingSession.from_checkpoint(args.ckpt,
+                                                 strategy=args.strategy)
+        print(f"cold start from {args.ckpt}: "
+              f"{time.perf_counter() - t0:.2f}s "
+              f"({session.lfi.index.n_series} series, "
+              f"{len(session.lfi.leaf_ids)} filters)")
+    else:
+        rng = np.random.default_rng(args.seed)
+        n, m = 20_000, 128
+        S = rng.standard_normal((n, m), dtype=np.float32).cumsum(axis=1)
+        print(f"building LeaFi index over {n}x{m} series...")
+        lfi = build.build_leafi(S, build.LeaFiConfig(
+            backbone="dstree", leaf_capacity=256, n_global=200, n_local=60,
+            t_filter_over_t_series=20.0,
+            train=filter_training.TrainConfig(epochs=40)))
+        session = ServingSession(lfi, strategy=args.strategy)
+        if args.ckpt:
+            session.save(args.ckpt)
+            print(f"checkpointed index to {args.ckpt} "
+                  f"(next start is a cold start)")
+
+    idx = session.lfi.index
+    rng = np.random.default_rng(args.seed + 1)
+    pool = znormalize(
+        np.asarray(idx.series[:idx.n_series])[
+            rng.integers(0, idx.n_series, 256)]
+        + 0.3 * rng.standard_normal((256, idx.length)).astype(np.float32))
+
+    n_warm = session.warmup(max_batch=args.batch, ks=(args.k,),
+                            queries=pool, targets=targets)
+    print(f"warmed {n_warm} (bucket, k) programs "
+          f"[strategy={args.strategy}]")
+
+    trace = poisson_trace(pool, rate=args.rate, n_requests=args.requests,
+                          targets=targets, ks=(args.k,), seed=args.seed)
+    exact = session.search_exact(np.stack([r.query for r in trace]))
+    oracle = {r.rid: float(exact.dists[i, 0])
+              for i, r in enumerate(trace)}
+    report = session.serve(
+        trace, batcher=MicroBatcher(max_batch=args.batch,
+                                    max_wait=args.max_wait_ms / 1e3),
+        recall_oracle=oracle)
+
+    print(f"served {report['n_requests']} requests in "
+          f"{report['n_batches']} batches "
+          f"(padding {report['padding_fraction']:.1%}): "
+          f"{report['throughput_qps']:.1f} qps, latency "
+          f"p50 {report['p50']*1e3:.1f}ms / p95 {report['p95']*1e3:.1f}ms "
+          f"/ p99 {report['p99']*1e3:.1f}ms, pruning "
+          f"{report['pruning_ratio']:.3f}")
+    for t, rec in report["recall_by_target"].items():
+        print(f"  target {t:.3f}: achieved recall {rec['recall']:.3f} "
+              f"(n={rec['n']})")
 
     if args.dist:
-        serve_leafi_distributed(lfi, q)
+        serve_leafi_distributed(session.lfi, pool[:args.batch],
+                                session.telemetry)
 
 
-def serve_leafi_distributed(lfi, q) -> None:
+def serve_leafi_distributed(lfi, q, telemetry=None) -> None:
     """Route the same requests through the shard_map search (1-NN).
 
     Shards the index over every visible device on a 1×D mesh; run with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` to smoke the
     multi-shard path off-TPU.  Compares both per-shard strategies — the
     masked scan and the fixed-width survivor compaction (the default, which
-    skips non-survivor distance compute with fully static shapes).
+    skips non-survivor distance compute with fully static shapes).  When
+    serving telemetry is available, the compaction's survivor capacity comes
+    from its observed survivor-count percentile instead of the static P/8
+    default (conservative: counts were observed on the unsharded leaf set).
     """
     import numpy as np
 
-    from ..core import distributed
+    from ..core import distributed, engine
 
     D = max(len(jax.devices()), 1)
     mesh = distributed.make_search_mesh(1, D)
     sharded = distributed.shard_leafi(lfi, n_shards=D)
-    print(f"distributed serve: {D} shard(s), "
-          f"{sharded.leaf_size.shape[1]} leaf slots/shard")
+    P = sharded.leaf_size.shape[1]
+    tuned = None
+    if telemetry is not None and telemetry.survivors:
+        tuned = telemetry.suggest_max_survivors(P)
+        print(f"distributed serve: {D} shard(s), {P} leaf slots/shard, "
+              f"max_survivors {tuned} (telemetry-tuned; static default "
+              f"{engine.default_max_survivors(P)})")
+    else:
+        print(f"distributed serve: {D} shard(s), {P} leaf slots/shard")
     for strategy in ("scan", "compact"):
         run, *_ = distributed.make_distributed_search(
-            mesh, sharded, strategy=strategy)
+            mesh, sharded, strategy=strategy,
+            max_survivors=tuned if strategy == "compact" else None)
         with mesh:
             nn, total = run(jnp.asarray(q))         # warmup / compile
             jax.block_until_ready(nn)
@@ -100,6 +156,22 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--strategy", default="compact",
+                    choices=("scan", "compact"),
+                    help="engine execution plan for --arch leafi")
+    ap.add_argument("--k", type=int, default=5,
+                    help="neighbours per request (--arch leafi)")
+    ap.add_argument("--requests", type=int, default=128,
+                    help="open-loop trace length (--arch leafi)")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson arrival rate, req/s (--arch leafi)")
+    ap.add_argument("--targets", default="0.9,0.95,0.99",
+                    help="comma-separated per-request quality targets")
+    ap.add_argument("--max-wait-ms", type=float, default=20.0,
+                    help="micro-batcher deadline-flush wait")
+    ap.add_argument("--ckpt", default=None,
+                    help="index checkpoint dir: loads if present, "
+                         "else builds and saves (--arch leafi)")
     ap.add_argument("--dist", action="store_true",
                     help="also smoke the sharded (shard_map) search path "
                          "(--arch leafi only; set XLA_FLAGS="

@@ -1,0 +1,13 @@
+"""LeaFi serving runtime: dynamic micro-batching over the search engine.
+
+Public API:
+    MicroBatcher, Request, MicroBatch      admission queue + flush policy
+    poisson_trace, run_trace               open-loop traffic + event drive
+    ServingSession, save_index, load_index warmed sessions + cold start
+    Telemetry, latency_percentiles         rolling serving counters
+"""
+from .batcher import (MicroBatch, MicroBatcher, Request,  # noqa: F401
+                      poisson_trace, run_trace)
+from .session import (ServingSession, load_index,         # noqa: F401
+                      save_index)
+from .telemetry import Telemetry, latency_percentiles     # noqa: F401

@@ -1,0 +1,284 @@
+"""Serving session: a warmed, checkpointable facade over a built LeaFi index.
+
+A :class:`ServingSession` owns the three things a long-lived serving process
+needs beyond the engine itself:
+
+* **cold start** — the built index (backbone arrays, stacked filter params,
+  conformal tuner) round-trips through :mod:`repro.checkpoint` as one atomic
+  pytree checkpoint (:func:`save_index` / :func:`load_index`), so a restart
+  loads in seconds instead of re-running Alg. 1's build pipeline;
+* **program cache pre-warm** — :meth:`ServingSession.warmup` drives one
+  dummy search per (bucket, k) shape through the session's engine strategy,
+  so jit compilation happens before traffic, not under it (the batcher's
+  pow2 buckets are what keeps this set small);
+* **execution + accounting** — :meth:`ServingSession.execute` answers one
+  :class:`~repro.serving.batcher.MicroBatch` (per-query quality targets
+  lowered to (B, F) conformal offset rows), and :meth:`ServingSession.serve`
+  drives a whole open-loop trace through the micro-batcher, folding latency,
+  pruning, survivor and recall counters into the session's
+  :class:`~repro.serving.telemetry.Telemetry`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .. import checkpoint
+from ..core import build, conformal, search
+from ..core.flat_index import FlatIndex
+from . import batcher as batcher_mod
+from .batcher import MicroBatch, MicroBatcher, Request, _pow2_floor
+from .telemetry import (Telemetry, latency_percentiles,
+                        observe_recall_cell, recall_summary)
+
+# ---------------------------------------------------------------------------
+# index persistence (cold start)
+# ---------------------------------------------------------------------------
+
+_CONFIG_FIELDS = ("backbone", "leaf_capacity", "n_segments", "word_len",
+                  "n_global", "n_local", "calib_fraction", "a",
+                  "t_filter_over_t_series", "filter_memory_budget_bytes",
+                  "hidden", "seed")
+
+
+def save_index(path: str, lfi: build.LeaFiIndex,
+               metadata: Optional[dict] = None) -> None:
+    """Checkpoint a built LeaFi index (atomic; see checkpoint.save_pytree).
+
+    Arrays (series, leaf layout, summarization payload, stacked filter
+    params, tuner knots) go into the pytree; scalars and structure (kind,
+    sizes, config) ride in the metadata blob, so :func:`load_index` can
+    reconstruct without a template object.
+    """
+    idx = lfi.index
+    tuner = lfi.tuner
+    tree = {
+        "series": np.asarray(idx.series),
+        "order": np.asarray(idx.order),
+        "leaf_start": np.asarray(idx.leaf_start),
+        "leaf_size": np.asarray(idx.leaf_size),
+        "payload": {k: np.asarray(v) for k, v in idx.payload.items()},
+        "filter_params": ({k: np.asarray(v)
+                           for k, v in lfi.filter_params.items()}
+                          if lfi.filter_params is not None else {}),
+        "leaf_ids": np.asarray(lfi.leaf_ids, np.int64),
+        "tuner": ({"knots_q": tuner.knots_q, "knots_o": tuner.knots_o,
+                   "slopes": tuner.slopes, "max_offset": tuner.max_offset}
+                  if tuner is not None else {}),
+    }
+    cfg = dataclasses.asdict(lfi.config)
+    cfg.pop("train", None)                    # training recipe: not needed
+    meta = {"kind": idx.kind, "max_leaf_size": int(idx.max_leaf_size),
+            "n_series": int(idx.n_series), "length": int(idx.length),
+            "config": cfg,
+            "build_report": {k: float(v)
+                             for k, v in lfi.build_report.items()}}
+    meta.update(metadata or {})
+    checkpoint.save_pytree(path, tree, meta)
+
+
+def load_index(path: str) -> build.LeaFiIndex:
+    """Rebuild a LeaFiIndex from a :func:`save_index` checkpoint.
+
+    Search over the loaded index is pinned identical to the saved one
+    (tests/test_serving.py): the arrays round-trip verbatim and the engine
+    sees the same inputs in the same process context.
+    """
+    flat, meta = checkpoint.load_pytree(path)
+
+    def group(name: str):
+        """One top-level entry: a leaf array, or a dict of its children."""
+        pre = f"['{name}']"
+        if pre in flat:
+            return flat[pre]
+        return {k[len(pre) + 1:][2:-2]: v
+                for k, v in flat.items() if k.startswith(pre + "/")}
+
+    index = FlatIndex(
+        kind=meta["kind"], series=group("series"), order=group("order"),
+        leaf_start=group("leaf_start"), leaf_size=group("leaf_size"),
+        max_leaf_size=int(meta["max_leaf_size"]),
+        n_series=int(meta["n_series"]), length=int(meta["length"]),
+        payload=group("payload"))
+    params = group("filter_params") or None
+    tn = group("tuner")
+    tuner = conformal.AutoTuner(**tn) if tn else None
+    cfg_kw = {k: meta["config"][k] for k in _CONFIG_FIELDS
+              if k in meta.get("config", {})}
+    return build.LeaFiIndex(
+        index=index, filter_params=params, leaf_ids=group("leaf_ids"),
+        tuner=tuner, config=build.LeaFiConfig(**cfg_kw),
+        build_report=dict(meta.get("build_report", {})))
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+
+def _pow2_buckets(max_batch: int) -> List[int]:
+    """Every bucket a MicroBatcher capped at ``max_batch`` can emit."""
+    return [1 << i for i in range(_pow2_floor(max_batch).bit_length())]
+
+
+class ServingSession:
+    """A query-serving runtime over one built LeaFi index."""
+
+    def __init__(self, lfi: build.LeaFiIndex, *, strategy: str = "compact",
+                 dist_impl: Optional[str] = None,
+                 telemetry: Optional[Telemetry] = None):
+        self.lfi = lfi
+        self.strategy = strategy
+        self.dist_impl = dist_impl
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._warmed: set = set()
+
+    # -- cold start ---------------------------------------------------------
+
+    @classmethod
+    def from_checkpoint(cls, path: str, **kw) -> "ServingSession":
+        return cls(load_index(path), **kw)
+
+    def save(self, path: str, metadata: Optional[dict] = None) -> None:
+        save_index(path, self.lfi, metadata)
+
+    # -- program pre-warm ---------------------------------------------------
+
+    def warmup(self, *, max_batch: int = 64, ks: Sequence[int] = (1,),
+               buckets: Optional[Sequence[int]] = None,
+               queries: Optional[np.ndarray] = None,
+               targets: Sequence[float] = (0.9, 0.99)) -> int:
+        """Compile the per-(bucket, k) programs before traffic arrives.
+
+        ``queries`` should be representative of live traffic when possible —
+        the compact strategy's inner programs are additionally keyed on
+        survivor-count buckets, which depend on how well real queries prune
+        (the scan strategy is exactly one program per (bucket, k)).  Returns
+        the number of (bucket, k) shapes warmed.
+        """
+        buckets = list(buckets) if buckets is not None \
+            else _pow2_buckets(max_batch)
+        if queries is None:
+            idx = self.lfi.index
+            queries = np.asarray(idx.series[:max(buckets)])
+        n = 0
+        for k in ks:
+            for b in buckets:
+                if (b, k) in self._warmed:
+                    continue
+                q = np.asarray(queries)[np.arange(b) % len(queries)]
+                t = np.asarray(targets, np.float64)[np.arange(b)
+                                                    % len(targets)]
+                self.search(q, quality_targets=t, k=k, record=False)
+                self._warmed.add((b, k))
+                n += 1
+        return n
+
+    # -- execution ----------------------------------------------------------
+
+    def search(self, queries: np.ndarray,
+               quality_targets=None, k: int = 1,
+               record: bool = True, **kw) -> search.SearchResult:
+        """One batched search; per-query targets lowered to offset rows."""
+        lfi = self.lfi
+        res = search.search_batched(
+            lfi.index, queries, k=k, filter_params=lfi.filter_params,
+            leaf_ids=lfi.leaf_ids, tuner=lfi.tuner,
+            quality_target=quality_targets,
+            use_filters=quality_targets is not None,
+            strategy=self.strategy, dist_impl=self.dist_impl, **kw)
+        if record:
+            Q = np.atleast_2d(queries).shape[0]
+            self.telemetry.record_batch(res, n_valid=Q, bucket=Q)
+        return res
+
+    def search_exact(self, queries: np.ndarray,
+                     k: int = 1) -> search.SearchResult:
+        return self.search(queries, quality_targets=None, k=k, record=False)
+
+    def execute(self, batch: MicroBatch) -> search.SearchResult:
+        """Answer one micro-batch; telemetry sees only the valid rows."""
+        res = self.search(batch.queries, quality_targets=batch.targets,
+                          k=batch.k, record=False)
+        self.telemetry.record_batch(res, n_valid=batch.n_valid,
+                                    bucket=batch.bucket)
+        return res
+
+    # -- open-loop serving --------------------------------------------------
+
+    def serve(self, trace: Sequence[Request], *,
+              batcher: Optional[MicroBatcher] = None,
+              recall_oracle: Optional[Dict[int, float]] = None,
+              service_time: Optional[Callable[[MicroBatch], float]] = None,
+              ) -> dict:
+        """Drive a whole arrival trace; returns a *per-trace* report.
+
+        Every number in the report describes this trace alone — the
+        session's :attr:`telemetry` keeps the rolling lifetime view across
+        traces (and is also fed by this run).  Completions store a
+        per-request projection (top-1 distance + searched count), not the
+        batch results, so memory stays O(1) per request on long traces.
+
+        ``recall_oracle`` maps rid → exact 1-NN distance; when given, each
+        completion is scored against it (the paper's recall@1 rule) and
+        folded into the per-target-group recall estimators.
+        ``service_time`` replaces measured wall-clock with injected
+        per-batch costs (fully deterministic runs for tests; see
+        benchmarks/serve_bench.py for the fixed-schedule-replay use).
+        """
+        batcher = batcher or MicroBatcher()
+
+        def extract(res: search.SearchResult, pos: int) -> dict:
+            return {"dist": float(np.asarray(res.dists)[pos, 0]),
+                    "searched": float(np.asarray(res.searched)[pos]),
+                    "n_leaves": res.n_leaves}
+
+        completions, batch_log = batcher_mod.run_trace(
+            trace, batcher, self.execute, service_time=service_time,
+            extract=extract)
+        lats: List[float] = []
+        searched: List[float] = []
+        for c in completions.values():
+            self.telemetry.record_latency(c["latency"])
+            lats.append(c["latency"])
+            searched.append(c["result"]["searched"])
+        # score recall with the calibration-time rule (one shared
+        # definition: conformal.recall_at_1), vectorized over the trace
+        recall: Dict[float, list] = {}
+        scored = ([] if recall_oracle is None else
+                  [(rid, c) for rid, c in completions.items()
+                   if rid in recall_oracle])
+        if scored:
+            hits = np.asarray(conformal.recall_at_1(
+                np.asarray([c["result"]["dist"] for _, c in scored],
+                           np.float32),
+                np.asarray([recall_oracle[rid] for rid, _ in scored],
+                           np.float32))) > 0
+            for (rid, c), hit in zip(scored, hits):
+                self.telemetry.observe_recall(c["target"], bool(hit))
+                observe_recall_cell(recall, c["target"], bool(hit))
+        n_valid = sum(b["n_valid"] for b in batch_log)
+        n_slots = sum(b["bucket"] for b in batch_log)
+        n_leaves = (next(iter(completions.values()))["result"]["n_leaves"]
+                    if completions else 0)
+        report = {
+            "n_requests": len(completions),
+            "n_batches": len(batch_log),
+            "padding_fraction": (n_slots - n_valid) / max(n_slots, 1),
+            "pruning_ratio": (1.0 - float(np.mean(searched)) / n_leaves
+                              if searched and n_leaves else float("nan")),
+            "recall_by_target": recall_summary(recall),
+        }
+        report.update(latency_percentiles(lats))
+        if completions:
+            first = min(r.arrival for r in trace)
+            last = max(c["finish"] for c in completions.values())
+            report["throughput_qps"] = len(completions) / max(last - first,
+                                                              1e-12)
+            report["makespan_s"] = last - first
+        report["n_programs_warmed"] = len(self._warmed)
+        report["batches"] = batch_log
+        report["completions"] = completions
+        return report

@@ -1,0 +1,116 @@
+"""Serving telemetry: rolling latency percentiles, pruning/survivor
+counters, and an online achieved-recall estimator per quality-target group.
+
+Everything is windowed (bounded deques) so a long-lived serving session
+reports *recent* behaviour: latency p50/p95/p99 over the last W requests,
+pruning ratio and survivor counts over the last W queries, and per-target
+recall as a running (hits, total) pair per distinct requested target.
+
+The survivor-count window doubles as the feedback signal for the
+fixed-width distributed compaction: :meth:`Telemetry.suggest_max_survivors`
+feeds a percentile of the observed counts to
+:func:`repro.core.engine.tuned_max_survivors`, replacing the static P/8
+capacity default with one the live workload justifies (ROADMAP PR-3
+follow-up).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from ..core import engine
+
+
+def latency_percentiles(samples, pcts: Sequence[int] = (50, 95, 99)
+                        ) -> Dict[str, float]:
+    """{'p50': …, 'p95': …, 'p99': …} from a latency sample iterable."""
+    arr = np.asarray(list(samples), np.float64)
+    if arr.size == 0:
+        return {f"p{p}": float("nan") for p in pcts}
+    return {f"p{p}": float(np.percentile(arr, p)) for p in pcts}
+
+
+def observe_recall_cell(cells: Dict[float, list], target: float,
+                        hit: bool) -> None:
+    """Fold one recall@1 outcome into a {target: [hits, total]} accumulator.
+
+    The one definition of target-group keying (rounded to 6 decimals),
+    shared by the lifetime :class:`Telemetry` window and the per-trace
+    report in :meth:`~repro.serving.session.ServingSession.serve`."""
+    cell = cells.setdefault(round(float(target), 6), [0, 0])
+    cell[0] += bool(hit)
+    cell[1] += 1
+
+
+def recall_summary(cells: Dict[float, list]) -> Dict[float, Dict[str, float]]:
+    """{target: {'recall': …, 'n': …}} view of a recall-cell accumulator."""
+    return {t: {"recall": h / n if n else float("nan"), "n": n}
+            for t, (h, n) in sorted(cells.items())}
+
+
+class Telemetry:
+    """Rolling serving counters; one instance per :class:`ServingSession`."""
+
+    def __init__(self, window: int = 4096):
+        self.window = window
+        self.latencies: deque = deque(maxlen=window)      # seconds/request
+        self.searched: deque = deque(maxlen=window)       # leaves/query
+        self.survivors: deque = deque(maxlen=window)      # computed leaves/q
+        self._recall: Dict[float, list] = {}              # target → [hit, n]
+        self.n_leaves: Optional[int] = None
+        self.n_requests = 0
+        self.n_batches = 0
+        self.n_padded = 0                                 # wasted batch slots
+
+    # -- recording ----------------------------------------------------------
+
+    def record_batch(self, result, n_valid: int, bucket: int) -> None:
+        """Fold one executed batch's SearchResult (valid rows only)."""
+        self.n_batches += 1
+        self.n_requests += n_valid
+        self.n_padded += bucket - n_valid
+        self.n_leaves = result.n_leaves
+        self.searched.extend(np.asarray(result.searched)[:n_valid].tolist())
+        if result.computed is not None:
+            self.survivors.extend(
+                np.asarray(result.computed)[:n_valid].tolist())
+
+    def record_latency(self, seconds: float) -> None:
+        self.latencies.append(float(seconds))
+
+    def observe_recall(self, target: float, hit: bool) -> None:
+        """One request's recall@1 outcome against the exact oracle."""
+        observe_recall_cell(self._recall, target, hit)
+
+    # -- reading ------------------------------------------------------------
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        return latency_percentiles(self.latencies)
+
+    def pruning_ratio(self) -> float:
+        if not self.searched or not self.n_leaves:
+            return float("nan")
+        return 1.0 - float(np.mean(self.searched)) / self.n_leaves
+
+    def recall_by_target(self) -> Dict[float, Dict[str, float]]:
+        return recall_summary(self._recall)
+
+    def suggest_max_survivors(self, n_leaves: Optional[int] = None,
+                              pct: float = 99.0) -> int:
+        """Percentile-based survivor capacity from the observed window."""
+        L = n_leaves if n_leaves is not None else (self.n_leaves or 1)
+        return engine.tuned_max_survivors(np.asarray(self.survivors), L, pct)
+
+    def summary(self) -> dict:
+        out = {"n_requests": self.n_requests, "n_batches": self.n_batches,
+               "padding_fraction": (self.n_padded /
+                                    max(self.n_padded + self.n_requests, 1)),
+               "pruning_ratio": self.pruning_ratio(),
+               "recall_by_target": self.recall_by_target()}
+        out.update(self.latency_percentiles())
+        if self.survivors:
+            out["survivors_mean"] = float(np.mean(self.survivors))
+            out["suggested_max_survivors"] = self.suggest_max_survivors()
+        return out

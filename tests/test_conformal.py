@@ -80,6 +80,38 @@ def test_fit_autotuners_end_to_end():
     np.testing.assert_allclose(top, tuner.max_offset)
 
 
+def test_offsets_batched_matches_scalar_loop():
+    """The (B,) target form is the scalar spline evaluation, row for row —
+    bitwise, since both route through one vectorized implementation."""
+    rng = np.random.default_rng(1)
+    C, L = 100, 40
+    leaf_ids = np.arange(0, L, 2)
+    d_L = rng.uniform(1, 20, (C, L)).astype(np.float32)
+    d_lb = (d_L * rng.uniform(0.2, 0.9, (C, L))).astype(np.float32)
+    d_pred = np.full((C, L), -np.inf, np.float32)
+    d_pred[:, leaf_ids] = d_L[:, leaf_ids] + rng.normal(
+        0, 1.5, (C, len(leaf_ids)))
+    tuner, _ = conformal.fit_autotuners(d_lb, d_pred, d_L, leaf_ids)
+    # interior, below-lowest-knot, above-highest-knot, and knot-exact targets
+    targets = np.concatenate([np.linspace(0.0, 1.2, 25),
+                              tuner.knots_q[:3].astype(np.float64)])
+    batched = tuner.offsets(targets)
+    assert batched.shape == (len(targets), len(leaf_ids))
+    for i, t in enumerate(targets):
+        np.testing.assert_array_equal(batched[i], tuner.offsets(float(t)))
+    # scatter_offsets: (B, L) rows pin against the scalar loop too
+    rows = conformal.scatter_offsets(tuner, leaf_ids, L, targets)
+    assert rows.shape == (len(targets), L)
+    for i, t in enumerate(targets):
+        np.testing.assert_array_equal(
+            rows[i], conformal.scatter_offsets(tuner, leaf_ids, L, float(t)))
+    # degenerate forms keep their contracts
+    assert conformal.scatter_offsets(None, leaf_ids, L, targets).shape \
+        == (len(targets), L)
+    assert (conformal.scatter_offsets(None, leaf_ids, L, targets) == 0).all()
+    assert conformal.scatter_offsets(tuner, leaf_ids, L, None).shape == (L,)
+
+
 def test_steffen_spline_is_monotone_and_interpolating():
     x = np.array([0.0, 0.3, 0.7, 0.9, 1.0])
     y = np.array([[0.0, 1.0, 1.5, 4.0, 4.5]])

@@ -1,0 +1,266 @@
+"""Serving runtime: batcher policy determinism, per-query-target parity,
+per-group recall on calibration queries, checkpoint cold start, and
+survivor-capacity auto-tuning.
+
+Parity caveat: the vectorized (Q, F)-offset path and the grouped-sub-batch
+fallback compile as *different XLA programs* over the same per-query
+arithmetic, so prune decisions tied within an ulp of the bsf may fuse
+differently — the pins below use float tolerance plus a small searched-count
+slack, not bitwise equality (cf. tests/test_distributed.py).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import build, conformal, engine, filter_training, search
+from repro.core.summaries import znormalize
+from repro.serving import (MicroBatcher, ServingSession,
+                           latency_percentiles, load_index, poisson_trace,
+                           run_trace, save_index)
+
+
+@pytest.fixture(scope="module", params=["dstree", "isax"])
+def lfi(request, randwalk_small):
+    cfg = build.LeaFiConfig(backbone=request.param, leaf_capacity=64,
+                            n_global=200, n_local=50,
+                            t_filter_over_t_series=10.0,
+                            train=filter_training.TrainConfig(epochs=30))
+    return build.build_leafi(randwalk_small[:2500], cfg)
+
+
+@pytest.fixture(scope="module")
+def mixed_queries(randwalk_small):
+    rng = np.random.default_rng(11)
+    q = znormalize(randwalk_small[rng.integers(0, 2500, 48)]
+                   + 0.2 * rng.standard_normal((48, 96)).astype(np.float32))
+    targets = np.asarray([0.7, 0.85, 0.95])[rng.integers(0, 3, 48)]
+    return q, targets
+
+
+# ---------------------------------------------------------------------------
+# per-query quality targets: vectorized (Q, F) offsets vs grouped fallback
+# ---------------------------------------------------------------------------
+
+
+def _search_kw(lfi):
+    return dict(filter_params=lfi.filter_params, leaf_ids=lfi.leaf_ids,
+                tuner=lfi.tuner)
+
+
+@pytest.mark.parametrize("strategy", ["scan", "compact"])
+def test_per_query_offsets_match_grouped(lfi, mixed_queries, strategy):
+    q, targets = mixed_queries
+    vec = search.search_batched(lfi.index, q, k=5, quality_target=targets,
+                                strategy=strategy, **_search_kw(lfi))
+    grp = search.search_batched_grouped(lfi.index, q, targets, k=5,
+                                        strategy=strategy, **_search_kw(lfi))
+    np.testing.assert_allclose(vec.dists, grp.dists, rtol=1e-5, atol=1e-6)
+    # ulp-tied prune decisions may differ across programs: tiny slack only
+    assert np.abs(vec.searched - grp.searched).max() <= 2
+    neq = vec.ids != grp.ids
+    assert neq.mean() <= 0.02, f"{neq.sum()} id mismatches beyond ties"
+
+
+def test_uniform_target_array_matches_scalar(lfi, mixed_queries):
+    """A constant target array is the scalar path, batched."""
+    q, _ = mixed_queries
+    arr = search.search_batched(lfi.index, q, quality_target=np.full(48, 0.9),
+                                **_search_kw(lfi))
+    sca = search.search_batched(lfi.index, q, quality_target=0.9,
+                                **_search_kw(lfi))
+    np.testing.assert_allclose(arr.dists, sca.dists, rtol=1e-5, atol=1e-6)
+    assert np.abs(arr.searched - sca.searched).max() <= 2
+
+
+def test_target_array_length_mismatch_raises(lfi, mixed_queries):
+    q, _ = mixed_queries
+    with pytest.raises(ValueError, match="per-query quality_target"):
+        search.search_batched(lfi.index, q, quality_target=np.full(7, 0.9),
+                              **_search_kw(lfi))
+    with pytest.raises(ValueError, match="scalar or a \\(Q,\\)"):
+        search.search_batched(lfi.index, q,
+                              quality_target=np.full((len(q), 1), 0.9),
+                              **_search_kw(lfi))
+
+
+def test_per_group_recall_meets_targets_on_calibration_queries(lfi):
+    """Mixed targets on the build's own calibration split: each group's
+    achieved recall must meet its requested target, up to the one-query
+    quantization of a small group (1/n)."""
+    cfg = lfi.config
+    key = jax.random.PRNGKey(cfg.seed)
+    kdata, _ = jax.random.split(key)
+    kg, _ = jax.random.split(kdata)
+    gq = filter_training.make_noisy_queries(
+        np.asarray(lfi.index.series[:lfi.index.n_series]),
+        cfg.n_global, kg, 0.1, 0.4)
+    n_cal = max(int(cfg.n_global * cfg.calib_fraction), 8)
+    calib = gq[-n_cal:]                   # the split build_leafi calibrated on
+    rng = np.random.default_rng(3)
+    targets = np.asarray([0.7, 0.85, 0.95])[rng.integers(0, 3, n_cal)]
+    exact = lfi.search_exact(calib)
+    res = lfi.search(calib, quality_target=targets)
+    hit = np.asarray(conformal.recall_at_1(res.dists[:, 0],
+                                           exact.dists[:, 0])) > 0
+    for t in np.unique(targets):
+        sel = targets == t
+        recall = hit[sel].mean()
+        assert recall >= t - 1.0 / sel.sum() - 1e-9, \
+            f"target {t}: recall {recall:.3f} over {sel.sum()} queries"
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher: bucket/flush policy + determinism under a seeded trace
+# ---------------------------------------------------------------------------
+
+
+def _toy_trace(rate, n=64, seed=5, ks=(1, 5)):
+    pool = np.random.default_rng(0).standard_normal((8, 4)).astype(np.float32)
+    return poisson_trace(pool, rate=rate, n_requests=n,
+                         targets=(0.8, 0.9, 0.99), ks=ks, seed=seed)
+
+
+def _drive(trace, max_batch, max_wait, service=1e-3):
+    batcher = MicroBatcher(max_batch=max_batch, max_wait=max_wait)
+    return run_trace(trace, batcher, lambda b: None,
+                     service_time=lambda b: service)
+
+
+def test_batcher_policy_and_completeness():
+    trace = _toy_trace(rate=2000.0)       # saturating arrivals
+    completions, batch_log = _drive(trace, max_batch=8, max_wait=0.01)
+    assert sorted(completions) == [r.rid for r in trace]   # all served once
+    arrivals = {r.rid: r.arrival for r in trace}
+    ks = {r.rid: r.k for r in trace}
+    for b in batch_log:
+        assert b["bucket"] in (1, 2, 4, 8) and b["n_valid"] <= b["bucket"]
+    # FIFO within each k-group; batches are k-homogeneous by construction
+    for k in (1, 5):
+        order = [rid for rid in sorted(completions,
+                                       key=lambda r: completions[r]["finish"])
+                 if ks[rid] == k]
+        assert all(arrivals[a] <= arrivals[b] + 1e-12
+                   for a, b in zip(order, order[1:]))
+
+
+def test_batcher_deadline_flush_under_light_load():
+    """At low rate every request flushes at its deadline, not max_batch."""
+    trace = _toy_trace(rate=10.0, n=16, ks=(1,))
+    service = 1e-3
+    max_wait = 0.01
+    completions, batch_log = _drive(trace, max_batch=8, max_wait=max_wait,
+                                    service=service)
+    for b in batch_log:
+        assert b["n_valid"] < 8           # never a size flush at this rate
+    for rid, c in completions.items():
+        # a request can join an older request's batch (the deadline is the
+        # *oldest* member's), so only the upper bound is per-request
+        assert c["latency"] <= max_wait + 2 * service + 1e-9
+    # …but each batch's oldest member did wait out the full deadline
+    for finish in {c["finish"] for c in completions.values()}:
+        members = [c for c in completions.values() if c["finish"] == finish]
+        assert max(m["latency"] for m in members) >= max_wait - 1e-9
+
+
+def test_batcher_trace_replay_is_deterministic():
+    trace = _toy_trace(rate=500.0)
+    a_c, a_log = _drive(trace, max_batch=8, max_wait=0.005)
+    b_c, b_log = _drive(trace, max_batch=8, max_wait=0.005)
+    # everything but the measured wall-clock around execute is replayable
+    strip = lambda log: [{k: v for k, v in b.items() if k != "wall"}
+                         for b in log]
+    assert strip(a_log) == strip(b_log)
+    assert {r: c["latency"] for r, c in a_c.items()} == \
+        {r: c["latency"] for r, c in b_c.items()}
+    # and the trace itself replays identically from its seed
+    t2 = _toy_trace(rate=500.0)
+    assert [(r.rid, r.arrival, r.k, r.quality_target) for r in t2] == \
+        [(r.rid, r.arrival, r.k, r.quality_target) for r in trace]
+
+
+# ---------------------------------------------------------------------------
+# session: cold start round-trip + end-to-end serve loop
+# ---------------------------------------------------------------------------
+
+
+def test_index_checkpoint_roundtrip_search_parity(lfi, mixed_queries,
+                                                  tmp_path):
+    q, targets = mixed_queries
+    path = str(tmp_path / "leafi_idx")
+    save_index(path, lfi)
+    lfi2 = load_index(path)
+    assert lfi2.index.kind == lfi.index.kind
+    assert lfi2.config.backbone == lfi.config.backbone
+    a = lfi.search(q, k=3, quality_target=targets)
+    b = lfi2.search(q, k=3, quality_target=targets)
+    # identical arrays through identical programs: exact equality
+    np.testing.assert_array_equal(a.dists, b.dists)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.searched, b.searched)
+
+
+def test_serving_session_end_to_end(lfi, mixed_queries):
+    q, _ = mixed_queries
+    session = ServingSession(lfi, strategy="compact")
+    n = session.warmup(max_batch=4, ks=(1,), queries=q)
+    assert n == 3 and session.warmup(max_batch=4, ks=(1,)) == 0  # cached
+    trace = poisson_trace(q, rate=400.0, n_requests=24,
+                          targets=(0.8, 0.95), ks=(1,), seed=2)
+    exact = session.search_exact(np.stack([r.query for r in trace]))
+    oracle = {r.rid: float(exact.dists[i, 0]) for i, r in enumerate(trace)}
+    report = session.serve(
+        trace, batcher=MicroBatcher(max_batch=4, max_wait=0.002),
+        recall_oracle=oracle)
+    assert report["n_requests"] == 24
+    assert report["throughput_qps"] > 0
+    assert np.isfinite(report["p99"]) and report["p50"] <= report["p99"]
+    groups = report["recall_by_target"]
+    assert set(groups) <= {0.8, 0.95}
+    assert sum(g["n"] for g in groups.values()) == 24
+    for g in groups.values():
+        assert 0.0 <= g["recall"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# telemetry + survivor-capacity auto-tuning
+# ---------------------------------------------------------------------------
+
+
+def test_latency_percentiles_helper():
+    p = latency_percentiles(np.arange(1, 101))
+    assert p["p50"] == pytest.approx(50.5)
+    assert p["p99"] == pytest.approx(99.01)
+    assert np.isnan(latency_percentiles([])["p95"])
+
+
+def test_tuned_max_survivors_bounds_overflow():
+    """Percentile-chosen capacity keeps the overflow-fallback frequency
+    bounded on fresh traffic from the same workload (the regression the
+    static P/8 default cannot promise)."""
+    L = 1024
+    rng = np.random.default_rng(0)
+    calib = rng.lognormal(mean=3.0, sigma=0.8, size=4000).astype(int) + 1
+    cap = engine.tuned_max_survivors(calib, L, pct=99.0)
+    assert 1 <= cap <= 2 * L and cap & (cap - 1) == 0      # pow2, clamped
+    fresh = rng.lognormal(mean=3.0, sigma=0.8, size=4000).astype(int) + 1
+    assert (fresh > cap).mean() <= 0.02                    # ~1% by design
+    # degenerate inputs fall back to the static default
+    assert engine.tuned_max_survivors([], L) == \
+        engine.default_max_survivors(L)
+    # huge observed counts clamp at the leaf-slot ceiling
+    assert engine.tuned_max_survivors([10 * L], L) <= \
+        engine.tuned_max_survivors([L], L)
+
+
+def test_telemetry_feeds_capacity_and_counters(lfi, mixed_queries):
+    q, targets = mixed_queries
+    session = ServingSession(lfi, strategy="compact")
+    res = session.search(q, quality_targets=targets, k=1)
+    tel = session.telemetry
+    assert tel.n_requests == len(q)
+    assert 0.0 <= tel.pruning_ratio() <= 1.0
+    cap = tel.suggest_max_survivors()
+    assert cap >= 1 and cap & (cap - 1) == 0
+    # capacity covers ≥99% of the observed survivor counts
+    surv = np.asarray(res.computed)
+    assert (surv > cap).mean() <= 0.01 + 1.0 / len(surv)
