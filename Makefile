@@ -9,7 +9,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: test test-fast lint bench bench-engine bench-build bench-dist \
-	bench-serve dev-deps
+	bench-serve bench-filters dev-deps
 
 test: lint
 	python -m pytest -x -q
@@ -41,6 +41,9 @@ bench-dist:
 
 bench-serve:
 	python -m benchmarks.run --suite serve
+
+bench-filters:
+	python -m benchmarks.run --suite filters
 
 dev-deps:
 	pip install -r requirements-dev.txt

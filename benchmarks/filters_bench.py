@@ -1,0 +1,148 @@
+"""Filter-inference kernel suite: per-filter sweep vs fused megakernel.
+
+Sweeps filter count × weight dtype × implementation on one (Q, m, h) shape
+and pins the measurement against the analytic three-term roofline bound
+(:func:`repro.analysis.roofline.filter_mlp_roofline`).
+
+Off-TPU the kernels run in Pallas interpret mode, where wall-clock is
+dominated by per-grid-step Python dispatch — absolute numbers are
+meaningless, but the *step-count* structure is exactly the TPU launch
+structure: the per-filter kernel runs F·Q/bq steps, the fused kernel
+F/bf·Q/bq, so the bf× interpret-mode gap at large F is the same gap the
+grid does on hardware.  The roofline block carries the bandwidth-bound
+projection (the number that matters on a v5e); both are reported side by
+side in the payload.
+
+    PYTHONPATH=src python -m benchmarks.run --suite filters
+    make bench-filters
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import roofline
+from repro.core import filters
+from repro.kernels.common import use_interpret
+from repro.kernels.filter_mlp import ops as mlp_ops
+from repro.kernels.filter_mlp import ref as mlp_ref
+
+from . import common
+
+F_VALUES = (64, 256, 1024, 4096)
+DTYPES = ("float32", "bfloat16", "int8")
+BQ, BF = 128, 8
+
+
+def _make_stack(F: int, m: int, h: int, rng) -> Dict[str, jnp.ndarray]:
+    p = {
+        "w1": jnp.asarray(rng.standard_normal((F, m, h)) * 0.2, jnp.float32),
+        "b1": jnp.asarray(rng.standard_normal((F, h)) * 0.1, jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((F, h)) * 0.2, jnp.float32),
+        "b2": jnp.asarray(rng.standard_normal((F,)), jnp.float32),
+        "y_mean": jnp.asarray(rng.standard_normal((F,)), jnp.float32),
+        "y_std": jnp.asarray(
+            np.abs(rng.standard_normal((F,))) + 0.5, jnp.float32),
+    }
+    return p
+
+
+def _per_filter_call(p, queries, off, interpret):
+    """The pre-fusion composition: per-filter kernel + 3 broadcast passes."""
+    z = mlp_ops.filter_predict(p["w1"], p["b1"], p["w2"], p["b2"], queries,
+                               interpret=interpret)
+    return z * p["y_std"][:, None] + p["y_mean"][:, None] - off[:, None]
+
+
+def _fused_call(p, queries, off, interpret):
+    return mlp_ops.filter_predict_fused(
+        p["w1"], p["b1"], p["w2"], p["b2"], p["y_mean"], p["y_std"],
+        queries, off, p.get("w1_scale"), p.get("w2_scale"),
+        bq=BQ, bf=BF, interpret=interpret)
+
+
+def bench_filters(f_values=F_VALUES, q: int = 128, m: int = 128,
+                  h: int = 128) -> Tuple[List[str], Dict]:
+    interpret = True if use_interpret() else False
+    rng = np.random.default_rng(0)
+    queries = jnp.asarray(rng.standard_normal((q, m)), jnp.float32)
+    rows: List[str] = []
+    results: List[Dict] = []
+
+    # parity spot-check at the smallest size: every timed path against the
+    # dequantized oracle (the fast paths must be *right* before being fast)
+    F0 = int(f_values[0])
+    p0 = _make_stack(F0, m, h, rng)
+    off0 = jnp.asarray(np.abs(rng.standard_normal((F0,))), jnp.float32)
+    parity = {}
+    for dt in DTYPES:
+        pq = filters.quantize_mlp(p0, dt)
+        want = mlp_ref.filter_predict_destd(
+            pq["w1"], pq["b1"], pq["w2"], pq["b2"], pq["y_mean"],
+            pq["y_std"], queries, off0, pq.get("w1_scale"),
+            pq.get("w2_scale"))
+        got = _fused_call(pq, queries, off0, interpret)
+        parity[f"fused_{dt}"] = float(jnp.max(jnp.abs(got - want)))
+    parity["per_filter_float32"] = float(jnp.max(jnp.abs(
+        _per_filter_call(p0, queries, off0, interpret)
+        - mlp_ref.filter_predict_destd(
+            p0["w1"], p0["b1"], p0["w2"], p0["b2"], p0["y_mean"],
+            p0["y_std"], queries, off0))))
+
+    for F in f_values:
+        F = int(F)
+        p = _make_stack(F, m, h, rng)
+        off = jnp.asarray(np.abs(rng.standard_normal((F,))), jnp.float32)
+        tiles = -(-q // BQ)
+        cases = [("per_filter", "float32", p, F * tiles,
+                  lambda p=p: _per_filter_call(p, queries, off, interpret))]
+        for dt in DTYPES:
+            pq = filters.quantize_mlp(p, dt)
+            cases.append(
+                ("fused", dt, pq, (-(-F // BF)) * tiles,
+                 lambda pq=pq: _fused_call(pq, queries, off, interpret)))
+        for impl, dt, _, steps, fn in cases:
+            _, sec = common.timed(fn, repeat=1)
+            rl = roofline.filter_mlp_roofline(
+                F, q, m, h, variant=("fused" if impl == "fused"
+                                     else "per_filter"),
+                weight_dtype=dt, bq=BQ, bf=BF)
+            rows.append(common.csv_line(
+                f"filters/{impl}/{dt}/F{F}", sec * 1e6,
+                f"steps={steps} bound_us={rl.bound_time * 1e6:.1f}"))
+            results.append({
+                "F": F, "Q": q, "m": m, "h": h, "impl": impl,
+                "weight_dtype": dt, "interpret": interpret,
+                "grid_steps": steps, "us_per_call": sec * 1e6,
+                "roofline": rl.as_dict(),
+            })
+
+    # fused-vs-per-filter summary at each F (measured + bandwidth bound)
+    summary = {}
+    for F in f_values:
+        F = int(F)
+        pf = next(r for r in results
+                  if r["F"] == F and r["impl"] == "per_filter")
+        fu = next(r for r in results if r["F"] == F and r["impl"] == "fused"
+                  and r["weight_dtype"] == "float32")
+        summary[str(F)] = {
+            "measured_speedup": pf["us_per_call"] / fu["us_per_call"],
+            "bound_speedup": (pf["roofline"]["bound_time"]
+                              / fu["roofline"]["bound_time"]),
+        }
+    payload = {
+        "config": {"f_values": [int(F) for F in f_values], "Q": q, "m": m,
+                   "h": h, "bq": BQ, "bf": BF, "interpret": interpret,
+                   "hw": roofline.V5E.name},
+        "parity_max_abs_err": parity,
+        "results": results,
+        "fused_speedup_f32": summary,
+    }
+    return rows, payload
+
+
+if __name__ == "__main__":
+    r, pl = bench_filters()
+    common.write_suite_payload(r, pl, "experiments/filters_bench.json")

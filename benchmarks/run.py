@@ -13,7 +13,8 @@ training-data collection), ``engine`` → engine_bench (scan vs compact vs
 pairwise cascade execution), ``dist`` → dist_bench (scan vs fixed-width
 compact shard bodies on a 1×N host-device mesh), ``serve`` → serve_bench
 (micro-batched mixed-quality-target open-loop serving vs the homogeneous
-batch path).
+batch path), ``filters`` → filters_bench (per-filter vs fused filter
+inference kernels × weight dtype, with the roofline bound pin).
 """
 from __future__ import annotations
 
@@ -22,14 +23,16 @@ import json
 import os
 import time
 
-from . import (build_bench, common, dist_bench, engine_bench, kernels_bench,
-               paper_tables, serve_bench, wallclock)
+from . import (build_bench, common, dist_bench, engine_bench, filters_bench,
+               kernels_bench, paper_tables, serve_bench, wallclock)
 
 SUITES = {
     "build": (build_bench.bench_build, "experiments/build_bench.json"),
     "engine": (engine_bench.bench_engine, "experiments/engine_bench.json"),
     "dist": (dist_bench.bench_dist, "experiments/dist_bench.json"),
     "serve": (serve_bench.bench_serve, "experiments/serve_bench.json"),
+    "filters": (filters_bench.bench_filters,
+                "experiments/filters_bench.json"),
 }
 
 

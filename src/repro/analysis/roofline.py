@@ -114,6 +114,67 @@ def roofline_from_compiled(compiled, n_devices: int,
     )
 
 
+def filter_mlp_roofline(n_filters: int, n_queries: int, length: int,
+                        hidden: Optional[int] = None, *,
+                        variant: str = "fused",
+                        weight_dtype: str = "float32",
+                        bq: int = 128, bf: int = 8,
+                        hw: HardwareSpec = V5E) -> RooflineTerms:
+    """Analytic three-term bound for the stacked filter-inference kernels.
+
+    Counts what each grid layout actually streams from HBM (no compiled
+    artifact needed — the kernels' traffic is fully determined by shape):
+
+    * weights — both kernels stream every filter's parameter block once per
+      query tile: ``ceil(Q/bq) · F · (m·h + h)`` weight elements at the
+      payload dtype's width plus the float32 bias/stat vectors.  bf16/int8
+      cut this, the dominant term at large F, by 2×/4×.
+    * queries — the per-filter kernel re-streams the (bq, m) query tile once
+      per *filter* (F·Q·m·4 bytes); the fused kernel amortizes it across the
+      bf filters of each block, a bf× cut.
+    * output — F·Q·4 bytes once; the *unfused* composition pays ~3 extra
+      read+write broadcast passes over the (F, Q) block for y_std, y_mean
+      and the conformal offsets, which the fused epilogue eliminates.
+
+    The fused variant's group-sum matmul trick costs ``2·h·bf`` extra FLOPs
+    per (filter, query) — counted under t_compute, which is why the fused
+    kernel stays memory-bound and the trade is free in wall-clock terms.
+    ``link_bytes`` is zero: filter inference is single-chip; cross-shard
+    aggregation is the engine's concern (see core.distributed).
+    """
+    # import here: analysis must stay importable without the core package
+    from ..core.filters import WEIGHT_BYTES_PER_EL
+    m, h = length, hidden or length
+    F, Q = n_filters, n_queries
+    wb = WEIGHT_BYTES_PER_EL[weight_dtype]
+    n_scales = 2 if weight_dtype == "int8" else 0
+    tiles = -(-Q // bq)
+    flops = F * Q * (2 * m * h + 2 * h)
+    # per-filter parameter block: w1, w2 at wb; b1 f32; b2/y_mean/y_std/off
+    # f32 scalars; int8 adds the two per-filter scales
+    per_filter = (m * h + h) * wb + h * 4 + (4 + n_scales) * 4
+    weight_bytes = tiles * F * per_filter
+    out_bytes = F * Q * 4
+    if variant == "fused":
+        flops += F * Q * 2 * h * bf            # group-sum matmul overhead
+        query_bytes = -(-F // bf) * Q * m * 4
+        epilogue_bytes = 0
+    elif variant == "per_filter":
+        query_bytes = F * Q * m * 4
+        epilogue_bytes = 3 * 2 * F * Q * 4     # y_std, y_mean, offset passes
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    hbm = weight_bytes + query_bytes + out_bytes + epilogue_bytes
+    return RooflineTerms(
+        flops_per_device=float(flops),
+        hbm_bytes_per_device=float(hbm),
+        link_bytes_per_device=0.0,
+        t_compute=flops / hw.peak_flops,
+        t_memory=hbm / hw.hbm_bw,
+        t_collective=0.0,
+    )
+
+
 def memory_report(compiled) -> Dict[str, float]:
     ma = compiled.memory_analysis()
     out = {}

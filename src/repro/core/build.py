@@ -47,9 +47,28 @@ class LeaFiConfig:
     t_filter_over_t_series: float = 279.0
     filter_memory_budget_bytes: int = 6 << 30
     hidden: Optional[int] = None
+    # filter backbone ("mlp" | "cnn" | "rnn"; build-side training is
+    # MLP-only, see build_leafi) and weight payload dtype for inference
+    # ("float32" | "bfloat16" | "int8" — the fused kernel's variants)
+    filter_type: str = "mlp"
+    weight_dtype: str = "float32"
     train: filter_training.TrainConfig = dataclasses.field(
         default_factory=filter_training.TrainConfig)
     seed: int = 0
+
+
+@dataclasses.dataclass
+class CalibSplit:
+    """The conformal calibration split, kept so tuners can be *refit*.
+
+    Quantizing filter weights shifts every prediction; the auto-tuner
+    offsets must be refit on the shifted predictions or the quality→offset
+    mapping silently drifts (§4.4).  Storing the split's queries and
+    replay inputs makes :func:`requantize_leafi` a pure post-build step.
+    """
+    queries: np.ndarray               # (n_cal, m)
+    d_lb: np.ndarray                  # (n_cal, L) summarization lower bounds
+    d_L: np.ndarray                   # (n_cal, L) node-wise NN distances
 
 
 @dataclasses.dataclass
@@ -60,12 +79,15 @@ class LeaFiIndex:
     tuner: Optional[conformal.AutoTuner]
     config: LeaFiConfig
     build_report: Dict[str, float]
+    calib: Optional[CalibSplit] = None
 
     # -- query API ----------------------------------------------------------
     def search(self, queries, k: int = 1,
                quality_target: Optional[float] = 0.99,
                use_filters: bool = True, **kw) -> search.SearchResult:
         """quality_target=None or use_filters=False ⇒ exact search."""
+        kw.setdefault("filter_type", getattr(self.config, "filter_type",
+                                             "mlp"))
         return search.search_batched(
             self.index, queries, k=k, filter_params=self.filter_params,
             leaf_ids=self.leaf_ids, tuner=self.tuner,
@@ -80,6 +102,11 @@ class LeaFiIndex:
 def build_leafi(series: np.ndarray, config: LeaFiConfig = LeaFiConfig(),
                 key: jax.Array | None = None) -> LeaFiIndex:
     """Alg. 1: LeaFi-enhanced index building."""
+    if config.filter_type != "mlp":
+        raise NotImplementedError(
+            "build-side filter training is MLP-only (the paper's default); "
+            "the CNN/RNN ablation backbones are reachable from search "
+            "(filters.APPLY) with externally trained parameters")
     key = key if key is not None else jax.random.PRNGKey(config.seed)
     report: Dict[str, float] = {}
 
@@ -97,7 +124,8 @@ def build_leafi(series: np.ndarray, config: LeaFiConfig = LeaFiConfig(),
     # 1. SelectLeafNode (Alg. 3) — t_F/t_S from config (measured on real
     #    hardware by benchmarks/model_type.py; th = a · t_F / t_S).
     hidden = config.hidden or index.length
-    fbytes = filters.mlp_param_bytes(index.length, hidden)
+    fbytes = filters.mlp_param_bytes(index.length, hidden,
+                                     config.weight_dtype)
     leaf_ids = selection.select_leaves(
         np.asarray(index.leaf_size),
         t_filter=config.t_filter_over_t_series, t_series=1.0, a=config.a,
@@ -133,18 +161,54 @@ def build_leafi(series: np.ndarray, config: LeaFiConfig = LeaFiConfig(),
     report["t_train"] = time.perf_counter() - t0
     report["val_rmse_z"] = float(train_report["val_rmse_z"].mean())
 
+    # 4b. optional weight compression — quantize BEFORE calibration, so the
+    # conformal offsets are fit on the predictions search will actually see
+    # and absorb the quantization error into the quality→offset mapping.
+    params = filters.quantize_mlp(params, config.weight_dtype)
+
     # 5. FitAutoTuners on the calibration split (Alg. 4)
     t0 = time.perf_counter()
-    calib_q = jnp.asarray(data.global_queries[-n_cal:])
+    calib = CalibSplit(queries=np.asarray(data.global_queries[-n_cal:]),
+                       d_lb=np.asarray(data.global_d_lb[-n_cal:]),
+                       d_L=np.asarray(data.global_d_L[-n_cal:]))
     d_pred_cal = search.predictions_for_all_leaves(
-        index, params, leaf_ids, calib_q, offsets=None)
+        index, params, leaf_ids, jnp.asarray(calib.queries), offsets=None,
+        filter_type=config.filter_type)
     # unfiltered leaves must never filter-prune in the simulation: -inf
     tuner, cal_report = conformal.fit_autotuners(
-        d_lb=data.global_d_lb[-n_cal:],
+        d_lb=calib.d_lb,
         d_pred=np.asarray(d_pred_cal),
-        d_L=data.global_d_L[-n_cal:],
+        d_L=calib.d_L,
         leaf_ids=leaf_ids)
     report["t_calibrate"] = time.perf_counter() - t0
     report["calib_best_quality"] = float(cal_report["rank_quality"].max())
 
-    return LeaFiIndex(index, params, leaf_ids, tuner, config, report)
+    return LeaFiIndex(index, params, leaf_ids, tuner, config, report, calib)
+
+
+def requantize_leafi(lfi: LeaFiIndex, weight_dtype: str) -> LeaFiIndex:
+    """Swap a built index's filter weights to another payload dtype.
+
+    Quantizes (or restores to float32) the filter stack and *refits* the
+    conformal auto-tuners on the stored calibration split, so the per-filter
+    offsets absorb the quantization error instead of letting the quality
+    targets drift.  The backbone arrays are shared, not copied.
+    """
+    cfg = dataclasses.replace(lfi.config, weight_dtype=weight_dtype)
+    if lfi.filter_params is None:
+        return dataclasses.replace(lfi, config=cfg)
+    calib = getattr(lfi, "calib", None)
+    if calib is None:
+        raise ValueError(
+            "index carries no calibration split (built by an older "
+            "pipeline?) — rebuild with build_leafi to enable requantization")
+    params = filters.quantize_mlp(lfi.filter_params, weight_dtype)
+    d_pred = search.predictions_for_all_leaves(
+        lfi.index, params, lfi.leaf_ids, jnp.asarray(calib.queries),
+        offsets=None,
+        filter_type=getattr(lfi.config, "filter_type", "mlp"))
+    tuner, _ = conformal.fit_autotuners(
+        d_lb=calib.d_lb, d_pred=np.asarray(d_pred), d_L=calib.d_L,
+        leaf_ids=lfi.leaf_ids)
+    return dataclasses.replace(lfi, filter_params=params, tuner=tuner,
+                               config=cfg)

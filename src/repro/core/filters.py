@@ -17,6 +17,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from ..kernels.common import use_interpret as _use_interpret
 from ..kernels.filter_mlp import ops as mlp_ops
 from ..kernels.filter_mlp import ref as mlp_ref
 
@@ -48,9 +49,34 @@ def init_mlp(key: jax.Array, n_filters: int, length: int,
 def apply_mlp(params: Params, queries: jnp.ndarray,
               use_kernel: bool = True) -> jnp.ndarray:
     """(Q, m) → (F, Q) de-standardized distance predictions."""
+    return apply_mlp_offset(params, queries, None, use_kernel)
+
+
+def apply_mlp_offset(params: Params, queries: jnp.ndarray,
+                     offsets: jnp.ndarray | None = None,
+                     use_kernel: bool = True) -> jnp.ndarray:
+    """(Q, m) → (F, Q) de-standardized predictions minus per-filter offsets.
+
+    On TPU (use_kernel=True) this is ONE launch of the fused filter-block
+    megakernel — matmuls, de-standardization and conformal offsets together,
+    with in-kernel dequant for bf16/int8 weight payloads.  Off-TPU (or with
+    use_kernel=False) the unfused composition runs: the same jitted/oracle
+    ``filter_predict`` as before plus eager epilogue ops, which keeps results
+    bitwise-identical to the pre-fusion search path.
+    """
+    w1, w2 = params["w1"], params["w2"]
+    s1, s2 = params.get("w1_scale"), params.get("w2_scale")
+    if use_kernel and not _use_interpret():
+        return mlp_ops.filter_predict_fused(
+            w1, params["b1"], w2, params["b2"],
+            params["y_mean"], params["y_std"], queries, offsets, s1, s2)
+    w1f, w2f = mlp_ref.dequantize_weights(w1, w2, s1, s2)
     fn = mlp_ops.filter_predict if use_kernel else mlp_ref.filter_predict
-    z = fn(params["w1"], params["b1"], params["w2"], params["b2"], queries)
-    return z * params["y_std"][:, None] + params["y_mean"][:, None]
+    z = fn(w1f, params["b1"], w2f, params["b2"], queries)
+    out = z * params["y_std"][:, None] + params["y_mean"][:, None]
+    if offsets is not None:
+        out = out - offsets[:, None]
+    return out
 
 
 def apply_mlp_raw(params: Params, queries: jnp.ndarray) -> jnp.ndarray:
@@ -60,11 +86,70 @@ def apply_mlp_raw(params: Params, queries: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+def quantize_mlp(params: Params, weight_dtype: str = "float32") -> Params:
+    """Compress a trained MLP stack's weight matrices to bf16 or int8.
+
+    int8 uses ``optim.compress``'s symmetric max-abs/127 scheme at per-filter
+    granularity — one scale per filter per layer, stored as ``w1_scale`` /
+    ``w2_scale`` (F,) float32 — which is exactly what the fused kernel folds
+    back in after its matmuls.  Biases and the y_mean/y_std stats stay
+    float32: they are O(h) per filter and their precision anchors the
+    de-standardized output scale.  float32 is a (de-quantizing) no-op so the
+    build path can call this unconditionally.
+    """
+    out = {k: v for k, v in params.items()
+           if k not in ("w1_scale", "w2_scale")}
+    w1 = params["w1"]
+    w2 = params["w2"]
+    if w1.dtype != jnp.float32:
+        w1, w2 = mlp_ref.dequantize_weights(
+            w1, w2, params.get("w1_scale"), params.get("w2_scale"))
+    if weight_dtype == "float32":
+        out["w1"], out["w2"] = w1, w2
+    elif weight_dtype == "bfloat16":
+        out["w1"] = w1.astype(jnp.bfloat16)
+        out["w2"] = w2.astype(jnp.bfloat16)
+    elif weight_dtype == "int8":
+        s1 = jnp.abs(w1).max(axis=(1, 2)) / 127.0 + 1e-12
+        s2 = jnp.abs(w2).max(axis=1) / 127.0 + 1e-12
+        out["w1"] = jnp.clip(
+            jnp.round(w1 / s1[:, None, None]), -127, 127).astype(jnp.int8)
+        out["w2"] = jnp.clip(
+            jnp.round(w2 / s2[:, None]), -127, 127).astype(jnp.int8)
+        out["w1_scale"] = s1.astype(jnp.float32)
+        out["w2_scale"] = s2.astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown weight_dtype {weight_dtype!r}")
+    return out
+
+
+def mlp_weight_dtype(params: Params) -> str:
+    """Weight payload dtype of an MLP stack ("float32"/"bfloat16"/"int8")."""
+    return {jnp.dtype(jnp.float32): "float32",
+            jnp.dtype(jnp.bfloat16): "bfloat16",
+            jnp.dtype(jnp.int8): "int8"}[jnp.dtype(params["w1"].dtype)]
+
+
+#: weight-matrix bytes per element by payload dtype (biases/stats stay f32)
+WEIGHT_BYTES_PER_EL = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
 def mlp_param_bytes(length: int, hidden: int | None = None,
-                    bytes_per_el: int = 4) -> int:
-    """Per-filter memory footprint w (the knapsack item weight, Eq. 1)."""
+                    weight_dtype: str = "float32") -> int:
+    """Per-filter memory footprint w (the knapsack item weight, Eq. 1).
+
+    Counted from the literal parameter set: w1 (length·hidden) and w2
+    (hidden) at the payload dtype's width; b1 (hidden), b2 (1) and the
+    y_mean/y_std stats (2) always float32; int8 adds two float32 per-filter
+    scales.  (The pre-quantization formula lumped everything at 4 B/el and
+    skipped the stats.)
+    """
     hidden = hidden or length
-    return bytes_per_el * (length * hidden + hidden + hidden + 1)
+    wb = WEIGHT_BYTES_PER_EL[weight_dtype]
+    n_weight = length * hidden + hidden            # w1 + w2
+    n_f32 = hidden + 1 + 2                         # b1 + b2 + y_mean/y_std
+    n_scales = 2 if weight_dtype == "int8" else 0
+    return wb * n_weight + 4 * (n_f32 + n_scales)
 
 
 # ---------------------------------------------------------------------------
@@ -88,8 +173,14 @@ def init_cnn(key: jax.Array, n_filters: int, length: int,
     }
 
 
-def apply_cnn(params: Params, queries: jnp.ndarray) -> jnp.ndarray:
-    """2-conv-layer filter (paper Table 1): (Q, m) → (F, Q)."""
+def apply_cnn(params: Params, queries: jnp.ndarray,
+              use_kernel: bool = True) -> jnp.ndarray:
+    """2-conv-layer filter (paper Table 1): (Q, m) → (F, Q).
+
+    ``use_kernel`` is accepted (and ignored — no Pallas path yet) so the
+    ``APPLY`` dispatch table has one call signature across filter types.
+    """
+    del use_kernel
     x = queries[:, :, None]                                   # (Q, m, 1)
 
     def one(c1, c2, w, b):
@@ -139,8 +230,13 @@ def _lstm_layer(x, wi, wh):
     return jnp.swapaxes(hs, 0, 1)
 
 
-def apply_rnn(params: Params, queries: jnp.ndarray) -> jnp.ndarray:
-    """2-LSTM-block filter (paper Table 1): (Q, m) → (F, Q)."""
+def apply_rnn(params: Params, queries: jnp.ndarray,
+              use_kernel: bool = True) -> jnp.ndarray:
+    """2-LSTM-block filter (paper Table 1): (Q, m) → (F, Q).
+
+    ``use_kernel`` is accepted and ignored, as in :func:`apply_cnn`.
+    """
+    del use_kernel
     x = queries[:, :, None]
 
     def one(wi1, wh1, wi2, wh2, w, b):

@@ -69,7 +69,8 @@ def predictions_for_all_leaves(index: FlatIndex, filter_params,
                                leaf_ids: np.ndarray,
                                queries: jnp.ndarray,
                                offsets: np.ndarray | None,
-                               use_kernel: bool = True) -> jnp.ndarray:
+                               use_kernel: bool = True,
+                               filter_type: str = "mlp") -> jnp.ndarray:
     """(Q, L) conformal-adjusted filter lower bounds; −inf ⇒ never prunes.
 
     The cascade prunes a leaf when ``d_F > bsf``, so −inf is the neutral
@@ -77,20 +78,32 @@ def predictions_for_all_leaves(index: FlatIndex, filter_params,
     leaves get their (offset-adjusted) predictions scattered onto their leaf
     slots.
 
+    ``filter_type`` selects the backbone via :data:`filters.APPLY` (the
+    CNN/RNN ablation variants of Table 1 are reachable from search, not just
+    from the ablation benchmark).  The MLP path routes shared (F,) offsets
+    into the fused megakernel's epilogue — one launch produces the
+    offset-adjusted d_F block on TPU.
+
     ``offsets`` is either one (F,) per-filter vector shared by every query
     (the paper's form: one quality target per batch) or (Q, F) per-query
     rows — the serving runtime's heterogeneous micro-batch form, where each
     query carries its own quality target and hence its own conformal
-    adjustment of the same filter predictions.
+    adjustment of the same filter predictions.  The per-query rows broadcast
+    over the (F, Q) output, so they are applied outside the kernel.
     """
     L = index.n_leaves
     Q = queries.shape[0]
     if filter_params is None or len(leaf_ids) == 0:
         return jnp.full((Q, L), -_INF)
-    preds = filters.apply_mlp(filter_params, queries, use_kernel)   # (F, Q)
-    if offsets is not None:
-        off = jnp.asarray(offsets)
-        preds = preds - (off.T if off.ndim == 2 else off[:, None])
+    off = None if offsets is None else jnp.asarray(offsets)
+    if filter_type == "mlp" and (off is None or off.ndim == 1):
+        preds = filters.apply_mlp_offset(
+            filter_params, queries, off, use_kernel)                # (F, Q)
+    else:
+        preds = filters.APPLY[filter_type](
+            filter_params, queries, use_kernel)                    # (F, Q)
+        if off is not None:
+            preds = preds - (off.T if off.ndim == 2 else off[:, None])
     full = jnp.full((L, Q), -_INF)
     full = full.at[jnp.asarray(leaf_ids)].set(preds)
     return full.T                                                   # (Q, L)
@@ -112,6 +125,7 @@ def search_batched(
     quality_target: float | np.ndarray | None = None,
     use_filters: bool = True,
     use_kernel: bool = True,
+    filter_type: str = "mlp",
     strategy: str = "auto",
     dist_impl: Optional[str] = None,
 ) -> SearchResult:
@@ -146,7 +160,8 @@ def search_batched(
         offsets = tuner.offsets(quality_target)     # (F,) or (Q, F)
     if use_filters and filter_params is not None:
         d_F = predictions_for_all_leaves(
-            index, filter_params, leaf_ids, queries, offsets, use_kernel)
+            index, filter_params, leaf_ids, queries, offsets, use_kernel,
+            filter_type)
     else:
         d_F = jnp.full(d_lb.shape, -_INF)
 
@@ -270,6 +285,7 @@ def search_early(
     tuner: Optional[conformal.AutoTuner] = None,
     quality_target: Optional[float] = None,
     use_filters: bool = True,
+    filter_type: str = "mlp",
 ) -> SearchResult:
     """Single-query early-termination search (real pruning skips)."""
     q = jnp.asarray(query, jnp.float32).reshape(1, -1)
@@ -280,7 +296,8 @@ def search_early(
         offsets = tuner.offsets(quality_target)
     if use_filters and filter_params is not None:
         d_F = predictions_for_all_leaves(
-            index, filter_params, leaf_ids, q, offsets)[0]
+            index, filter_params, leaf_ids, q, offsets,
+            filter_type=filter_type)[0]
     else:
         d_F = jnp.full(d_lb.shape, -_INF)
     order = jnp.argsort(d_lb)

@@ -6,15 +6,20 @@ and (3) summarization lower bounds.  Each gets a kernel:
 
 * ``l2_scan``     — tiled (query × series) L2 distances on the MXU via the
                     ‖q−s‖² = ‖q‖² + ‖s‖² − 2·q·s decomposition.
-* ``filter_mlp``  — stacked per-leaf MLP inference: a grouped matmul over the
-                    filter axis (the TPU-native replacement for the paper's
-                    per-leaf GPU inference calls).
+* ``filter_mlp``  — stacked per-leaf MLP inference (the TPU-native
+                    replacement for the paper's per-leaf GPU calls): a
+                    per-filter grid kernel, plus the fused filter-block
+                    megakernel — bf filters per grid step as one wide
+                    grouped matmul, de-standardization + conformal offsets
+                    fused into the epilogue, and bf16/int8 weight variants
+                    with in-kernel dequant (``benchmarks/filters_bench.py``).
 * ``box_lb``      — box lower bounds; both the iSAX MINDIST and the DSTree
                     EAPCA bound reduce to it after pre-scaling (see ops).
 
 Every kernel ships ``ref.py`` (pure-jnp oracle) and ``ops.py`` (jitted
-wrapper; interpret=True on CPU).  Shape/dtype sweeps live in
-``tests/test_kernels.py``.
+wrapper); helpers shared across wrappers (backend detection, padding) live
+in ``common.py``.  Off-TPU the wrappers run the oracle unless a test forces
+``interpret=True``.  Shape/dtype sweeps live in ``tests/test_kernels.py``.
 """
 from .l2_scan import ops as l2_scan        # noqa: F401
 from .filter_mlp import ops as filter_mlp  # noqa: F401

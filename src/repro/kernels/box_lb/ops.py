@@ -15,19 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from . import kernel, ref
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pad_rows(x: jnp.ndarray, mult: int, fill: float) -> jnp.ndarray:
-    pad = (-x.shape[0]) % mult
-    if pad == 0:
-        return x
-    return jnp.concatenate(
-        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0
-    )
+from ..common import pad_rows as _pad_rows, use_interpret as _use_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bl", "interpret"))

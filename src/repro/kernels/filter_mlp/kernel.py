@@ -1,16 +1,47 @@
-"""Stacked per-leaf MLP inference Pallas kernel.
+"""Stacked per-leaf MLP inference Pallas kernels.
 
 The paper runs one tiny MLP per visited leaf on a GPU, one call at a time.
 On TPU we stack all F filters' weights — w1 (F, m, h), b1 (F, h), w2 (F, h),
-b2 (F,) — and evaluate every (filter × query) pair in a single grouped-matmul
-kernel: grid (F, Q/bq); each step loads one filter's weights into VMEM and
-pushes a bq-query tile through the two layers on the MXU.
+b2 (F,) — and evaluate every (filter × query) pair in grouped-matmul kernels.
+Two grid layouts:
 
-VMEM per step at m = h = 256, bq = 128: w1 block 256 KiB + query tile 128 KiB
-+ hidden 128 KiB — small enough that the filter-weight stream (one (m,h)
-block per grid step) stays double-buffered from HBM.
+* ``filter_mlp_kernel`` — the original per-filter sweep: grid (F, Q/bq);
+  each step loads ONE filter's (m, h) weight block into VMEM and pushes a
+  bq-query tile through the two layers.  The query tile is re-streamed from
+  HBM once per filter, so the sweep is weight/query-bandwidth-bound and
+  F-linear regardless of batch size.
+
+* ``fused_filter_mlp_kernel`` — the filter-block megakernel: grid
+  (F/bf, Q/bq).  The stacked weights are pre-grouped outside the kernel into
+  (F/bf, m, bf·h) layer-1 blocks and (F/bf, bf·h) layer-2 rows, so each step
+  evaluates ``bf`` filters with ONE (bq, m) × (m, bf·h) MXU matmul — the
+  VMEM-resident query tile is amortized across bf filters' weights (a bf×
+  cut of the query re-stream) and the single wide matmul keeps the MXU fed
+  where bf narrow ones would each pay their own latency.  Layer 2 is an
+  elementwise multiply with the grouped w2 row followed by a per-group sum,
+  expressed as a matmul against a block-diagonal 0/1 group-sum operand so it
+  also runs on the MXU.  The epilogue applies b2, the per-filter
+  ``y_mean``/``y_std`` de-standardization and the conformal offset
+  subtraction in-register, so the megakernel's output is the search-ready
+  d_F block — no separate broadcast passes over the (F, Q) output.
+
+The fused kernel also takes compressed weights: bf16 blocks are upcast on
+load (half the weight stream), int8 blocks carry per-filter max-abs/127
+scales (``optim.compress``'s symmetric scheme at filter granularity, a 4×
+cut) and the scales are folded in after the matmul — algebraically exact
+w.r.t. dequantize-then-multiply because each scale is constant per output
+column.
+
+VMEM per fused step at m = h = 128, bf = 8, bq = 128: w1 block 512 KiB f32
+(128 KiB int8) + query tile 64 KiB + hidden 512 KiB — comfortably
+double-buffered.  int8 caveat: the (1, bf·h) layer-2 blocks have a
+single-sublane layout that real-MXU Mosaic may reject (min int8 tile is
+(32, 128)); the path is interpret-validated here and flagged for on-device
+tuning in the ROADMAP's hardware-gated measurement item.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -62,3 +93,120 @@ def filter_mlp_kernel(
         ) if not interpret else None,
         interpret=interpret,
     )(queries, w1, b1, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# fused filter-block megakernel
+# ---------------------------------------------------------------------------
+
+
+def _group_sum_operand(bfh: int, bf: int, h: int) -> jnp.ndarray:
+    """(bf·h, bf) block-diagonal 0/1 matrix: column f sums its filter's h
+    hidden lanes.  Built from iota so it materializes in-register — no HBM
+    operand, and the layer-2 reduction stays a plain MXU matmul."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (bfh, bf), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bfh, bf), 1)
+    return (row // h == col).astype(jnp.float32)
+
+
+def _fused_body(q_ref, w1_ref, b1_ref, w2_ref, b2_ref, ym_ref, ys_ref,
+                off_ref, o_ref, *, h: int, bf: int):
+    q = q_ref[...].astype(jnp.float32)                       # (bq, m)
+    w1 = w1_ref[0].astype(jnp.float32)                       # (m, bf·h)
+    hidden = jnp.maximum(
+        jax.lax.dot_general(q, w1, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + b1_ref[...],                                       # (bq, bf·h)
+        0.0,
+    )
+    w2 = w2_ref[...].astype(jnp.float32)                     # (1, bf·h)
+    hw = hidden * w2                                         # (bq, bf·h)
+    z = jax.lax.dot_general(
+        hw, _group_sum_operand(hw.shape[1], bf, h),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + b2_ref[...]    # (bq, bf)
+    # epilogue: de-standardize + conformal offset, same op order as the
+    # unfused composition (z·y_std + y_mean, then −offset) so the fused
+    # output is bitwise-equal to it.
+    o_ref[...] = (z * ys_ref[...] + ym_ref[...] - off_ref[...]).T
+
+
+def _fused_body_q(q_ref, w1_ref, s1_ref, b1_ref, w2_ref, s2_ref, b2_ref,
+                  ym_ref, ys_ref, off_ref, o_ref, *, h: int, bf: int):
+    """int8 variant: weights arrive quantized; per-filter scales are folded
+    in after the layer-1 matmul (exact per output column) and into the
+    grouped w2 row before the elementwise multiply."""
+    q = q_ref[...].astype(jnp.float32)                       # (bq, m)
+    w1 = w1_ref[0].astype(jnp.float32)                       # (m, bf·h) deq.
+    hidden = jnp.maximum(
+        jax.lax.dot_general(q, w1, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        * s1_ref[...]                                        # (1, bf·h)
+        + b1_ref[...],
+        0.0,
+    )
+    w2 = w2_ref[...].astype(jnp.float32) * s2_ref[...]       # (1, bf·h)
+    hw = hidden * w2
+    z = jax.lax.dot_general(
+        hw, _group_sum_operand(hw.shape[1], bf, h),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + b2_ref[...]
+    o_ref[...] = (z * ys_ref[...] + ym_ref[...] - off_ref[...]).T
+
+
+def fused_filter_mlp_kernel(
+    queries: jnp.ndarray,          # (Q, m), Q multiple of bq
+    w1g: jnp.ndarray,              # (G, m, bf·h) grouped layer-1 blocks
+    b1g: jnp.ndarray,              # (G, bf·h) float32
+    w2g: jnp.ndarray,              # (G, bf·h)
+    b2g: jnp.ndarray,              # (G, bf) float32
+    ymg: jnp.ndarray,              # (G, bf) per-filter y_mean
+    ysg: jnp.ndarray,              # (G, bf) per-filter y_std
+    offg: jnp.ndarray,             # (G, bf) conformal offsets (zeros = none)
+    *,
+    s1g: jnp.ndarray | None = None,   # (G, bf·h) int8 scales, expanded
+    s2g: jnp.ndarray | None = None,   # (G, bf·h)
+    bq: int = 128,
+    bf: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Grouped operands → (G·bf, Q) de-standardized, offset-adjusted preds.
+
+    ``w1g``/``w2g`` may be float32, bfloat16 or int8; int8 requires the
+    expanded per-filter scale rows.  Grouping/padding is the wrapper's job
+    (:func:`repro.kernels.filter_mlp.ops.pack_fused`).
+    """
+    Q, m = queries.shape
+    G, _, bfh = w1g.shape
+    h = bfh // bf
+    quantized = s1g is not None
+    body = functools.partial(
+        _fused_body_q if quantized else _fused_body, h=h, bf=bf)
+    vec_spec = pl.BlockSpec((1, bfh), lambda g, t: (g, 0))
+    flt_spec = pl.BlockSpec((1, bf), lambda g, t: (g, 0))
+    in_specs = [
+        pl.BlockSpec((bq, m), lambda g, t: (t, 0)),
+        pl.BlockSpec((1, m, bfh), lambda g, t: (g, 0, 0)),
+    ]
+    operands = [queries, w1g]
+    if quantized:
+        in_specs.append(vec_spec)
+        operands.append(s1g)
+    in_specs += [vec_spec, vec_spec]
+    operands += [b1g, w2g]
+    if quantized:
+        in_specs.append(vec_spec)
+        operands.append(s2g)
+    in_specs += [flt_spec, flt_spec, flt_spec, flt_spec]
+    operands += [b2g, ymg, ysg, offg]
+    return pl.pallas_call(
+        body,
+        grid=(G, Q // bq),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bf, bq), lambda g, t: (g, t)),
+        out_shape=jax.ShapeDtypeStruct((G * bf, Q), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(*operands)

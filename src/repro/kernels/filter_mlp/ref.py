@@ -1,4 +1,10 @@
-"""Pure-jnp oracle for stacked per-leaf filter MLP inference."""
+"""Pure-jnp oracles for stacked per-leaf filter MLP inference.
+
+``filter_predict`` is the parity oracle every kernel variant (per-filter,
+fused, bf16, int8) is tested against; the quantized variants are checked
+against it evaluated on the *dequantized* weights, so one oracle covers the
+whole family.
+"""
 from __future__ import annotations
 
 import jax
@@ -16,3 +22,33 @@ def filter_predict(w1: jnp.ndarray, b1: jnp.ndarray, w2: jnp.ndarray,
         return hidden @ w2_i.astype(jnp.float32) + b2_i
 
     return jax.vmap(one)(w1, b1, w2, b2)
+
+
+def dequantize_weights(w1, w2, w1_scale=None, w2_scale=None):
+    """Effective float32 weights of a (possibly compressed) filter stack.
+
+    int8 payloads are rescaled by their per-filter max-abs/127 scales;
+    bf16 payloads upcast; float32 passes through untouched.
+    """
+    if w1_scale is not None:
+        w1 = w1.astype(jnp.float32) * w1_scale[:, None, None]
+    if w2_scale is not None:
+        w2 = w2.astype(jnp.float32) * w2_scale[:, None]
+    return w1.astype(jnp.float32), w2.astype(jnp.float32)
+
+
+def filter_predict_destd(w1, b1, w2, b2, y_mean, y_std, queries,
+                         offsets=None, w1_scale=None, w2_scale=None
+                         ) -> jnp.ndarray:
+    """De-standardized (and offset-adjusted) predictions → (F, Q).
+
+    The unfused composition the megakernel's epilogue is pinned against:
+    raw z, then z·y_std + y_mean, then −offsets — same op order, so interpret
+    runs of the fused kernel must match it bitwise (tests/test_kernels.py).
+    """
+    w1f, w2f = dequantize_weights(w1, w2, w1_scale, w2_scale)
+    z = filter_predict(w1f, b1, w2f, b2, queries)
+    out = z * y_std[:, None] + y_mean[:, None]
+    if offsets is not None:
+        out = out - offsets[:, None]
+    return out

@@ -7,22 +7,9 @@ import jax
 import jax.numpy as jnp
 
 from . import kernel, ref
+from ..common import pad_to as _pad_to, use_interpret as _use_interpret
 
 _INF = jnp.float32(jnp.inf)
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bb", "bk", "interpret"))

@@ -40,7 +40,7 @@ from .telemetry import (Telemetry, latency_percentiles,
 _CONFIG_FIELDS = ("backbone", "leaf_capacity", "n_segments", "word_len",
                   "n_global", "n_local", "calib_fraction", "a",
                   "t_filter_over_t_series", "filter_memory_budget_bytes",
-                  "hidden", "seed")
+                  "hidden", "filter_type", "weight_dtype", "seed")
 
 
 def save_index(path: str, lfi: build.LeaFiIndex,
@@ -54,6 +54,16 @@ def save_index(path: str, lfi: build.LeaFiIndex,
     """
     idx = lfi.index
     tuner = lfi.tuner
+    if lfi.filter_params is not None and \
+            str(lfi.filter_params["w1"].dtype) == "bfloat16":
+        # np.savez silently drops the bfloat16 dtype (round-trips as raw
+        # void bytes), so bf16 indexes don't checkpoint: save the float32
+        # index and build.requantize_leafi after load instead.
+        raise ValueError(
+            "bfloat16 filter weights cannot be checkpointed (np.savez "
+            "loses the dtype); save the float32 index and requantize "
+            "after load (build.requantize_leafi)")
+    calib = getattr(lfi, "calib", None)
     tree = {
         "series": np.asarray(idx.series),
         "order": np.asarray(idx.order),
@@ -67,6 +77,10 @@ def save_index(path: str, lfi: build.LeaFiIndex,
         "tuner": ({"knots_q": tuner.knots_q, "knots_o": tuner.knots_o,
                    "slopes": tuner.slopes, "max_offset": tuner.max_offset}
                   if tuner is not None else {}),
+        "calib": ({"queries": np.asarray(calib.queries),
+                   "d_lb": np.asarray(calib.d_lb),
+                   "d_L": np.asarray(calib.d_L)}
+                  if calib is not None else {}),
     }
     cfg = dataclasses.asdict(lfi.config)
     cfg.pop("train", None)                    # training recipe: not needed
@@ -105,12 +119,14 @@ def load_index(path: str) -> build.LeaFiIndex:
     params = group("filter_params") or None
     tn = group("tuner")
     tuner = conformal.AutoTuner(**tn) if tn else None
+    cal = group("calib")
+    calib = build.CalibSplit(**cal) if cal else None
     cfg_kw = {k: meta["config"][k] for k in _CONFIG_FIELDS
               if k in meta.get("config", {})}
     return build.LeaFiIndex(
         index=index, filter_params=params, leaf_ids=group("leaf_ids"),
         tuner=tuner, config=build.LeaFiConfig(**cfg_kw),
-        build_report=dict(meta.get("build_report", {})))
+        build_report=dict(meta.get("build_report", {})), calib=calib)
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +199,8 @@ class ServingSession:
                record: bool = True, **kw) -> search.SearchResult:
         """One batched search; per-query targets lowered to offset rows."""
         lfi = self.lfi
+        kw.setdefault("filter_type", getattr(lfi.config, "filter_type",
+                                             "mlp"))
         res = search.search_batched(
             lfi.index, queries, k=k, filter_params=lfi.filter_params,
             leaf_ids=lfi.leaf_ids, tuner=lfi.tuner,

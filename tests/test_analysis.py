@@ -89,3 +89,41 @@ print("SUBPROCESS_OK")
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=240)
     assert "SUBPROCESS_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_filter_mlp_roofline_structure():
+    """Analytic filter-kernel bound: fused cuts the query re-stream bf×,
+    drops the epilogue passes, and quantization cuts the dominant weight
+    stream — all visible in the three-term model."""
+    from repro.analysis.roofline import filter_mlp_roofline
+    F, Q, m, h, bf = 1024, 128, 128, 128, 8
+    per = filter_mlp_roofline(F, Q, m, h, variant="per_filter")
+    fus = filter_mlp_roofline(F, Q, m, h, variant="fused", bf=bf)
+    # single-chip kernel: no collective term; both memory-bound at this shape
+    assert per.link_bytes_per_device == 0 and fus.link_bytes_per_device == 0
+    assert per.dominant == "memory" and fus.dominant == "memory"
+    # fused strictly cheaper on bytes, despite the group-sum flops overhead
+    assert fus.hbm_bytes_per_device < per.hbm_bytes_per_device
+    assert fus.flops_per_device > per.flops_per_device
+    assert fus.bound_time < per.bound_time
+    # exact traffic deltas: bf× query re-stream cut + 3 epilogue passes
+    q_delta = (F - F // bf) * Q * m * 4
+    epi = 3 * 2 * F * Q * 4
+    assert per.hbm_bytes_per_device - fus.hbm_bytes_per_device == \
+        q_delta + epi
+    # quantization cuts exactly the w1/w2 element stream (biases/stats stay
+    # f32; int8 adds two f32 scales per filter); the shared query stream
+    # dilutes the whole-kernel ratio below the raw 4x/2x element cut
+    f32 = filter_mlp_roofline(F, Q, m, h, variant="fused")
+    i8 = filter_mlp_roofline(F, Q, m, h, variant="fused",
+                             weight_dtype="int8")
+    bf16 = filter_mlp_roofline(F, Q, m, h, variant="fused",
+                               weight_dtype="bfloat16")
+    n_w = m * h + h
+    assert f32.hbm_bytes_per_device - i8.hbm_bytes_per_device == \
+        F * (3 * n_w - 2 * 4)
+    assert f32.hbm_bytes_per_device - bf16.hbm_bytes_per_device == F * 2 * n_w
+    assert f32.hbm_bytes_per_device / i8.hbm_bytes_per_device > 2.5
+    assert f32.hbm_bytes_per_device / bf16.hbm_bytes_per_device > 1.5
+    with pytest.raises(ValueError):
+        filter_mlp_roofline(8, 8, 8, variant="nope")

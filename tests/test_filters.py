@@ -1,0 +1,185 @@
+"""Filter backbones, weight quantization, and the quantized-recall pin.
+
+Covers the parts of :mod:`repro.core.filters` the kernel tests don't: the
+CNN/RNN ablation backbones (shape + dispatch through ``filters.APPLY`` and
+``search.predictions_for_all_leaves``), the bf16/int8 weight compression
+round-trip, the per-filter byte accounting, and the end-to-end guarantee
+that quantizing a built index's filters *with conformal recalibration*
+(:func:`repro.core.build.requantize_leafi`) holds recall on the calibration
+split for both backbones.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build, conformal, filter_training, filters, search, tree
+
+RNG = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# CNN / RNN backbones: shapes, determinism, dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ftype", ["mlp", "cnn", "rnn"])
+def test_backbone_apply_shapes(ftype):
+    F, Q, m = 3, 5, 32
+    params = filters.INIT[ftype](jax.random.PRNGKey(0), F, m)
+    q = jnp.asarray(RNG.standard_normal((Q, m)), jnp.float32)
+    out = filters.APPLY[ftype](params, q)
+    assert out.shape == (F, Q)
+    assert np.isfinite(np.asarray(out)).all()
+    # uniform dispatch signature: use_kernel accepted by every backbone
+    out2 = filters.APPLY[ftype](params, q, use_kernel=False)
+    assert out2.shape == (F, Q)
+
+
+def test_apply_cnn_rnn_destandardize():
+    """y_mean/y_std stats must rescale CNN/RNN outputs like the MLP's."""
+    F, Q, m = 2, 4, 16
+    for ftype in ("cnn", "rnn"):
+        params = filters.INIT[ftype](jax.random.PRNGKey(1), F, m)
+        q = jnp.asarray(RNG.standard_normal((Q, m)), jnp.float32)
+        base = np.asarray(filters.APPLY[ftype](params, q))
+        params2 = dict(params)
+        params2["y_mean"] = jnp.full((F,), 3.0)
+        params2["y_std"] = jnp.full((F,), 2.0)
+        scaled = np.asarray(filters.APPLY[ftype](params2, q))
+        np.testing.assert_allclose(scaled, base * 2.0 + 3.0,
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("ftype", ["cnn", "rnn"])
+def test_predictions_dispatch_reaches_ablation_backbones(ftype, randwalk_small):
+    """search.predictions_for_all_leaves must route through filters.APPLY —
+    the Table 1 ablation variants are reachable from search, offsets and
+    the −inf no-filter convention included."""
+    index = tree.build_dstree(randwalk_small[:600], leaf_capacity=64,
+                              n_segments=8)
+    L = index.n_leaves
+    leaf_ids = np.arange(min(3, L))
+    params = filters.INIT[ftype](jax.random.PRNGKey(2), len(leaf_ids),
+                                 index.length)
+    q = jnp.asarray(RNG.standard_normal((4, index.length)), jnp.float32)
+    off = np.abs(RNG.standard_normal(len(leaf_ids))).astype(np.float32)
+    got = np.asarray(search.predictions_for_all_leaves(
+        index, params, leaf_ids, q, off, filter_type=ftype))
+    assert got.shape == (4, L)
+    want = np.asarray(filters.APPLY[ftype](params, q)) - off[:, None]
+    np.testing.assert_allclose(got[:, leaf_ids], want.T, rtol=1e-5, atol=1e-5)
+    unfiltered = np.setdiff1d(np.arange(L), leaf_ids)
+    assert np.isneginf(got[:, unfiltered]).all()
+
+
+def test_build_rejects_non_mlp_training():
+    cfg = build.LeaFiConfig(filter_type="cnn")
+    with pytest.raises(NotImplementedError):
+        build.build_leafi(np.zeros((64, 16), np.float32), cfg)
+
+
+# ---------------------------------------------------------------------------
+# quantization round-trip + byte accounting
+# ---------------------------------------------------------------------------
+
+
+def _stack(F=6, m=48, h=32):
+    return {
+        "w1": jnp.asarray(RNG.standard_normal((F, m, h)) * 0.2, jnp.float32),
+        "b1": jnp.asarray(RNG.standard_normal((F, h)) * 0.1, jnp.float32),
+        "w2": jnp.asarray(RNG.standard_normal((F, h)) * 0.2, jnp.float32),
+        "b2": jnp.asarray(RNG.standard_normal((F,)), jnp.float32),
+        "y_mean": jnp.asarray(RNG.standard_normal((F,)), jnp.float32),
+        "y_std": jnp.ones((F,), jnp.float32),
+    }
+
+
+def test_quantize_mlp_roundtrip_error_bound():
+    p = _stack()
+    q8 = filters.quantize_mlp(p, "int8")
+    assert q8["w1"].dtype == jnp.int8 and q8["w2"].dtype == jnp.int8
+    assert filters.mlp_weight_dtype(q8) == "int8"
+    w1f, w2f = np.asarray(q8["w1"], np.float32), np.asarray(q8["w2"],
+                                                            np.float32)
+    w1d = w1f * np.asarray(q8["w1_scale"])[:, None, None]
+    # symmetric max-abs/127: per-element error ≤ scale/2 by construction
+    assert (np.abs(w1d - np.asarray(p["w1"]))
+            <= np.asarray(q8["w1_scale"])[:, None, None] * 0.5 + 1e-7).all()
+    assert (np.abs(w2f * np.asarray(q8["w2_scale"])[:, None]
+                   - np.asarray(p["w2"]))
+            <= np.asarray(q8["w2_scale"])[:, None] * 0.5 + 1e-7).all()
+    # bf16: payload halves, float32 restores exactly the bf16 rounding
+    qb = filters.quantize_mlp(p, "bfloat16")
+    assert qb["w1"].dtype == jnp.bfloat16
+    assert filters.mlp_weight_dtype(qb) == "bfloat16"
+    back = filters.quantize_mlp(qb, "float32")
+    assert back["w1"].dtype == jnp.float32
+    assert "w1_scale" not in back
+    np.testing.assert_array_equal(
+        np.asarray(back["w1"]), np.asarray(qb["w1"], np.float32))
+    # float32 is a no-op passthrough (and strips stale scales)
+    p32 = filters.quantize_mlp(q8, "float32")
+    assert p32["w1"].dtype == jnp.float32 and "w1_scale" not in p32
+
+
+def test_mlp_param_bytes_table():
+    m, h = 96, 64
+    n_w = m * h + h                       # w1 + w2 elements
+    n_f32 = h + 1 + 2                     # b1 + b2 + y_mean/y_std
+    assert filters.mlp_param_bytes(m, h) == 4 * n_w + 4 * n_f32
+    assert filters.mlp_param_bytes(m, h, "bfloat16") == 2 * n_w + 4 * n_f32
+    assert filters.mlp_param_bytes(m, h, "int8") == (
+        n_w + 4 * (n_f32 + 2))            # + two f32 scales
+    # hidden defaults to length
+    assert filters.mlp_param_bytes(m) == filters.mlp_param_bytes(m, m)
+    # actual footprint of a quantized stack matches the accounting
+    F = 5
+    q8 = filters.quantize_mlp(_stack(F, m, h), "int8")
+    nbytes = sum(np.asarray(v).nbytes for v in q8.values())
+    assert nbytes == F * filters.mlp_param_bytes(m, h, "int8")
+
+
+def test_apply_mlp_offset_matches_composition():
+    p = _stack()
+    q = jnp.asarray(RNG.standard_normal((9, 48)), jnp.float32)
+    off = jnp.asarray(np.abs(RNG.standard_normal(6)), jnp.float32)
+    for params in (p, filters.quantize_mlp(p, "int8")):
+        want = np.asarray(filters.apply_mlp(params, q)) \
+            - np.asarray(off)[:, None]
+        got = np.asarray(filters.apply_mlp_offset(params, q, off))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantized recall on the calibration split (the end-to-end guarantee)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module", params=["dstree", "isax"])
+def built_index(request, randwalk_small):
+    cfg = build.LeaFiConfig(
+        backbone=request.param, leaf_capacity=64, n_global=200, n_local=50,
+        t_filter_over_t_series=10.0,
+        train=filter_training.TrainConfig(epochs=40))
+    return build.build_leafi(randwalk_small, cfg)
+
+
+@pytest.mark.parametrize("weight_dtype", ["bfloat16", "int8"])
+def test_quantized_recall_on_calibration_split(built_index, weight_dtype):
+    """Quantize → recalibrate (requantize_leafi refits the auto-tuners on
+    the quantized predictions) must hold recall@1 ≥ 0.99 at a 0.99 quality
+    target on the calibration split, for both backbones × both dtypes."""
+    lfi = built_index
+    assert lfi.filter_params is not None and lfi.calib is not None
+    lq = build.requantize_leafi(lfi, weight_dtype)
+    assert filters.mlp_weight_dtype(lq.filter_params) == weight_dtype
+    q = lq.calib.queries
+    exact = lq.search_exact(q)
+    res = lq.search(q, quality_target=0.99)
+    recall = float(np.mean(np.asarray(conformal.recall_at_1(
+        jnp.asarray(res.dists[:, 0]), jnp.asarray(exact.dists[:, 0])))))
+    assert recall >= 0.99, (
+        f"{lfi.config.backbone}/{weight_dtype}: calib recall {recall}")
+    # and the filters still actually prune
+    assert float(res.pruned_filter.mean()) > 0

@@ -83,6 +83,79 @@ def test_filter_mlp_matches_oracle(F, Q, m, h):
                                rtol=1e-5, atol=1e-5)
 
 
+def _mlp_stack(F, m, h, scale=0.1):
+    return (jnp.asarray(RNG.standard_normal((F, m, h)) * scale, jnp.float32),
+            jnp.asarray(RNG.standard_normal((F, h)) * scale, jnp.float32),
+            jnp.asarray(RNG.standard_normal((F, h)) * scale, jnp.float32),
+            jnp.asarray(RNG.standard_normal((F,)), jnp.float32),
+            jnp.asarray(RNG.standard_normal((F,)), jnp.float32),       # y_mean
+            jnp.asarray(np.abs(RNG.standard_normal((F,))) + 0.5,
+                        jnp.float32),                                  # y_std
+            jnp.asarray(np.abs(RNG.standard_normal((F,))), jnp.float32))
+
+
+@pytest.mark.parametrize("F,Q,m,h", [(1, 1, 8, 8), (5, 7, 96, 96),
+                                     (13, 140, 64, 128), (16, 128, 128, 128),
+                                     (3, 32, 256, 17)])
+def test_fused_filter_mlp_matches_oracle(F, Q, m, h):
+    """The filter-block megakernel (grouped matmul + in-kernel epilogue)
+    against the unfused oracle composition, with and without offsets."""
+    w1, b1, w2, b2, ym, ys, off = _mlp_stack(F, m, h)
+    q = jnp.asarray(RNG.standard_normal((Q, m)), jnp.float32)
+    got = mlp_ops.filter_predict_fused(w1, b1, w2, b2, ym, ys, q, off,
+                                       interpret=True)
+    want = mlp_ref.filter_predict_destd(w1, b1, w2, b2, ym, ys, q, off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    got = mlp_ops.filter_predict_fused(w1, b1, w2, b2, ym, ys, q,
+                                       interpret=True)
+    want = mlp_ref.filter_predict_destd(w1, b1, w2, b2, ym, ys, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("weight_dtype", ["bfloat16", "int8"])
+def test_fused_filter_mlp_quantized_matches_dequantized_oracle(weight_dtype):
+    """bf16/int8 fused variants vs the oracle on *dequantized* weights —
+    in-kernel scale folding must equal dequantize-then-multiply."""
+    from repro.core import filters
+    F, Q, m, h = 13, 36, 64, 96
+    w1, b1, w2, b2, ym, ys, off = _mlp_stack(F, m, h)
+    p = filters.quantize_mlp(
+        {"w1": w1, "b1": b1, "w2": w2, "b2": b2, "y_mean": ym, "y_std": ys},
+        weight_dtype)
+    s1, s2 = p.get("w1_scale"), p.get("w2_scale")
+    q = jnp.asarray(RNG.standard_normal((Q, m)), jnp.float32)
+    got = mlp_ops.filter_predict_fused(p["w1"], b1, p["w2"], b2, ym, ys, q,
+                                       off, s1, s2, interpret=True)
+    want = mlp_ref.filter_predict_destd(p["w1"], b1, p["w2"], b2, ym, ys, q,
+                                        off, s1, s2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_epilogue_bitwise_vs_unfused_composition():
+    """The in-kernel epilogue (z·y_std + y_mean − off) must be *bitwise*
+    equal to composing a neutral-epilogue kernel run (y_mean=0, y_std=1,
+    off=0 — exact identities) with the same ops applied outside.  The
+    outside composition is jitted so both sides see XLA's mul+add (FMA)
+    contraction; eager ops round the intermediate and differ by an ulp."""
+    import jax
+    F, Q, m, h = 13, 140, 64, 128
+    w1, b1, w2, b2, ym, ys, off = _mlp_stack(F, m, h, scale=0.3)
+    q = jnp.asarray(RNG.standard_normal((Q, m)), jnp.float32)
+    zero = jnp.zeros((F,), jnp.float32)
+    one = jnp.ones((F,), jnp.float32)
+    raw = mlp_ops.filter_predict_fused(w1, b1, w2, b2, zero, one, q,
+                                       interpret=True)
+    manual = jax.jit(
+        lambda z, s, u, o: z * s[:, None] + u[:, None] - o[:, None])(
+        raw, ys, ym, off)
+    fused = mlp_ops.filter_predict_fused(w1, b1, w2, b2, ym, ys, q, off,
+                                         interpret=True)
+    assert (np.asarray(manual) == np.asarray(fused)).all()
+
+
 @pytest.mark.parametrize("Q,L,d", [(1, 1, 4), (9, 200, 16), (150, 37, 8)])
 def test_box_lb_matches_oracle(Q, L, d):
     q = jnp.asarray(RNG.standard_normal((Q, d)), jnp.float32)
