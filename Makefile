@@ -9,7 +9,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: test test-fast lint bench bench-engine bench-build bench-dist \
-	bench-serve bench-filters dev-deps
+	bench-serve bench-serve-quick bench-filters dev-deps
 
 test: lint
 	python -m pytest -x -q
@@ -41,6 +41,10 @@ bench-dist:
 
 bench-serve:
 	python -m benchmarks.run --suite serve
+
+# CI-sized pipeline-sweep smoke (writes experiments/serve_bench_quick.json)
+bench-serve-quick:
+	python -m benchmarks.serve_bench --quick
 
 bench-filters:
 	python -m benchmarks.run --suite filters

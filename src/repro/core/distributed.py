@@ -65,6 +65,10 @@ class ShardedLeaFi:
     length: int
     kind: str
     qscale: np.ndarray            # (d,) query coordinate pre-scale (box LB)
+    # local slot → global leaf id (padding slots carry n_leaves); lets the
+    # per-query-offset shard body gather each query's (Q, L) conformal
+    # offset row onto this shard's (Q, P) local slots.
+    leaf_global: Optional[jnp.ndarray] = None   # (S, P) int32
 
     def query_coords(self, queries: jnp.ndarray) -> jnp.ndarray:
         """Map raw queries to pre-scaled box coordinates (see kernels.box_lb)."""
@@ -155,11 +159,13 @@ def shard_leafi(lfi: LeaFiIndex, n_shards: int,
         has_filter=np.zeros((S, P_max), bool),
         max_leaf=index.max_leaf_size, length=m, kind=index.kind,
         qscale=qscale.astype(np.float32),
+        leaf_global=np.full((S, P_max), L, np.int32),
     )
     for s in range(n_shards):
         leaves = np.where(shard_of == s)[0]
         cursor = 0
         for j, lf in enumerate(leaves):
+            out.leaf_global[s, j] = int(lf)
             sz = int(sizes[lf])
             st = int(starts_np[lf])
             out.series[s, cursor:cursor + sz] = series_np[st:st + sz]
@@ -200,6 +206,11 @@ def _shard_pruning_inputs(lo, hi, w1, b1, w2, b2, y_mean, y_std, offsets,
     the phase-1 probe's argmin and silently waste the bsf seed on an empty
     leaf.  Their lb is therefore forced to +inf here, so they sort last,
     never survive, and never probe.
+
+    ``offsets`` is either one (P,) per-slot conformal offset vector shared
+    by every query (the baked single-quality-target form) or (Q, P)
+    per-query rows — the serving runtime's mixed-target micro-batch form,
+    gathered from global (Q, L) offset rows via ``ShardedLeaFi.leaf_global``.
     """
     d = jnp.maximum(jnp.maximum(lo[None] - qcoords[:, None],
                                 qcoords[:, None] - hi[None]), 0.0)
@@ -212,13 +223,14 @@ def _shard_pruning_inputs(lo, hi, w1, b1, w2, b2, y_mean, y_std, offsets,
                       + b1[:, None, :])
     pred = jnp.einsum("pqh,ph->pq", hdd, w2) + b2[:, None]
     pred = pred * y_std[:, None] + y_mean[:, None]
-    d_F = jnp.where(has_filter[:, None], pred - offsets[:, None], -_INF)
-    return lb, d_F.T                                     # both (Q, P)
+    off = offsets if offsets.ndim == 2 else offsets[None, :]   # (1|Q, P)
+    d_F = jnp.where(has_filter[None, :], pred.T - off, -_INF)
+    return lb, d_F                                       # both (Q, P)
 
 
 def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
                   bsf0, strategy="compact", max_survivors=None,
-                  dist_impl=None):
+                  dist_impl=None, bsf_ub=None):
     """Cascade over this shard's leaves given a starting global bsf.
 
     Routes through the common engine's shard_map-safe forms:
@@ -227,14 +239,19 @@ def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
     fallback for overflow queries; ``"scan"`` is the original masked scan,
     kept as the parity fallback (bitwise-identical under the ``direct``
     distance impl).
+
+    ``bsf_ub`` is the serving runtime's prune-only warm-start bound: it
+    tightens prune decisions but never enters ``bsf0`` or the returned bsf
+    (both must stay witnessed distances — a pmin over unwitnessed bounds
+    would corrupt the global answer).
     """
     if strategy == "scan":
         return engine.masked_bsf_scan(sh_series, sh_start, sh_size, lb, d_F,
-                                      queries, max_leaf, bsf0)
+                                      queries, max_leaf, bsf0, bsf_ub=bsf_ub)
     if strategy == "compact":
         return engine.compact_bsf_cascade(
             sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf, bsf0,
-            max_survivors=max_survivors, dist_impl=dist_impl)
+            max_survivors=max_survivors, dist_impl=dist_impl, bsf_ub=bsf_ub)
     raise ValueError(f"unknown distributed shard strategy {strategy!r}")
 
 
@@ -267,7 +284,8 @@ def search_input_specs(n_shards: int, leaves_per_shard: int,
 def _make_shard_body(max_leaf: int, model_axis: str,
                      strategy: str = "compact",
                      max_survivors: Optional[int] = None,
-                     dist_impl: Optional[str] = None):
+                     dist_impl: Optional[str] = None,
+                     per_query_offsets: bool = False):
     """The per-shard two-phase search body (runs under shard_map).
 
     Phase 1 probes each query's most promising local leaf (engine probe) and
@@ -275,6 +293,14 @@ def _make_shard_body(max_leaf: int, model_axis: str,
     against it — the fixed-width survivor compaction by default, the masked
     scan with ``strategy="scan"`` — and reduces the answer.  Shared by
     ``build_search_fn`` (dry-run lowering) and ``make_distributed_search``.
+
+    With ``per_query_offsets=True`` the body takes three extra inputs —
+    ``leaf_global`` (the (S, P) local-slot → global-leaf map), per-query
+    (Q, L) conformal offset rows, and a (Q,) prune-only ``bsf_ub`` warm
+    bound — so one compiled program serves micro-batches mixing quality
+    targets, with the per-leaf offsets gathered onto each shard's local
+    slots.  Padding slots gather row L (every (Q, L+…) gather is clamped to
+    the last real leaf) but ``has_filter=False`` already disables them.
     """
 
     def search_fn(series, start, size, lo, hi, w1, b1, w2, b2, y_mean,
@@ -305,7 +331,43 @@ def _make_shard_body(max_leaf: int, model_axis: str,
         total_searched = jax.lax.psum(n_s, model_axis)
         return nn[None], total_searched[None]
 
-    return search_fn
+    def search_fn_pq(series, start, size, lo, hi, w1, b1, w2, b2, y_mean,
+                     y_std, offsets, has_filter, leaf_global, queries,
+                     qcoords, qoffsets, bsf_ub):
+        # inside shard_map: leading shard axis is size 1 → squeeze
+        series, start, size = series[0], start[0], size[0]
+        lo, hi = lo[0], hi[0]
+        w1, b1, w2, b2 = w1[0], b1[0], w2[0], b2[0]
+        y_mean, y_std = y_mean[0], y_std[0]
+        has_filter, leaf_global = has_filter[0], leaf_global[0]
+        del offsets   # baked single-target offsets unused in per-query mode
+
+        # gather each query's (Q, L) offset row onto local slots → (Q, P);
+        # padding slots (leaf_global == L) clamp to the last real row and
+        # are masked off by has_filter anyway.
+        L = qoffsets.shape[1]
+        slot = jnp.minimum(leaf_global, L - 1)
+        qoff = qoffsets[:, slot]                                # (Q, P)
+
+        lb, d_F = _shard_pruning_inputs(lo, hi, w1, b1, w2, b2, y_mean,
+                                        y_std, qoff, has_filter, size,
+                                        queries, qcoords)
+
+        bsf_local = engine.probe_best_leaf(series, start, size, lb,
+                                           queries, max_leaf)
+        bsf0 = jax.lax.pmin(bsf_local, model_axis)              # collective 1
+
+        # warm bound tightens prune decisions only — never folded into bsf0
+        # (the pmin'd bsf must stay a witnessed distance on every shard).
+        bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
+                                 max_leaf, bsf0, strategy=strategy,
+                                 max_survivors=max_survivors,
+                                 dist_impl=dist_impl, bsf_ub=bsf_ub)
+        nn = jax.lax.pmin(bsf, model_axis)                      # collective 2
+        total_searched = jax.lax.psum(n_s, model_axis)
+        return nn[None], total_searched[None]
+
+    return search_fn_pq if per_query_offsets else search_fn
 
 
 def build_search_fn(mesh: Mesh, max_leaf: int, data_axes=("data",),
@@ -332,7 +394,9 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
                             data_axes=("data",), model_axis: str = "model",
                             strategy: str = "compact",
                             max_survivors: Optional[int] = None,
-                            dist_impl: Optional[str] = None):
+                            dist_impl: Optional[str] = None,
+                            per_query_offsets: bool = False,
+                            donate: bool = False):
     """Build the jitted multi-chip search step over ``mesh``.
 
     Returns fn(queries (Q, m)) → (nn_dist (Q,), total_searched (Q,)), where
@@ -346,17 +410,58 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
     shard (``engine.compact_bsf_cascade``; ``max_survivors`` caps the static
     buffer, ``dist_impl`` picks the candidate distance algebra);
     ``"scan"`` = the masked-scan parity fallback.
+
+    per_query_offsets: the serving-runtime signature —
+    fn(queries (Q, m), qoffsets (Q, L), bsf_ub (Q,)) — where each query
+    carries its own per-leaf conformal offset row (mixed quality targets in
+    one compiled program; gathered per shard via ``sharded.leaf_global``)
+    and ``bsf_ub`` is the prune-only warm-start bound (+inf rows = no-op).
+
+    donate: donate the per-call query/offset/bound buffers to the compiled
+    program (per-query mode only) so steady-state pipelined serving re-uses
+    their device allocations instead of growing the arena.  Skipped on CPU,
+    where XLA ignores donation and warns.
     """
     max_leaf = sharded.max_leaf
     spec_idx = P(model_axis)
     spec_q = P(data_axes)
     search_fn = _make_shard_body(max_leaf, model_axis, strategy,
-                                 max_survivors, dist_impl)
+                                 max_survivors, dist_impl,
+                                 per_query_offsets=per_query_offsets)
 
     idx_args = (sharded.series, sharded.leaf_start, sharded.leaf_size,
                 sharded.lb_lo, sharded.lb_hi, sharded.w1, sharded.b1,
                 sharded.w2, sharded.b2, sharded.y_mean, sharded.y_std,
                 sharded.offsets, sharded.has_filter)
+
+    if per_query_offsets:
+        if sharded.leaf_global is None:
+            raise ValueError("per_query_offsets needs ShardedLeaFi.leaf_global"
+                             " (re-shard with the current shard_leafi)")
+        idx_pq = idx_args + (sharded.leaf_global,)
+        # qoffsets shard over queries like the batch; the L axis replicates
+        smapped = shard_map(
+            search_fn, mesh=mesh,
+            in_specs=(spec_idx,) * len(idx_pq)
+            + (spec_q, spec_q, P(data_axes, None), spec_q),
+            out_specs=(P(model_axis, *data_axes), P(model_axis, *data_axes)),
+            check_rep=False,
+        )
+
+        def run_pq(queries, qoffsets, bsf_ub):
+            sh = ShardedLeaFi(*idx_args, max_leaf=max_leaf,
+                              length=sharded.length, kind=sharded.kind,
+                              qscale=sharded.qscale)
+            qcoords = sh.query_coords(queries)
+            nn, total_searched = smapped(*idx_pq, queries, qcoords,
+                                         qoffsets, bsf_ub)
+            return nn[0], total_searched[0]
+
+        donate_kw = {}
+        if donate and jax.default_backend() != "cpu":
+            donate_kw["donate_argnums"] = (0, 1, 2)
+        run = jax.jit(run_pq, **donate_kw)
+        return run, idx_pq, spec_idx, spec_q
 
     smapped = shard_map(
         search_fn, mesh=mesh,

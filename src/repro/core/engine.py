@@ -129,15 +129,23 @@ def _next_pow2(n: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("k", "max_leaf"))
 def _scan_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
-                  k, max_leaf):
+                  bsf_ub, k, max_leaf):
     order = jnp.argsort(d_lb, axis=1)
     row_ids = jnp.arange(max_leaf)
 
-    def per_query(q, lb_row, dF_row, order_row):
+    def per_query(q, lb_row, dF_row, order_row, ub):
         def step(carry, leaf):
             topk_d, topk_i, n_s, n_plb, n_pf = carry
+            # lb-prune against min(bsf, ub): ub is a proven upper bound on
+            # the true k-th NN distance (see run_cascade's bsf_ub contract),
+            # so a leaf with lb > min(bsf, ub) holds no top-k member —
+            # pruning it cannot change the answer, only the searched count.
+            # The learned-filter test stays against the witnessed bsf only:
+            # conformal offsets are calibrated against the unseeded cascade
+            # (where the best-lb leaf is visited at bsf = INF), so tightening
+            # d_F's threshold with ub would break the recall contract.
             bsf = topk_d[-1]
-            p_lb = lb_row[leaf] > bsf
+            p_lb = lb_row[leaf] > jnp.minimum(bsf, ub)
             p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
             pruned = p_lb | p_f
             start = leaf_start[leaf]
@@ -159,7 +167,7 @@ def _scan_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
         (td, ti, n_s, n_plb, n_pf), _ = jax.lax.scan(step, init, order_row)
         return td, ti, n_s, n_plb, n_pf
 
-    return jax.vmap(per_query)(queries, d_lb, d_F, order)
+    return jax.vmap(per_query)(queries, d_lb, d_F, order, bsf_ub)
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +214,7 @@ def _bucket_leaf_topk(series, leaf_start, leaf_size, queries_b, leaf_b,
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
-                   leaf_valid=None):
+                   leaf_valid=None, bsf_ub=None):
     """Exact sequential-cascade replay over per-leaf top-k summaries.
 
     Identical decision logic and merge arithmetic to ``_scan_cascade`` — the
@@ -226,18 +234,26 @@ def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
     phantom candidate (id −1), matching ``masked_bsf_scan``'s scalar-bsf
     init for k=1.  leaf_valid: optional (L,) mask; invalid (shard-padding)
     leaves are lb-pruned unconditionally, exactly as the masked scan treats
-    ``leaf_size == 0``.
+    ``leaf_size == 0``.  bsf_ub: optional (Q,) prune-only upper bound on the
+    true k-th NN distance (see ``run_cascade``) — tightens the *lower-bound*
+    prune via ``min(bsf, ub)`` without ever entering the learned-filter test
+    or the top-k merge.
     """
     invalid = (jnp.zeros(leaf_d.shape[1], bool) if leaf_valid is None
                else ~jnp.asarray(leaf_valid))
     if bsf0 is None:
         bsf0 = jnp.full(leaf_d.shape[0], _INF)
+    if bsf_ub is None:
+        bsf_ub = jnp.full(leaf_d.shape[0], _INF)
 
-    def per_query(ld, li, lb_row, dF_row, order_row, b0):
+    def per_query(ld, li, lb_row, dF_row, order_row, b0, ub):
         def step(carry, leaf):
             topk_d, topk_i, n_s, n_plb, n_pf = carry
+            # ub tightens the lb test only; d_F compares against the
+            # witnessed bsf (see _scan_cascade for why).
             bsf = topk_d[-1]
-            p_lb = jnp.logical_or(lb_row[leaf] > bsf, invalid[leaf])
+            p_lb = jnp.logical_or(lb_row[leaf] > jnp.minimum(bsf, ub),
+                                  invalid[leaf])
             p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
             pruned = p_lb | p_f
             vals = jnp.where(pruned, _INF, ld[leaf])
@@ -255,8 +271,8 @@ def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
         (td, ti, n_s, n_plb, n_pf), _ = jax.lax.scan(step, init, order_row)
         return td, ti, n_s, n_plb, n_pf
 
-    return jax.vmap(per_query, in_axes=(0, 0, 0, 0, 0, 0))(
-        leaf_d, leaf_i, d_lb, d_F, order, bsf0)
+    return jax.vmap(per_query, in_axes=(0, 0, 0, 0, 0, 0, 0))(
+        leaf_d, leaf_i, d_lb, d_F, order, bsf0, bsf_ub)
 
 
 def _pow2_chunk(per_leaf_bytes: int, cap: int) -> int:
@@ -315,7 +331,7 @@ def _union_leaf_topk(series, leaf_start, leaf_size, queries_b, leaf_u,
 
 
 def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
-                     k, max_leaf, dist_impl):
+                     bsf_ub, k, max_leaf, dist_impl):
     Q, m = queries.shape
     L = leaf_start.shape[0]
     kk = min(k, max_leaf)
@@ -331,7 +347,14 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
         series, leaf_start, leaf_size, queries, leaf0,
         kk=kk, max_leaf=max_leaf, chunk=1, dist_impl=probe_impl)
     bsf0 = p_vals[:, 0, k - 1] if k <= kk else jnp.full((Q,), _INF)
-    mask = (d_lb <= bsf0[:, None]) & (d_F <= bsf0[:, None])
+    # the replay's effective lb threshold never exceeds min(bsf0, ub) after
+    # the first merge, so masking lb against it keeps the phase-1 superset
+    # guarantee while letting a tight warm-start bound shrink the survivor
+    # set (and with it the gathered candidate compute) before any distance
+    # work is paid.  d_F masks against bsf0 alone — the replay's filter test
+    # uses the witnessed bsf (≤ bsf0 after the first merge), never ub.
+    bsf0m = jnp.minimum(bsf0, bsf_ub)
+    mask = (d_lb <= bsf0m[:, None]) & (d_F <= bsf0[:, None])
     mask = mask.at[jnp.arange(Q), leaf0[:, 0]].set(True)
 
     # -- phase 2: bucket queries by survivor count, compact leaf lists ------
@@ -404,7 +427,7 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
 
     # -- phase 3: exact cascade replay over the per-leaf summaries ----------
     td, ti, n_s, n_plb, n_pf = replay_cascade(
-        leaf_d, leaf_i, d_lb, d_F, order, k=k)
+        leaf_d, leaf_i, d_lb, d_F, order, k=k, bsf_ub=bsf_ub)
     return td, ti, n_s, n_plb, n_pf, jnp.asarray(computed)
 
 
@@ -425,6 +448,7 @@ def run_cascade(
     max_leaf: int,
     strategy: str = "auto",
     dist_impl: Optional[str] = None,
+    bsf_ub: Optional[jnp.ndarray] = None,
 ) -> EngineResult:
     """Batched top-k leaf-cascade search over precomputed pruning inputs.
 
@@ -442,17 +466,31 @@ def run_cascade(
     Pallas kernel all-pairs over it (kernel-tiled MXU use, float-tolerance
     parity like "matmul"; off-TPU it lowers to the same matmul algebra);
     "direct"/"matmul" gather per-query candidate slabs instead.
+    bsf_ub: optional (Q,) per-query *prune-only* upper bound on the true
+    k-th NN distance (e.g. the serving runtime's triangle-inequality
+    warm-start bound, ``serving.warmstart``).  It tightens the *lower-bound*
+    prune via ``min(bsf, ub)`` but never enters the learned-filter test
+    (whose conformal offsets are calibrated against the unseeded bsf
+    trajectory — a warm threshold there collapses recall) or the top-k
+    merge as a candidate.  In exact mode the returned ids/dists are
+    therefore bitwise those of an unseeded run — only ``searched``/
+    ``computed`` (and wall-clock on the compact strategy) shrink; in
+    filtered mode the conformal recall contract is preserved because a leaf
+    with lb > ub holds no true top-k member.  +inf entries are the no-op
+    seed.
     """
     if strategy == "auto":
         strategy = "compact"
+    ub = (jnp.full(queries.shape[0], _INF) if bsf_ub is None
+          else jnp.asarray(bsf_ub, jnp.float32))
     if strategy == "scan":
         td, ti, n_s, n_plb, n_pf = _scan_cascade(
-            series, leaf_start, leaf_size, queries, d_lb, d_F,
+            series, leaf_start, leaf_size, queries, d_lb, d_F, ub,
             k=k, max_leaf=max_leaf)
         n_c = jnp.full(queries.shape[0], leaf_start.shape[0], jnp.int32)
     elif strategy == "compact":
         td, ti, n_s, n_plb, n_pf, n_c = _compact_cascade(
-            series, leaf_start, leaf_size, queries, d_lb, d_F,
+            series, leaf_start, leaf_size, queries, d_lb, d_F, ub,
             k=k, max_leaf=max_leaf, dist_impl=dist_impl)
     else:
         raise ValueError(f"unknown engine strategy {strategy!r}")
@@ -596,21 +634,29 @@ def probe_best_leaf(series, leaf_start, leaf_size, lb, queries, max_leaf):
 
 
 def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
-                    max_leaf, bsf0):
+                    max_leaf, bsf0, bsf_ub=None):
     """Best-so-far cascade over all leaves from a seed bsf → (bsf, n_s).
 
     The 1-NN, distance-only form of ``strategy="scan"``; leaves with size 0
     are treated as lb-pruned (shard padding).  jit/shard_map-safe — this is
     the per-shard body ``distributed._local_search`` routes through.
+
+    ``bsf_ub``: optional (Q,) prune-only bound (``run_cascade``'s warm-start
+    contract) — it tightens the lb test only, never the filter test.  Unlike
+    ``bsf0`` it never enters the bsf carry — the returned bsf is always a
+    real (witnessed) distance or the seed, never the bound.
     """
     row_ids = jnp.arange(max_leaf)
     order = jnp.argsort(lb, axis=1)
+    if bsf_ub is None:
+        bsf_ub = jnp.full(queries.shape[0], _INF)
 
-    def per_query(q, lb_row, dF_row, order_row, bsf_init):
+    def per_query(q, lb_row, dF_row, order_row, bsf_init, ub):
         def step(carry, leaf):
             bsf, n_s = carry
             valid = leaf_size[leaf] > 0
-            p_lb = jnp.logical_or(lb_row[leaf] > bsf, ~valid)
+            p_lb = jnp.logical_or(lb_row[leaf] > jnp.minimum(bsf, ub),
+                                  ~valid)
             p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
             pruned = p_lb | p_f
             slab = jax.lax.dynamic_slice_in_dim(
@@ -625,7 +671,7 @@ def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
                                      order_row)
         return bsf, n_s
 
-    return jax.vmap(per_query)(queries, lb, d_F, order, bsf0)
+    return jax.vmap(per_query)(queries, lb, d_F, order, bsf0, bsf_ub)
 
 
 def default_max_survivors(n_leaves: int) -> int:
@@ -641,7 +687,7 @@ def default_max_survivors(n_leaves: int) -> int:
 
 
 def tuned_max_survivors(survivor_counts, n_leaves: int,
-                        pct: float = 99.0) -> int:
+                        pct: float = 99.0, min_samples: int = 0) -> int:
     """Survivor capacity from observed per-query survivor-count statistics.
 
     The ``pct``-th percentile of the observed counts, rounded up to a power
@@ -653,17 +699,28 @@ def tuned_max_survivors(survivor_counts, n_leaves: int,
     serving runtime feeds this from its rolling survivor-count window
     (``serving.telemetry.Telemetry.suggest_max_survivors``); with no
     observations yet it degrades to :func:`default_max_survivors`.
+
+    ``min_samples``: below this many observations the ``pct``-th percentile
+    of the window is statistically meaningless (e.g. the p99 of 5 samples is
+    just their max-ish), and a handful of easy early queries would lock in
+    an unstable *low* capacity that overflow-falls-back on the first hard
+    one.  Cold-start calls therefore floor the estimate at the configured
+    :func:`default_max_survivors` until the window has filled — the
+    estimate can tighten traffic upward early, never downward.
     """
     counts = np.asarray(survivor_counts)
     if counts.size == 0:
         return default_max_survivors(n_leaves)
     cap = int(np.ceil(np.percentile(counts, pct)))
-    return min(_next_pow2(max(cap, 1)), _next_pow2(n_leaves))
+    cap = min(_next_pow2(max(cap, 1)), _next_pow2(n_leaves))
+    if counts.size < max(int(min_samples), 0):
+        cap = max(cap, default_max_survivors(n_leaves))
+    return cap
 
 
 def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
                         max_leaf, bsf0, *, max_survivors=None,
-                        dist_impl=None):
+                        dist_impl=None, bsf_ub=None):
     """Fixed-width survivor compaction form of ``masked_bsf_scan``.
 
     Same contract — 1-NN bsf cascade from a seed ``bsf0`` over all leaves,
@@ -699,10 +756,18 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
         max_survivors = default_max_survivors(P)
     C = max(min(int(max_survivors), P), 1)
     dist_impl = dist_impl or l2_ops.default_gathered_impl()
+    if bsf_ub is None:
+        bsf_ub = jnp.full(Q, _INF)
 
     valid = leaf_size > 0
     lb = jnp.where(valid[None, :], lb, _INF)
-    survive = (lb <= bsf0[:, None]) & (d_F <= bsf0[:, None]) & valid[None, :]
+    # prune-only bound: the lb mask uses min(bsf0, ub) — matching the
+    # replay's effective lb threshold after the seed merge — while d_F masks
+    # against bsf0 alone, because the replay's filter test compares against
+    # the witnessed bsf (≤ bsf0), never the warm bound (superset preserved).
+    bsf0m = jnp.minimum(bsf0, bsf_ub)
+    survive = (lb <= bsf0m[:, None]) & (d_F <= bsf0[:, None]) \
+        & valid[None, :]
     n_surv = survive.sum(axis=1).astype(jnp.int32)
 
     # survivors first, in ascending-lb order (stable argsort of the inverted
@@ -728,7 +793,7 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
 
     td, _, n_s, _, _ = replay_cascade(
         leaf_min[..., None], jnp.full((Q, P, 1), -1, jnp.int32),
-        lb, d_F, order, k=1, bsf0=bsf0, leaf_valid=valid)
+        lb, d_F, order, k=1, bsf0=bsf0, leaf_valid=valid, bsf_ub=bsf_ub)
     bsf_c, ns_c = td[:, 0], n_s
 
     # overflow queries (survivors > capacity) would replay against missing
@@ -739,7 +804,7 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
     bsf_s, ns_s = jax.lax.cond(
         overflow.any(),
         lambda: masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F,
-                                queries, max_leaf, bsf0),
+                                queries, max_leaf, bsf0, bsf_ub),
         lambda: (jnp.full((Q,), _INF), jnp.zeros((Q,), jnp.int32)))
     return (jnp.where(overflow, bsf_s, bsf_c),
             jnp.where(overflow, ns_s, ns_c))

@@ -60,6 +60,44 @@ class SearchResult:
         return 1.0 - self.searched / self.n_leaves
 
 
+@dataclasses.dataclass
+class PendingSearch:
+    """A dispatched batched search whose device work may still be running.
+
+    JAX arrays are futures: :func:`search_batched_async` returns as soon as
+    the engine's programs are enqueued, holding device arrays here, and the
+    host blocks only when :meth:`result` materializes them to numpy.  The
+    serving runtime's pipelined loop dispatches batch N+1 while batch N's
+    arrays are still cooking on device; :meth:`result` then harvests in
+    dispatch order.  (The compact strategy's survivor bucketing syncs the
+    host once per dispatch — the probe/mask prefix — so its overlap window
+    is the candidate pass + replay; the scan strategy dispatches fully
+    async.)
+    """
+    raw: engine.EngineResult
+    order: np.ndarray
+    n_series: int
+    n_leaves: int
+
+    def block_until_ready(self) -> "PendingSearch":
+        jax.block_until_ready(self.raw.topk_d)
+        return self
+
+    def result(self) -> SearchResult:
+        """Materialize to a :class:`SearchResult` (blocks on the device)."""
+        r = self.raw
+        ids_sorted = np.asarray(r.topk_i)
+        valid = ids_sorted >= 0
+        orig = np.where(valid, self.order[
+            np.clip(ids_sorted, 0, self.n_series - 1)], -1)
+        return SearchResult(
+            dists=np.asarray(r.topk_d), ids=orig,
+            searched=np.asarray(r.n_searched),
+            pruned_lb=np.asarray(r.n_pruned_lb),
+            pruned_filter=np.asarray(r.n_pruned_filter),
+            n_leaves=self.n_leaves, computed=np.asarray(r.n_computed))
+
+
 # ---------------------------------------------------------------------------
 # shared pieces
 # ---------------------------------------------------------------------------
@@ -114,7 +152,7 @@ def predictions_for_all_leaves(index: FlatIndex, filter_params,
 # ---------------------------------------------------------------------------
 
 
-def search_batched(
+def search_batched_async(
     index: FlatIndex,
     queries: np.ndarray,
     *,
@@ -128,19 +166,16 @@ def search_batched(
     filter_type: str = "mlp",
     strategy: str = "auto",
     dist_impl: Optional[str] = None,
-) -> SearchResult:
-    """Batched LeaFi search.  Exact when filters are disabled.
+    bsf_ub: np.ndarray | None = None,
+) -> PendingSearch:
+    """Dispatch a batched LeaFi search without blocking on the device.
 
-    ``strategy``/``dist_impl`` select the engine execution plan (see
-    :mod:`repro.core.engine`): "compact" (the "auto" default) only computes
-    distances for cascade survivors; "scan" is the masked fallback.
-
-    ``quality_target`` is one target shared by the batch (the paper's form)
-    or an array of Q per-query targets — the serving runtime's heterogeneous
-    micro-batch form, lowered to (Q, F) per-query conformal offset rows (the
-    paper's §4.4 "quality target of each query", batched).  The grouped
-    fallback :func:`search_batched_grouped` answers the same mixed batch as
-    homogeneous sub-batches; tests pin the two equal to float tolerance.
+    Same arguments and semantics as :func:`search_batched` (which is just
+    ``search_batched_async(...).result()``), plus ``bsf_ub``: an optional
+    (Q,) per-query prune-only upper bound on the true k-th NN distance
+    (``engine.run_cascade``'s warm-start seed — tightens pruning, never
+    changes the answer).  Returns a :class:`PendingSearch` holding device
+    arrays; call ``.result()`` to materialize.
     """
     queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
     d_lb = bounds_mod.lower_bounds(index, queries)                  # (Q, L)
@@ -169,17 +204,45 @@ def search_batched(
         jnp.asarray(index.series), jnp.asarray(index.leaf_start),
         jnp.asarray(index.leaf_size), queries, d_lb, d_F,
         k=k, max_leaf=index.max_leaf_size, strategy=strategy,
-        dist_impl=dist_impl)
-    ids_sorted = np.asarray(res.topk_i)
-    valid = ids_sorted >= 0
-    orig = np.where(valid, np.asarray(index.order)[
-        np.clip(ids_sorted, 0, index.n_series - 1)], -1)
-    return SearchResult(
-        dists=np.asarray(res.topk_d), ids=orig,
-        searched=np.asarray(res.n_searched),
-        pruned_lb=np.asarray(res.n_pruned_lb),
-        pruned_filter=np.asarray(res.n_pruned_filter),
-        n_leaves=index.n_leaves, computed=np.asarray(res.n_computed))
+        dist_impl=dist_impl, bsf_ub=bsf_ub)
+    return PendingSearch(raw=res, order=np.asarray(index.order),
+                         n_series=index.n_series, n_leaves=index.n_leaves)
+
+
+def search_batched(
+    index: FlatIndex,
+    queries: np.ndarray,
+    *,
+    k: int = 1,
+    filter_params=None,
+    leaf_ids: np.ndarray | None = None,
+    tuner: Optional[conformal.AutoTuner] = None,
+    quality_target: float | np.ndarray | None = None,
+    use_filters: bool = True,
+    use_kernel: bool = True,
+    filter_type: str = "mlp",
+    strategy: str = "auto",
+    dist_impl: Optional[str] = None,
+    bsf_ub: np.ndarray | None = None,
+) -> SearchResult:
+    """Batched LeaFi search.  Exact when filters are disabled.
+
+    ``strategy``/``dist_impl`` select the engine execution plan (see
+    :mod:`repro.core.engine`): "compact" (the "auto" default) only computes
+    distances for cascade survivors; "scan" is the masked fallback.
+
+    ``quality_target`` is one target shared by the batch (the paper's form)
+    or an array of Q per-query targets — the serving runtime's heterogeneous
+    micro-batch form, lowered to (Q, F) per-query conformal offset rows (the
+    paper's §4.4 "quality target of each query", batched).  The grouped
+    fallback :func:`search_batched_grouped` answers the same mixed batch as
+    homogeneous sub-batches; tests pin the two equal to float tolerance.
+    """
+    return search_batched_async(
+        index, queries, k=k, filter_params=filter_params, leaf_ids=leaf_ids,
+        tuner=tuner, quality_target=quality_target, use_filters=use_filters,
+        use_kernel=use_kernel, filter_type=filter_type, strategy=strategy,
+        dist_impl=dist_impl, bsf_ub=bsf_ub).result()
 
 
 def search_batched_grouped(

@@ -34,6 +34,20 @@ from .. import configs
 from ..models import transformer
 
 
+def _print_serve_report(report: dict, label: str = "") -> None:
+    tag = f" [{label}]" if label else ""
+    print(f"served{tag} {report['n_requests']} requests in "
+          f"{report['n_batches']} batches "
+          f"(padding {report['padding_fraction']:.1%}): "
+          f"{report['throughput_qps']:.1f} qps, latency "
+          f"p50 {report['p50']*1e3:.1f}ms / p95 {report['p95']*1e3:.1f}ms "
+          f"/ p99 {report['p99']*1e3:.1f}ms, pruning "
+          f"{report['pruning_ratio']:.3f}")
+    for t, rec in report["recall_by_target"].items():
+        print(f"  target {t:.3f}: achieved recall {rec['recall']:.3f} "
+              f"(n={rec['n']})")
+
+
 def serve_leafi(args) -> None:
     """Open-loop micro-batched serving over the LeaFi engine."""
     import numpy as np
@@ -45,8 +59,8 @@ def serve_leafi(args) -> None:
     targets = tuple(float(t) for t in args.targets.split(","))
     if args.ckpt and os.path.exists(os.path.join(args.ckpt, "DONE")):
         t0 = time.perf_counter()
-        session = ServingSession.from_checkpoint(args.ckpt,
-                                                 strategy=args.strategy)
+        session = ServingSession.from_checkpoint(
+            args.ckpt, strategy=args.strategy, warm_start=args.warm_start)
         print(f"cold start from {args.ckpt}: "
               f"{time.perf_counter() - t0:.2f}s "
               f"({session.lfi.index.n_series} series, "
@@ -60,7 +74,8 @@ def serve_leafi(args) -> None:
             backbone="dstree", leaf_capacity=256, n_global=200, n_local=60,
             t_filter_over_t_series=20.0,
             train=filter_training.TrainConfig(epochs=40)))
-        session = ServingSession(lfi, strategy=args.strategy)
+        session = ServingSession(lfi, strategy=args.strategy,
+                                 warm_start=args.warm_start)
         if args.ckpt:
             session.save(args.ckpt)
             print(f"checkpointed index to {args.ckpt} "
@@ -83,25 +98,82 @@ def serve_leafi(args) -> None:
     exact = session.search_exact(np.stack([r.query for r in trace]))
     oracle = {r.rid: float(exact.dists[i, 0])
               for i, r in enumerate(trace)}
+
+    service_time = None
+    if args.pipeline:
+        # pipelined serving needs an injected virtual clock (the host can't
+        # time overlapped execution): model per-batch cost from one timed
+        # warm full-bucket search, scaled by bucket fill.
+        q = pool[np.arange(args.batch) % len(pool)]
+        t = np.asarray(targets)[np.arange(args.batch) % len(targets)]
+        t0 = time.perf_counter()
+        session._search_async(q, t, args.k).result()
+        model_s = time.perf_counter() - t0
+        service_time = lambda b: model_s * max(b.bucket / args.batch, 0.25)  # noqa: E731
+        print(f"pipeline depth {args.pipeline}: service model "
+              f"{model_s*1e3:.1f}ms/full batch")
+
     report = session.serve(
         trace, batcher=MicroBatcher(max_batch=args.batch,
                                     max_wait=args.max_wait_ms / 1e3),
-        recall_oracle=oracle)
-
-    print(f"served {report['n_requests']} requests in "
-          f"{report['n_batches']} batches "
-          f"(padding {report['padding_fraction']:.1%}): "
-          f"{report['throughput_qps']:.1f} qps, latency "
-          f"p50 {report['p50']*1e3:.1f}ms / p95 {report['p95']*1e3:.1f}ms "
-          f"/ p99 {report['p99']*1e3:.1f}ms, pruning "
-          f"{report['pruning_ratio']:.3f}")
-    for t, rec in report["recall_by_target"].items():
-        print(f"  target {t:.3f}: achieved recall {rec['recall']:.3f} "
-              f"(n={rec['n']})")
+        recall_oracle=oracle, service_time=service_time,
+        pipeline=args.pipeline)
+    _print_serve_report(report)
 
     if args.dist:
+        if args.k == 1:
+            serve_leafi_dist_trace(session.lfi, trace, args, oracle)
+        else:
+            print("(--dist trace serving needs --k 1; the distributed "
+                  "exchange reduces a single nn distance)")
         serve_leafi_distributed(session.lfi, pool[:args.batch],
                                 session.telemetry)
+        session_for_summary = session
+    else:
+        session_for_summary = session
+
+    if args.summary:
+        import json
+        print("telemetry summary:")
+        print(json.dumps(session_for_summary.telemetry.summary(), indent=2,
+                         default=float))
+
+
+def serve_leafi_dist_trace(lfi, trace, args, oracle) -> None:
+    """Serve the same open-loop trace through the shard_map executor.
+
+    Shards the index over every visible device on a 1×D mesh and drives the
+    identical micro-batched trace through a
+    :class:`~repro.serving.session.DistributedExecutor` (per-query conformal
+    offset rows through shard_map; pipelined when ``--pipeline``).
+    """
+    import numpy as np
+
+    from ..core import distributed
+    from ..serving import DistributedExecutor, MicroBatcher, ServingSession
+
+    D = max(len(jax.devices()), 1)
+    mesh = distributed.make_search_mesh(1, D)
+    executor = DistributedExecutor(lfi, mesh, strategy=args.strategy)
+    session = ServingSession(lfi, strategy=args.strategy,
+                             warm_start=args.warm_start, executor=executor)
+    targets = tuple(float(t) for t in args.targets.split(","))
+    with mesh:
+        session.warmup(max_batch=args.batch, ks=(1,), targets=targets)
+        service_time = None
+        if args.pipeline:
+            q = np.asarray(lfi.index.series[:args.batch])
+            t = np.asarray(targets)[np.arange(args.batch) % len(targets)]
+            t0 = time.perf_counter()
+            session._search_async(q, t, 1).result()
+            model_s = time.perf_counter() - t0
+            service_time = lambda b: model_s * max(b.bucket / args.batch, 0.25)  # noqa: E731
+        report = session.serve(
+            trace, batcher=MicroBatcher(max_batch=args.batch,
+                                        max_wait=args.max_wait_ms / 1e3),
+            recall_oracle=oracle, service_time=service_time,
+            pipeline=args.pipeline)
+    _print_serve_report(report, label=f"dist x{D}")
 
 
 def serve_leafi_distributed(lfi, q, telemetry=None) -> None:
@@ -174,9 +246,18 @@ def main() -> None:
                          "else builds and saves (--arch leafi)")
     ap.add_argument("--dist", action="store_true",
                     help="also smoke the sharded (shard_map) search path "
-                         "(--arch leafi only; set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N for N "
-                         "shards off-TPU)")
+                         "(--arch leafi only; with --k 1 the full trace is "
+                         "re-served through the distributed executor; set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                         "for N shards off-TPU)")
+    ap.add_argument("--pipeline", type=int, default=0,
+                    help="pipelined serving depth (batches in flight; "
+                         "0 = serial; --arch leafi)")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="cross-batch bsf warm-starting (--arch leafi)")
+    ap.add_argument("--summary", action="store_true",
+                    help="print the session telemetry summary (rolling "
+                         "percentiles incl. queue-wait/form/execute phases)")
     args = ap.parse_args()
 
     if args.arch == "leafi":

@@ -3,11 +3,15 @@
 Public API:
     MicroBatcher, Request, MicroBatch      admission queue + flush policy
     poisson_trace, run_trace               open-loop traffic + event drive
+    run_trace_pipelined                    overlapped dispatch/execute drive
     ServingSession, save_index, load_index warmed sessions + cold start
+    DistributedExecutor                    micro-batches → shard_map search
+    BsfCache                               cross-batch bsf warm-starting
     Telemetry, latency_percentiles         rolling serving counters
 """
 from .batcher import (MicroBatch, MicroBatcher, Request,  # noqa: F401
-                      poisson_trace, run_trace)
-from .session import (ServingSession, load_index,         # noqa: F401
-                      save_index)
+                      poisson_trace, run_trace, run_trace_pipelined)
+from .session import (DistributedExecutor, PendingBatch,  # noqa: F401
+                      ServingSession, load_index, save_index)
 from .telemetry import Telemetry, latency_percentiles     # noqa: F401
+from .warmstart import BsfCache                           # noqa: F401

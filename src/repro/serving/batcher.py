@@ -219,3 +219,102 @@ def run_trace(trace: Sequence[Request], batcher: MicroBatcher,
                     "result": (result if extract is None
                                else extract(result, pos))}
     return completions, batch_log
+
+
+def run_trace_pipelined(trace: Sequence[Request], batcher: MicroBatcher,
+                        dispatch: Callable[[MicroBatch], object],
+                        harvest: Callable[[object], object], *,
+                        service_time: Callable[[MicroBatch], float],
+                        extract: Optional[Callable[[object, int], object]] = None,
+                        max_in_flight: int = 1,
+                        program_key: Optional[Callable[[MicroBatch], object]]
+                        = None) -> Tuple[Dict[int, dict], List[dict]]:
+    """Pipelined variant of :func:`run_trace`: overlap dispatch and execute.
+
+    ``dispatch(batch)`` submits the batch asynchronously (JAX async dispatch
+    — host returns as soon as the computation is enqueued) and returns a
+    pending handle; ``harvest(handle)`` blocks until its results are ready.
+    Up to ``max_in_flight`` batches run concurrently, so host-side batch
+    formation for batch N+1 overlaps device execution of batch N.
+
+    A batch is harvested (in FIFO dispatch order) before dispatching the
+    next one when the pipeline is full **or** when the next batch maps to
+    the same compiled program — ``program_key(batch)``, default
+    ``(bucket, k)`` — because donated input buffers make a second in-flight
+    batch per program illegal.
+
+    Determinism contract: ``service_time`` is **required** — the virtual
+    clock must advance by injected per-batch costs at dispatch, exactly as
+    the serial loop advances at execute, so batch composition, completion
+    times, and the batch sequence are identical to :func:`run_trace` on the
+    same trace (tests pin this).  Measured host timings land in the log
+    instead: ``dispatch_s`` (submit cost, also logged as ``wall``),
+    ``harvest_s`` (residual blocking wait after overlap), and real
+    ``t_disp``/``t_done`` timestamps for throughput replay
+    (benchmarks/serve_bench.py derives pipelined batch costs from
+    inter-harvest gaps).
+    """
+    if service_time is None:
+        raise ValueError("run_trace_pipelined needs an injected service_time"
+                         " (the virtual clock cannot be measured while"
+                         " execution overlaps dispatch)")
+    if max_in_flight < 1:
+        raise ValueError("max_in_flight must be >= 1")
+    if program_key is None:
+        program_key = lambda b: (b.bucket, b.k)      # noqa: E731
+
+    trace = sorted(trace, key=lambda r: (r.arrival, r.rid))
+    completions: Dict[int, dict] = {}
+    batch_log: List[dict] = []
+    inflight: deque = deque()      # (handle, batch, key, log_entry) FIFO
+
+    def _retire():
+        handle, b, _key, entry = inflight.popleft()
+        t0 = time.perf_counter()
+        result = harvest(handle)
+        t1 = time.perf_counter()
+        entry["harvest_s"] = t1 - t0
+        entry["t_done"] = t1
+        for pos, rid in enumerate(b.rids):
+            completions[rid]["result"] = (result if extract is None
+                                          else extract(result, pos))
+
+    now = trace[0].arrival if trace else 0.0
+    i = 0
+    while i < len(trace) or batcher.pending:
+        while i < len(trace) and trace[i].arrival <= now + _EPS:
+            batcher.submit(trace[i])
+            i += 1
+        batches = batcher.poll(now)
+        if not batches:
+            nxt = batcher.next_deadline()
+            if i < len(trace):
+                nxt = min(nxt, trace[i].arrival)
+            now = max(now, nxt)
+            continue
+        for b in batches:
+            key = program_key(b)
+            while inflight and (len(inflight) >= max_in_flight
+                                or any(e[2] == key for e in inflight)):
+                _retire()
+            t0 = time.perf_counter()
+            handle = dispatch(b)
+            t1 = time.perf_counter()
+            dt = float(service_time(b))
+            now += dt
+            entry = {"formed_at": b.formed_at, "finish": now,
+                     "bucket": b.bucket, "n_valid": b.n_valid,
+                     "k": b.k, "service": dt, "wall": t1 - t0,
+                     "rids": list(b.rids), "dispatch_s": t1 - t0,
+                     "t_disp": t1, "harvest_s": None, "t_done": None}
+            batch_log.append(entry)
+            inflight.append((handle, b, key, entry))
+            for pos, rid in enumerate(b.rids):
+                completions[rid] = {
+                    "latency": now - float(b.arrivals[pos]),
+                    "finish": now, "pos": pos,
+                    "target": float(b.targets[pos]), "k": b.k,
+                    "result": None}
+    while inflight:
+        _retire()
+    return completions, batch_log

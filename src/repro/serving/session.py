@@ -17,10 +17,21 @@ needs beyond the engine itself:
   drives a whole open-loop trace through the micro-batcher, folding latency,
   pruning, survivor and recall counters into the session's
   :class:`~repro.serving.telemetry.Telemetry`.
+
+Execution is split into an async **dispatch** (submit the batch's engine
+programs; JAX returns device-array futures) and a blocking **harvest**
+(materialize results), so :meth:`ServingSession.serve` can run *pipelined*
+(``pipeline=1``): batch N+1's host-side formation and dispatch overlap
+batch N's device execution.  Cross-batch **bsf warm-starting**
+(``warm_start=True``) seeds each batch with prune-only upper bounds derived
+from recently answered queries (:mod:`repro.serving.warmstart`), and
+:class:`DistributedExecutor` routes the same micro-batches through the
+shard_map'd multi-chip search with per-query conformal offset rows.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -32,6 +43,7 @@ from . import batcher as batcher_mod
 from .batcher import MicroBatch, MicroBatcher, Request, _pow2_floor
 from .telemetry import (Telemetry, latency_percentiles,
                         observe_recall_cell, recall_summary)
+from .warmstart import BsfCache
 
 # ---------------------------------------------------------------------------
 # index persistence (cold start)
@@ -139,16 +151,144 @@ def _pow2_buckets(max_batch: int) -> List[int]:
     return [1 << i for i in range(_pow2_floor(max_batch).bit_length())]
 
 
+# ---------------------------------------------------------------------------
+# distributed execution backend (socket → shard_map)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _DistResult:
+    """SearchResult-shaped view of the distributed exchange's outputs.
+
+    The multi-chip search reduces a single nn distance and a psum'd
+    searched-leaf total per query; per-leaf prune attribution and series
+    ids stay shard-local (they never cross the pmin), so those fields are
+    absent here.
+    """
+    dists: np.ndarray            # (Q, 1)
+    searched: np.ndarray         # (Q,)
+    n_leaves: int
+    computed: Optional[np.ndarray] = None
+    ids: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class _PendingDist:
+    """In-flight distributed batch: device-array futures until result()."""
+    nn: object
+    n_searched: object
+    n_leaves: int
+
+    def block_until_ready(self) -> "_PendingDist":
+        import jax
+        jax.block_until_ready(self.nn)
+        return self
+
+    def result(self) -> _DistResult:
+        return _DistResult(dists=np.asarray(self.nn)[:, None],
+                           searched=np.asarray(self.n_searched),
+                           n_leaves=self.n_leaves)
+
+
+class DistributedExecutor:
+    """Routes serving micro-batches through the shard_map multi-chip search.
+
+    Builds one jitted per-query-offset program over ``mesh``
+    (:func:`repro.core.distributed.make_distributed_search` with
+    ``per_query_offsets=True``): each query carries its own (L,) conformal
+    offset row — mixed quality targets in one compiled program — plus the
+    (Q,) prune-only ``bsf_ub`` warm bound.  ``donate=True`` hands the
+    per-call query/offset/bound buffers to XLA so steady-state serving
+    re-uses their device allocations (skipped on CPU, where donation is
+    ignored).  k=1 only: the distributed exchange reduces a single nn
+    distance per query.
+    """
+
+    def __init__(self, lfi: build.LeaFiIndex, mesh, *,
+                 data_axes=("data",), model_axis: str = "model",
+                 strategy: str = "compact",
+                 max_survivors: Optional[int] = None,
+                 dist_impl: Optional[str] = None, donate: bool = True):
+        from ..core import distributed
+        self.lfi = lfi
+        self.n_leaves = lfi.index.n_leaves
+        n_model = int(mesh.shape[model_axis])
+        self.sharded = distributed.shard_leafi(lfi, n_model)
+        self.run, self._idx_args, _, _ = distributed.make_distributed_search(
+            mesh, self.sharded, data_axes=data_axes, model_axis=model_axis,
+            strategy=strategy, max_survivors=max_survivors,
+            dist_impl=dist_impl, per_query_offsets=True, donate=donate)
+
+    def _offset_rows(self, targets, B: int) -> np.ndarray:
+        """Per-query (B, L) conformal offset rows; +inf rows ⇒ exact search.
+
+        ``d_F = pred − offset``, so a +inf offset drives every filter bound
+        to −inf — the filter cascade can never fire and the distributed
+        search answers exactly, from the same compiled program.
+        """
+        L = self.n_leaves
+        if targets is None:
+            return np.full((B, L), np.inf, np.float32)
+        if self.lfi.tuner is None:
+            return np.zeros((B, L), np.float32)
+        off = conformal.scatter_offsets(
+            self.lfi.tuner, self.lfi.leaf_ids, L,
+            np.asarray(targets, np.float64))
+        return np.asarray(off, np.float32).reshape(B, L)
+
+    def dispatch(self, queries: np.ndarray, targets, k: int,
+                 bsf_ub: Optional[np.ndarray] = None) -> _PendingDist:
+        if int(k) != 1:
+            raise ValueError("DistributedExecutor serves k=1 only "
+                             f"(got k={k})")
+        q = np.asarray(queries, np.float32)
+        ub = (np.full(q.shape[0], np.inf, np.float32) if bsf_ub is None
+              else np.asarray(bsf_ub, np.float32))
+        nn, n_s = self.run(q, self._offset_rows(targets, q.shape[0]), ub)
+        return _PendingDist(nn=nn, n_searched=n_s, n_leaves=self.n_leaves)
+
+
+@dataclasses.dataclass
+class PendingBatch:
+    """One dispatched micro-batch awaiting harvest (FIFO, seq-ordered)."""
+    pending: object               # PendingSearch | _PendingDist
+    batch: MicroBatch
+    seq: int
+
+
 class ServingSession:
-    """A query-serving runtime over one built LeaFi index."""
+    """A query-serving runtime over one built LeaFi index.
+
+    ``warm_start=True`` enables cross-batch bsf warm-starting: each
+    dispatched batch is seeded with prune-only upper bounds from a rolling
+    cache of recently answered queries (see :mod:`repro.serving.warmstart`
+    for the triangle-inequality bound and the exactness argument).  Harvested
+    results are *staged* and only committed to the cache ``warm_lag`` batches
+    later, which makes serial and pipelined serving (any
+    ``pipeline <= warm_lag + 1``) observe identical cache states — the
+    trace-replay determinism tests pin serial vs ``pipeline=1`` bitwise.
+
+    ``executor`` swaps the single-host engine for a
+    :class:`DistributedExecutor` (k=1): batches flow through the shard_map
+    search with per-query conformal offset rows instead of
+    ``search_batched``.
+    """
 
     def __init__(self, lfi: build.LeaFiIndex, *, strategy: str = "compact",
                  dist_impl: Optional[str] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 warm_start: bool = False, warm_lag: int = 1,
+                 warm_capacity: int = 256,
+                 executor: Optional[DistributedExecutor] = None):
         self.lfi = lfi
         self.strategy = strategy
         self.dist_impl = dist_impl
         self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.warm_start = bool(warm_start)
+        self.warm_lag = int(warm_lag)
+        self.warm_cache = BsfCache(capacity=warm_capacity)
+        self.executor = executor
+        self._seq = 0
         self._warmed: set = set()
 
     # -- cold start ---------------------------------------------------------
@@ -187,12 +327,31 @@ class ServingSession:
                 q = np.asarray(queries)[np.arange(b) % len(queries)]
                 t = np.asarray(targets, np.float64)[np.arange(b)
                                                     % len(targets)]
-                self.search(q, quality_targets=t, k=k, record=False)
+                self._search_async(q, t, k).result()
                 self._warmed.add((b, k))
                 n += 1
         return n
 
     # -- execution ----------------------------------------------------------
+
+    def _search_async(self, queries: np.ndarray, targets, k: int,
+                      bsf_ub: Optional[np.ndarray] = None):
+        """Dispatch one batch through the session's execution backend.
+
+        Returns a pending handle (``.result()`` blocks): the distributed
+        executor when one is attached, else the single-host async engine
+        path with per-query targets lowered to (B, F) offset rows.
+        """
+        if self.executor is not None:
+            return self.executor.dispatch(queries, targets, k, bsf_ub)
+        lfi = self.lfi
+        return search.search_batched_async(
+            lfi.index, queries, k=k, filter_params=lfi.filter_params,
+            leaf_ids=lfi.leaf_ids, tuner=lfi.tuner,
+            quality_target=targets, use_filters=targets is not None,
+            strategy=self.strategy, dist_impl=self.dist_impl,
+            filter_type=getattr(lfi.config, "filter_type", "mlp"),
+            bsf_ub=bsf_ub)
 
     def search(self, queries: np.ndarray,
                quality_targets=None, k: int = 1,
@@ -216,13 +375,46 @@ class ServingSession:
                      k: int = 1) -> search.SearchResult:
         return self.search(queries, quality_targets=None, k=k, record=False)
 
-    def execute(self, batch: MicroBatch) -> search.SearchResult:
-        """Answer one micro-batch; telemetry sees only the valid rows."""
-        res = self.search(batch.queries, quality_targets=batch.targets,
-                          k=batch.k, record=False)
-        self.telemetry.record_batch(res, n_valid=batch.n_valid,
-                                    bucket=batch.bucket)
+    def dispatch(self, batch: MicroBatch) -> PendingBatch:
+        """Submit one micro-batch asynchronously (returns before compute).
+
+        Order of operations matters for determinism: the warm cache first
+        *commits* staged results from batches ``<= seq − 1 − warm_lag``
+        (identical in serial and pipelined serving — see the class
+        docstring), then seeds this batch's prune-only bounds.  Host-side
+        cost (offset lowering + program submit) is recorded as the ``form``
+        latency phase; per-request queue waits (arrival → batch formation,
+        virtual clock) ride along.
+        """
+        t0 = time.perf_counter()
+        seq = self._seq
+        self._seq += 1
+        bsf_ub = None
+        if self.warm_start:
+            self.warm_cache.commit_through(seq - 1 - self.warm_lag)
+            bsf_ub = self.warm_cache.seed(batch.queries, batch.k)
+        pending = self._search_async(batch.queries, batch.targets, batch.k,
+                                     bsf_ub=bsf_ub)
+        self.telemetry.record_phases(
+            queue_wait=(batch.formed_at - batch.arrivals).tolist(),
+            form_s=time.perf_counter() - t0)
+        return PendingBatch(pending=pending, batch=batch, seq=seq)
+
+    def harvest(self, pb: PendingBatch):
+        """Block on one dispatched batch; fold telemetry + warm staging."""
+        t0 = time.perf_counter()
+        res = pb.pending.result()
+        self.telemetry.record_phases(exec_s=time.perf_counter() - t0)
+        b = pb.batch
+        if self.warm_start:
+            kth = np.asarray(res.dists)[:b.n_valid, -1]
+            self.warm_cache.stage(pb.seq, b.queries[:b.n_valid], kth, b.k)
+        self.telemetry.record_batch(res, n_valid=b.n_valid, bucket=b.bucket)
         return res
+
+    def execute(self, batch: MicroBatch):
+        """Answer one micro-batch synchronously (dispatch + harvest)."""
+        return self.harvest(self.dispatch(batch))
 
     # -- open-loop serving --------------------------------------------------
 
@@ -230,7 +422,7 @@ class ServingSession:
               batcher: Optional[MicroBatcher] = None,
               recall_oracle: Optional[Dict[int, float]] = None,
               service_time: Optional[Callable[[MicroBatch], float]] = None,
-              ) -> dict:
+              pipeline: int = 0) -> dict:
         """Drive a whole arrival trace; returns a *per-trace* report.
 
         Every number in the report describes this trace alone — the
@@ -245,6 +437,14 @@ class ServingSession:
         ``service_time`` replaces measured wall-clock with injected
         per-batch costs (fully deterministic runs for tests; see
         benchmarks/serve_bench.py for the fixed-schedule-replay use).
+
+        ``pipeline=N`` (N ≥ 1) serves through
+        :func:`~repro.serving.batcher.run_trace_pipelined` with up to N
+        batches in flight — dispatch of batch N+1 overlaps device execution
+        of batch N.  Requires an injected ``service_time`` (the virtual
+        clock cannot be measured while execution overlaps); the batch
+        sequence, completion times, and results are identical to the serial
+        loop on the same trace (tests pin this bitwise).
         """
         batcher = batcher or MicroBatcher()
 
@@ -253,9 +453,15 @@ class ServingSession:
                     "searched": float(np.asarray(res.searched)[pos]),
                     "n_leaves": res.n_leaves}
 
-        completions, batch_log = batcher_mod.run_trace(
-            trace, batcher, self.execute, service_time=service_time,
-            extract=extract)
+        if pipeline:
+            completions, batch_log = batcher_mod.run_trace_pipelined(
+                trace, batcher, self.dispatch, self.harvest,
+                service_time=service_time, extract=extract,
+                max_in_flight=pipeline)
+        else:
+            completions, batch_log = batcher_mod.run_trace(
+                trace, batcher, self.execute, service_time=service_time,
+                extract=extract)
         lats: List[float] = []
         searched: List[float] = []
         for c in completions.values():

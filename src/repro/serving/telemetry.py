@@ -58,6 +58,15 @@ class Telemetry:
         self.latencies: deque = deque(maxlen=window)      # seconds/request
         self.searched: deque = deque(maxlen=window)       # leaves/query
         self.survivors: deque = deque(maxlen=window)      # computed leaves/q
+        # end-to-end latency decomposition (the pipeline-bubble view):
+        # queue-wait is per request on the trace's virtual clock; batch
+        # formation/dispatch and device-execute (result-harvest wait) are
+        # per batch on the host's real clock.  In pipelined serving the
+        # execute component is the *residual* wait after overlap — near
+        # zero when dispatch of batch N+1 fully hides batch N's compute.
+        self.queue_wait: deque = deque(maxlen=window)     # s/request
+        self.form_s: deque = deque(maxlen=window)         # s/batch (host)
+        self.exec_s: deque = deque(maxlen=window)         # s/batch (device)
         self._recall: Dict[float, list] = {}              # target → [hit, n]
         self.n_leaves: Optional[int] = None
         self.n_requests = 0
@@ -80,6 +89,21 @@ class Telemetry:
     def record_latency(self, seconds: float) -> None:
         self.latencies.append(float(seconds))
 
+    def record_phases(self, *, queue_wait=None, form_s: float = None,
+                      exec_s: float = None) -> None:
+        """Fold one batch's latency-phase observations.
+
+        ``queue_wait``: iterable of per-request waits (arrival → batch
+        formation, virtual clock); ``form_s``: host batch-formation +
+        dispatch seconds; ``exec_s``: device-execute / harvest-wait seconds.
+        """
+        if queue_wait is not None:
+            self.queue_wait.extend(float(w) for w in queue_wait)
+        if form_s is not None:
+            self.form_s.append(float(form_s))
+        if exec_s is not None:
+            self.exec_s.append(float(exec_s))
+
     def observe_recall(self, target: float, hit: bool) -> None:
         """One request's recall@1 outcome against the exact oracle."""
         observe_recall_cell(self._recall, target, hit)
@@ -99,9 +123,24 @@ class Telemetry:
 
     def suggest_max_survivors(self, n_leaves: Optional[int] = None,
                               pct: float = 99.0) -> int:
-        """Percentile-based survivor capacity from the observed window."""
+        """Percentile-based survivor capacity from the observed window.
+
+        Cold-start guard: with fewer observations than the ``pct``-th
+        percentile needs to be meaningful (≈ ``100/(100−pct)`` samples, 100
+        at the default p99), the estimate is floored at the engine's static
+        default — a handful of easy early queries must not lock in an
+        unstable low capacity (tests/test_serving.py pins this).
+        """
         L = n_leaves if n_leaves is not None else (self.n_leaves or 1)
-        return engine.tuned_max_survivors(np.asarray(self.survivors), L, pct)
+        min_samples = int(np.ceil(100.0 / max(100.0 - pct, 1.0)))
+        return engine.tuned_max_survivors(np.asarray(self.survivors), L, pct,
+                                          min_samples=min_samples)
+
+    def phase_percentiles(self) -> Dict[str, Dict[str, float]]:
+        """Rolling p50/p95/p99 of each latency phase (seconds)."""
+        return {"queue_wait": latency_percentiles(self.queue_wait),
+                "form": latency_percentiles(self.form_s),
+                "execute": latency_percentiles(self.exec_s)}
 
     def summary(self) -> dict:
         out = {"n_requests": self.n_requests, "n_batches": self.n_batches,
@@ -110,6 +149,8 @@ class Telemetry:
                "pruning_ratio": self.pruning_ratio(),
                "recall_by_target": self.recall_by_target()}
         out.update(self.latency_percentiles())
+        if self.queue_wait or self.form_s or self.exec_s:
+            out["phases"] = self.phase_percentiles()
         if self.survivors:
             out["survivors_mean"] = float(np.mean(self.survivors))
             out["suggested_max_survivors"] = self.suggest_max_survivors()

@@ -5,6 +5,21 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Drop XLA compilation caches after each test module.
+
+    The suite jit-compiles hundreds of programs in one process; letting
+    them accumulate has crashed the CPU backend's compiler late in the run
+    (segfault inside ``backend_compile`` around the ~215th test, not
+    reproducible for any module in isolation).  Per-module recompilation
+    costs a few seconds total and keeps the long run bounded.
+    """
+    yield
+    import jax
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def randwalk_small():
     rng = np.random.default_rng(7)

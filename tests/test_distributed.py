@@ -234,3 +234,160 @@ def test_distributed_search_matches(backbone):
                        text=True, timeout=900)
     assert f"DIST_OK {backbone}" in r.stdout, \
         r.stdout[-2000:] + r.stderr[-4000:]
+
+
+PQ_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import build, conformal, distributed, filter_training, search
+from repro.core.summaries import znormalize
+
+backbone = "%(backbone)s"
+rng = np.random.default_rng(0)
+S = rng.standard_normal((3000, 64), dtype=np.float32).cumsum(axis=1)
+cfg = build.LeaFiConfig(backbone=backbone, leaf_capacity=64, n_global=120,
+                        n_local=24, t_filter_over_t_series=10.0,
+                        train=filter_training.TrainConfig(epochs=20))
+lfi = build.build_leafi(S, cfg)
+Q = znormalize(S[rng.integers(0, len(S), 16)]
+               + 0.3 * rng.standard_normal((16, 64)).astype(np.float32))
+Qj = jnp.asarray(Q)
+L = lfi.index.n_leaves
+TARGETS = np.asarray([0.9, 0.95, 0.99])
+targets = TARGETS[rng.integers(0, 3, 16)]            # mixed micro-batch
+
+mesh = distributed.make_search_mesh(2, 2)
+sharded = distributed.shard_leafi(lfi, n_shards=2, quality_target=0.99)
+assert sharded.leaf_global is not None
+lg = np.asarray(sharded.leaf_global)
+real = np.asarray(sharded.leaf_size) > 0
+# the slot->global map covers every leaf exactly once; padding slots carry L
+assert sorted(lg[real].tolist()) == list(range(L))
+assert (lg[~real] == L).all()
+
+run, *_ = distributed.make_distributed_search(
+    mesh, sharded, per_query_offsets=True)
+qoff = conformal.scatter_offsets(lfi.tuner, lfi.leaf_ids, L, targets)
+inf_ub = np.full(16, np.inf, np.float32)
+with mesh:
+    nn, tot = run(Qj, jnp.asarray(qoff), jnp.asarray(inf_ub))
+nn, tot = np.asarray(nn), np.asarray(tot)
+
+# parity vs the single-device per-query-offset search, pinned per target
+# group (cross-program: tolerance, cf. the module docstring)
+ref = search.search_batched(lfi.index, Q, k=1, quality_target=targets,
+                            filter_params=lfi.filter_params,
+                            leaf_ids=lfi.leaf_ids, tuner=lfi.tuner)
+for t in TARGETS:
+    sel = targets == t
+    if sel.any():
+        np.testing.assert_allclose(nn[sel], ref.dists[sel, 0], rtol=2e-6,
+                                   err_msg=str(t))
+
+# homogeneous rows == the baked single-offset program (same target)
+run1, *_ = distributed.make_distributed_search(mesh, sharded)
+qoff99 = conformal.scatter_offsets(lfi.tuner, lfi.leaf_ids, L,
+                                   np.full(16, 0.99))
+with mesh:
+    nn_pq, _ = run(Qj, jnp.asarray(qoff99), jnp.asarray(inf_ub))
+    nn_1, _ = run1(Qj)
+np.testing.assert_allclose(np.asarray(nn_pq), np.asarray(nn_1), rtol=2e-6)
+
+# +inf offset rows disable every filter: exact answers from the same program
+inf_rows = jnp.full((16, L), np.inf, jnp.float32)
+with mesh:
+    nn_ex, tot_ex = run(Qj, inf_rows, jnp.asarray(inf_ub))
+exact = lfi.search_exact(Q)
+np.testing.assert_allclose(np.asarray(nn_ex), exact.dists[:, 0], rtol=2e-6)
+
+# a valid prune-only warm bound on the exact path (where its bitwise
+# contract holds: it only tightens the lb test) never changes the answer
+# and never scans more leaves
+ub = (exact.dists[:, 0] * (1 + 1e-6) + 1e-6).astype(np.float32)
+with mesh:
+    nn_w, tot_w = run(Qj, inf_rows, jnp.asarray(ub))
+np.testing.assert_allclose(np.asarray(nn_w), np.asarray(nn_ex), rtol=2e-6)
+assert np.asarray(tot_w).sum() <= np.asarray(tot_ex).sum()
+
+print("PQ_OK", backbone)
+"""
+
+
+@pytest.mark.parametrize("backbone", ["dstree", "isax"])
+def test_distributed_per_query_offsets(backbone):
+    code = PQ_CODE % {"backbone": backbone}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900)
+    assert f"PQ_OK {backbone}" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-4000:]
+
+
+SERVE_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.core import build, distributed, filter_training
+from repro.core.summaries import znormalize
+from repro.serving import (DistributedExecutor, MicroBatcher,
+                           ServingSession, poisson_trace)
+
+rng = np.random.default_rng(0)
+S = rng.standard_normal((3000, 64), dtype=np.float32).cumsum(axis=1)
+cfg = build.LeaFiConfig(backbone="dstree", leaf_capacity=64, n_global=120,
+                        n_local=24, t_filter_over_t_series=10.0,
+                        train=filter_training.TrainConfig(epochs=20))
+lfi = build.build_leafi(S, cfg)
+pool = znormalize(S[rng.integers(0, len(S), 32)]
+                  + 0.3 * rng.standard_normal((32, 64)).astype(np.float32))
+trace = poisson_trace(pool, rate=800.0, n_requests=48,
+                      targets=(0.9, 0.99), ks=(1,), seed=3)
+svc = lambda b: 1e-3 * max(b.bucket / 8, 0.25)
+
+mesh = distributed.make_search_mesh(1, 2)            # 1x2 host mesh
+
+def serve(pipeline):
+    ex = DistributedExecutor(lfi, mesh)
+    s = ServingSession(lfi, warm_start=True, executor=ex)
+    with mesh:
+        s.warmup(max_batch=8, ks=(1,), queries=pool)
+        return s.serve(trace,
+                       batcher=MicroBatcher(max_batch=8, max_wait=0.004),
+                       service_time=svc, pipeline=pipeline)
+
+r0 = serve(0)
+r1 = serve(1)
+host = ("wall", "dispatch_s", "harvest_s", "t_disp", "t_done")
+strip = lambda log: [{k: v for k, v in b.items() if k not in host}
+                     for b in log]
+assert strip(r0["batches"]) == strip(r1["batches"])
+for rid in r0["completions"]:
+    assert r0["completions"][rid]["result"] == \
+        r1["completions"][rid]["result"], rid        # bitwise
+
+# the shard_map answers match the single-host session on the same trace
+single = ServingSession(lfi)
+single.warmup(max_batch=8, ks=(1,), queries=pool)
+rs = single.serve(trace, batcher=MicroBatcher(max_batch=8, max_wait=0.004),
+                  service_time=svc)
+for rid in rs["completions"]:
+    a = rs["completions"][rid]["result"]["dist"]
+    b = r0["completions"][rid]["result"]["dist"]
+    assert abs(a - b) <= 2e-5 * max(abs(a), 1.0), (rid, a, b)
+
+print("DIST_SERVE_OK")
+"""
+
+
+def test_distributed_serving_pipelined_parity_on_host_mesh():
+    """1×2 host mesh: the DistributedExecutor session serves the identical
+    trace bitwise under serial and pipelined dispatch, and its answers match
+    the single-host session to float tolerance."""
+    r = subprocess.run([sys.executable, "-c", SERVE_CODE],
+                       capture_output=True, text=True, timeout=900)
+    assert "DIST_SERVE_OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-4000:]

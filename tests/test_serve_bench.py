@@ -1,0 +1,35 @@
+"""Smoke for the serving benchmark's --quick mode (make bench-serve-quick).
+
+Runs the CI-sized pipeline sweep end-to-end in a subprocess on a shrunken
+setup (BENCH_N/BENCH_CACHE env) and checks the emitted payload has the
+depth × strategy cells with finite headline numbers.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_serve_bench_quick_smoke(tmp_path):
+    out = tmp_path / "serve_bench_quick.json"
+    env = dict(os.environ, PYTHONPATH="src", BENCH_N="4000",
+               BENCH_CACHE=str(tmp_path / "cache"))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serve_bench", "--quick",
+         "--requests", "64", "--batch", "8", "--out", str(out)],
+        capture_output=True, text=True, timeout=1800, env=env)
+    assert out.exists(), r.stdout[-2000:] + r.stderr[-4000:]
+    payload = json.load(open(out))
+    assert payload["quick"] is True
+    cells = payload["pipeline"]
+    for strategy in ("scan", "compact"):
+        assert cells[f"single/{strategy}/schedule_identical"] is True
+        for name in ("serial", "pipe1"):
+            cell = cells[f"single/{strategy}/{name}"]
+            assert cell["capacity_qps"] > 0
+            assert cell["p99_sat_over_sustained"] > 0
+            for pct in cell["saturated_latency_ms"].values():
+                assert pct >= 0

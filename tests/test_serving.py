@@ -14,7 +14,7 @@ import pytest
 
 from repro.core import build, conformal, engine, filter_training, search
 from repro.core.summaries import znormalize
-from repro.serving import (MicroBatcher, ServingSession,
+from repro.serving import (MicroBatcher, ServingSession, Telemetry,
                            latency_percentiles, load_index, poisson_trace,
                            run_trace, save_index)
 
@@ -264,3 +264,191 @@ def test_telemetry_feeds_capacity_and_counters(lfi, mixed_queries):
     # capacity covers ≥99% of the observed survivor counts
     surv = np.asarray(res.computed)
     assert (surv > cap).mean() <= 0.01 + 1.0 / len(surv)
+
+
+def test_suggest_max_survivors_cold_start_floors_at_default():
+    """A handful of easy early queries must not lock in an unstable low
+    capacity: below ~100/(100−pct) observations the suggestion is floored
+    at the engine's static default (regression for the cold-start bug
+    where 3 lucky queries suggested capacity 4 on a 1024-leaf index)."""
+    L = 1024
+    tel = Telemetry()
+    tel.n_leaves = L
+    tel.survivors.extend([1, 2, 3])                  # cold window
+    assert tel.suggest_max_survivors() >= engine.default_max_survivors(L)
+    # with a full window the percentile speaks for itself again, even when
+    # it sits *below* the static default
+    tel2 = Telemetry()
+    tel2.n_leaves = L
+    tel2.survivors.extend([4] * 400)
+    assert tel2.suggest_max_survivors() == \
+        engine.tuned_max_survivors(np.full(400, 4), L)
+    assert tel2.suggest_max_survivors() < engine.default_max_survivors(L)
+
+
+# ---------------------------------------------------------------------------
+# bsf warm-starting: prune-only bound semantics + the rolling cache
+# ---------------------------------------------------------------------------
+
+
+def test_bsf_ub_exact_mode_is_bitwise_and_prunes_no_worse(lfi, mixed_queries):
+    """Exact mode (no filters): a valid prune-only upper bound never changes
+    the answer — bitwise — and never scans more leaves in aggregate."""
+    q, _ = mixed_queries
+    for strategy in ("scan", "compact"):
+        base = search.search_batched(lfi.index, q, k=3, strategy=strategy)
+        ub = base.dists[:, -1] * (1 + 1e-6) + 1e-6       # ≥ true 3rd-NN dist
+        seeded = search.search_batched(lfi.index, q, k=3, strategy=strategy,
+                                       bsf_ub=ub)
+        np.testing.assert_array_equal(seeded.dists, base.dists, strategy)
+        np.testing.assert_array_equal(seeded.ids, base.ids, strategy)
+        assert seeded.searched.sum() <= base.searched.sum(), strategy
+        assert (seeded.computed <= base.computed).all() if strategy == \
+            "compact" else True
+
+
+def test_bsf_ub_filtered_mode_keeps_recall(lfi, mixed_queries):
+    """With filters the seeded cascade is not bitwise (the tighter lb prune
+    changes the bsf trajectory and with it the filter decisions), but the
+    bound only ever enters the *lb* test — a leaf with lb > ub ≥ d_true
+    holds no true NN — while the learned-filter test keeps its witnessed-bsf
+    threshold, so conformal recall semantics are preserved."""
+    q, targets = mixed_queries
+    exact = search.search_batched(lfi.index, q, k=1)
+    ub = exact.dists[:, 0] * (1 + 1e-6) + 1e-6
+    base = search.search_batched(lfi.index, q, k=1, quality_target=targets,
+                                 **_search_kw(lfi))
+    seeded = search.search_batched(lfi.index, q, k=1, quality_target=targets,
+                                   bsf_ub=ub, **_search_kw(lfi))
+    hit_base = conformal.recall_at_1(base.dists[:, 0], exact.dists[:, 0])
+    hit_seed = conformal.recall_at_1(seeded.dists[:, 0], exact.dists[:, 0])
+    assert np.mean(hit_seed) >= np.mean(hit_base) - 0.05
+    assert seeded.searched.sum() <= base.searched.sum()
+    # seeded distances are still witnessed: never below the exact answer
+    assert (seeded.dists[:, 0] >= exact.dists[:, 0] - 1e-4).all()
+
+
+def test_bsf_cache_bounds_are_valid_and_staged_commits_lag():
+    from repro.serving import BsfCache
+
+    rng = np.random.default_rng(3)
+    base = rng.standard_normal((32, 16)).astype(np.float32)
+    dists = rng.uniform(1.0, 2.0, 32).astype(np.float32)
+    cache = BsfCache(capacity=16)
+    assert cache.seed(base, 1) is None                   # cold
+    cache.update(base, dists, k=1)
+    assert len(cache) == 16                              # ring capacity
+    near = base[-16:] + 0.01 * rng.standard_normal((16, 16)).astype(
+        np.float32)
+    ub = cache.seed(near, 1)
+    # triangle inequality: ub ≥ cached dist − drift, and finite
+    assert np.isfinite(ub).all()
+    assert (ub >= dists[-16:] - 0.2).all()
+    assert cache.seed(near, 5) is None                   # per-k rings
+    # staging: nothing lands until commit_through reaches the seq
+    cache2 = BsfCache()
+    cache2.stage(0, base[:4], dists[:4], k=1)
+    cache2.stage(1, base[4:8], dists[4:8], k=1)
+    assert cache2.seed(base, 1) is None
+    cache2.commit_through(0)
+    assert len(cache2) == 4
+    cache2.commit_through(5)
+    assert len(cache2) == 8
+    # nonfinite kth distances (padded/failed rows) are skipped
+    cache3 = BsfCache()
+    cache3.update(base[:4], np.array([1.0, np.inf, np.nan, 2.0]), k=1)
+    assert len(cache3) == 2
+    cache3.reset()
+    assert len(cache3) == 0 and cache3.seed(base, 1) is None
+
+
+# ---------------------------------------------------------------------------
+# pipelined serving: overlapped dispatch vs the serial loop (bitwise)
+# ---------------------------------------------------------------------------
+
+
+def _serve_mode(lfi, trace, *, pipeline, warm):
+    session = ServingSession(lfi, strategy="compact", warm_start=warm)
+    session.warmup(max_batch=8, ks=(1,),
+                   queries=np.stack([r.query for r in trace[:8]]))
+    report = session.serve(
+        trace, batcher=MicroBatcher(max_batch=8, max_wait=0.004),
+        service_time=lambda b: 1e-3 * max(b.bucket / 8, 0.25),
+        pipeline=pipeline)
+    return session, report
+
+
+@pytest.mark.parametrize("warm", [False, True])
+def test_pipelined_serve_matches_serial_bitwise(lfi, mixed_queries, warm):
+    """The tentpole determinism pin: pipelined serving (overlapped dispatch,
+    1 batch in flight) produces the identical batch sequence, completion
+    times, and bitwise-identical per-request results as the serial loop —
+    including with cross-batch bsf warm-starting (the staged-commit rule
+    makes both modes observe identical cache states)."""
+    q, _ = mixed_queries
+    trace = poisson_trace(q, rate=900.0, n_requests=64,
+                          targets=(0.8, 0.95), ks=(1,), seed=9)
+    s0, r0 = _serve_mode(lfi, trace, pipeline=0, warm=warm)
+    s1, r1 = _serve_mode(lfi, trace, pipeline=1, warm=warm)
+    host_keys = ("wall", "dispatch_s", "harvest_s", "t_disp", "t_done")
+    strip = lambda log: [{k: v for k, v in b.items() if k not in host_keys}
+                         for b in log]
+    assert strip(r0["batches"]) == strip(r1["batches"])
+    for rid in r0["completions"]:
+        c0, c1 = r0["completions"][rid], r1["completions"][rid]
+        assert c0["latency"] == c1["latency"], rid
+        assert c0["result"] == c1["result"], rid      # bitwise (==, no tol)
+    # pipelined logs carry the overlap accounting
+    assert all(b["harvest_s"] is not None for b in r1["batches"])
+    assert all(b["t_done"] >= b["t_disp"] for b in r1["batches"])
+
+
+def test_warm_start_serving_preserves_recall(lfi, mixed_queries):
+    q, _ = mixed_queries
+    trace = poisson_trace(q, rate=900.0, n_requests=48, targets=(0.95,),
+                          ks=(1,), seed=4)
+    cold = ServingSession(lfi, strategy="compact", warm_start=False)
+    warm = ServingSession(lfi, strategy="compact", warm_start=True)
+    exact = cold.search_exact(np.stack([r.query for r in trace]))
+    oracle = {r.rid: float(exact.dists[i, 0]) for i, r in enumerate(trace)}
+    reps = {}
+    for name, s in (("cold", cold), ("warm", warm)):
+        s.warmup(max_batch=8, ks=(1,), queries=q)
+        reps[name] = s.serve(
+            trace, batcher=MicroBatcher(max_batch=8, max_wait=0.004),
+            recall_oracle=oracle,
+            service_time=lambda b: 1e-3)
+    rc = reps["cold"]["recall_by_target"][0.95]["recall"]
+    rw = reps["warm"]["recall_by_target"][0.95]["recall"]
+    assert rw >= rc - 0.05
+    # warm bounds are prune-only: distances never undercut the oracle
+    for rid, c in reps["warm"]["completions"].items():
+        assert c["result"]["dist"] >= oracle[rid] - 1e-4
+
+
+def test_phase_telemetry_lands_in_summary(lfi, mixed_queries):
+    q, _ = mixed_queries
+    assert "phases" not in Telemetry().summary()         # empty: no key
+    trace = poisson_trace(q, rate=900.0, n_requests=24, targets=(0.9,),
+                          ks=(1,), seed=6)
+    session, _ = _serve_mode(lfi, trace, pipeline=1, warm=True)
+    summ = session.telemetry.summary()
+    phases = summ["phases"]
+    assert set(phases) == {"queue_wait", "form", "execute"}
+    for ph in phases.values():
+        assert np.isfinite(ph["p50"]) and ph["p50"] <= ph["p99"]
+    # queue waits are per-request (virtual clock), phases per batch
+    assert len(session.telemetry.queue_wait) == 24
+    assert len(session.telemetry.form_s) == len(session.telemetry.exec_s)
+
+
+def test_run_trace_pipelined_requires_service_model():
+    from repro.serving import run_trace_pipelined
+    trace = _toy_trace(rate=500.0, n=8, ks=(1,))
+    with pytest.raises(ValueError, match="service_time"):
+        run_trace_pipelined(trace, MicroBatcher(), lambda b: b,
+                            lambda h: None, service_time=None)
+    with pytest.raises(ValueError, match="max_in_flight"):
+        run_trace_pipelined(trace, MicroBatcher(), lambda b: b,
+                            lambda h: None, service_time=lambda b: 1e-3,
+                            max_in_flight=0)
