@@ -4,12 +4,21 @@
 # in sync.  The suite must collect and pass on a bare runtime image (no
 # requirements-dev.txt extras) — tests/_hypothesis_compat.py guarantees the
 # property tests degrade rather than break collection.
+#
+# `make check` = lint + tests, the full local gate.  `make lint` runs both
+# halves of the static gate: ruff (style, skipped when not installed) and
+# the stdlib-only invariant linter (`python -m repro.analysis.lint`, rules
+# LF001–LF005 — see README "Static analysis & sanitizers"), which always
+# runs and always gates.
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast lint bench bench-engine bench-build bench-dist \
-	bench-serve bench-serve-quick bench-filters dev-deps
+.PHONY: check test test-fast lint lint-invariants bench bench-engine \
+	bench-build bench-dist bench-serve bench-serve-quick bench-filters \
+	dev-deps
+
+check: test
 
 test: lint
 	python -m pytest -x -q
@@ -19,13 +28,17 @@ test-fast:
 
 # ruff is a dev extra (requirements-dev.txt); the bare runtime image must
 # still pass `make test`, so a missing ruff degrades to a notice, not a
-# failure.  Config: ruff.toml.
-lint:
+# failure.  Config: ruff.toml.  The invariant linter is stdlib-only and
+# never skips.
+lint: lint-invariants
 	@if command -v ruff >/dev/null 2>&1; then \
 		ruff check src benchmarks tests examples; \
 	else \
 		echo "lint: ruff not installed (make dev-deps); skipping"; \
 	fi
+
+lint-invariants:
+	python -m repro.analysis.lint src
 
 bench:
 	python -m benchmarks.run --quick

@@ -1,0 +1,22 @@
+"""AST-based invariant linter for the LeaFi reproduction.
+
+Rules (see each module's docstring for the rationale):
+
+======  ==================================================================
+LF000   pragma hygiene — every ``# leafi: ignore[...]`` carries a reason
+LF001   dynamic-shape / host-sync ops inside jit/shard_map-reachable code
+LF002   every public ``kernels/*/ops.py`` export has a parity test
+LF003   no reads after ``donate_argnums``/``donate=`` buffer donation
+LF004   recompile hazards at jitted call sites (unhashable / loop-varying
+        static args)
+LF005   every ``benchmarks/run.py`` suite has its JSON artifact + Makefile
+        target
+======  ==================================================================
+
+CLI: ``python -m repro.analysis.lint [paths] [--root DIR] [--format
+human|json] [--rules LF001,...] [--list-rules]``.  Exit 0 clean, 1
+findings, 2 linter failure.
+"""
+from .framework import (Finding, LintReport, RULES, render,  # noqa: F401
+                        run_lint)
+from . import rules_flow, rules_jit, rules_repo  # noqa: F401  (register rules)

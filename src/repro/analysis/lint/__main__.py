@@ -1,0 +1,41 @@
+"""CLI entry point: ``python -m repro.analysis.lint [paths] ...``."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import RULES, render, run_lint
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="LeaFi invariant linter (exit 0 clean, 1 findings, "
+                    "2 linter failure)")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--root", default=".",
+                        help="repo root for cross-file contracts "
+                             "(tests/, benchmarks/, Makefile); default: .")
+    parser.add_argument("--format", choices=("human", "json"),
+                        default="human")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule ids (default: all)")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            print(f"{rid}  {RULES[rid].title}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip().upper() for r in args.rules.split(",") if r.strip()]
+    report = run_lint(args.paths or ["src"], root=args.root, rules=rules)
+    print(render(report, args.format))
+    return report.exit_code()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,299 @@
+"""Invariant-linter core: findings, rule registry, pragmas, runner, output.
+
+The linter is a custom AST pass over this repo's load-bearing conventions
+(static shapes under jit/shard_map, parity-oracle coverage, donation safety,
+program-cache discipline, benchmark-claim hygiene) — the ROADMAP's
+"Conventions" section as machine-checked gates instead of prose.  It is
+stdlib-only (``ast`` + ``tokenize``): linting never imports jax or the code
+under analysis, so it runs identically on bare runtime images.
+
+Vocabulary:
+
+* **Rule** — a registered check with a stable id (``LF001``…).  Every rule
+  sees the whole parsed corpus (:class:`LintContext`) so cross-file rules
+  are not special-cased.
+* **Finding** — one violation: ``(rule, path, line, message)``.
+* **Pragma** — ``# leafi: ignore[LF001]: reason`` suppresses that rule's
+  findings on the same line (or on the line directly below a comment-only
+  pragma line).  The reason is mandatory: a reasonless or malformed pragma
+  is itself reported under the reserved id ``LF000`` and suppresses nothing.
+
+Exit-code contract (:meth:`LintReport.exit_code`): 0 = clean, 1 = findings,
+2 = the linter itself could not run (unreadable/unparseable target, unknown
+rule selection).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+PRAGMA_ID = "LF000"
+_PRAGMA_RE = re.compile(
+    r"leafi:\s*ignore\s*\[(?P<rules>[^\]]*)\]\s*(?::\s*(?P<reason>.*\S))?\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str              # repo-root-relative, forward slashes
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+@dataclasses.dataclass(frozen=True)
+class Pragma:
+    line: int
+    rules: tuple                   # rule ids, upper-cased
+    reason: str
+    comment_only: bool             # the line holds nothing but the comment
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file plus its pragma table."""
+    path: str                      # absolute
+    rel: str                       # repo-root-relative, forward slashes
+    dotted: str                    # best-effort dotted module name
+    source: str
+    tree: ast.Module
+    pragmas: Dict[int, Pragma]
+
+
+@dataclasses.dataclass
+class LintContext:
+    root: str                      # absolute repo root
+    modules: List[Module]
+    by_dotted: Dict[str, Module]
+
+    def read_extra(self, rel: str) -> Optional[Module]:
+        """Parse a repo file outside the linted path set (cross-file rules).
+
+        Returns None when the file does not exist; raises nothing — a
+        syntactically broken extra file comes back as None too (the rule
+        decides what absence means).
+        """
+        path = os.path.join(self.root, rel)
+        if not os.path.isfile(path):
+            return None
+        try:
+            return _load_module(path, self.root)
+        except SyntaxError:
+            return None
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    doc: str
+    fn: Callable[[LintContext], Iterable[Finding]]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, title: str):
+    """Register a rule: the decorated fn maps a LintContext to findings."""
+    def deco(fn):
+        RULES[rule_id] = Rule(rule_id, title, (fn.__doc__ or "").strip(), fn)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# source loading + pragmas
+# ---------------------------------------------------------------------------
+
+
+def _parse_pragmas(source: str) -> Dict[int, Pragma]:
+    pragmas: Dict[int, Pragma] = {}
+    lines = source.splitlines()
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except tokenize.TokenError:          # ast.parse already succeeded; rare
+        return pragmas
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _PRAGMA_RE.search(tok.string)
+        if m is None:
+            continue
+        line = tok.start[0]
+        ids = tuple(r.strip().upper() for r in m.group("rules").split(",")
+                    if r.strip())
+        reason = (m.group("reason") or "").strip()
+        text = lines[line - 1] if line <= len(lines) else ""
+        comment_only = text.strip().startswith("#")
+        pragmas[line] = Pragma(line, ids, reason, comment_only)
+    return pragmas
+
+
+def _dotted_name(rel: str) -> str:
+    parts = rel.replace(os.sep, "/").split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _load_module(path: str, root: str) -> Module:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    tree = ast.parse(source, filename=rel)
+    return Module(path=path, rel=rel, dotted=_dotted_name(rel),
+                  source=source, tree=tree, pragmas=_parse_pragmas(source))
+
+
+def _collect_files(paths: Sequence[str], root: str) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap):
+            out.append(ap)
+            continue
+        for dirpath, dirnames, filenames in os.walk(ap):
+            dirnames[:] = [d for d in dirnames
+                           if not d.startswith(".") and d != "__pycache__"]
+            out.extend(os.path.join(dirpath, f)
+                       for f in sorted(filenames) if f.endswith(".py"))
+    return sorted(set(out))
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LintReport:
+    findings: List[Finding]               # active (unsuppressed)
+    suppressed: List[dict]                # {finding, reason}
+    errors: List[str]                     # linter-level failures → exit 2
+    files: int
+    rules: List[str]
+
+    def exit_code(self) -> int:
+        if self.errors:
+            return 2
+        return 1 if self.findings else 0
+
+    def to_json(self) -> dict:
+        return {
+            "files": self.files,
+            "rules": self.rules,
+            "findings": [f.to_json() for f in self.findings],
+            "suppressed": [{**s["finding"].to_json(), "reason": s["reason"]}
+                           for s in self.suppressed],
+            "errors": self.errors,
+            "exit_code": self.exit_code(),
+        }
+
+    def render_human(self) -> str:
+        out = [f.render() for f in self.findings]
+        for err in self.errors:
+            out.append(f"error: {err}")
+        n, s = len(self.findings), len(self.suppressed)
+        out.append(f"invariant lint: {self.files} files, "
+                   f"{len(self.rules)} rules, {n} finding(s)"
+                   + (f", {s} suppressed" if s else ""))
+        return "\n".join(out)
+
+
+def _suppression_for(mod: Module, finding: Finding) -> Optional[Pragma]:
+    """The pragma covering this finding, if any (same line, or the
+    comment-only pragma line directly above)."""
+    for line in (finding.line, finding.line - 1):
+        p = mod.pragmas.get(line)
+        if p is None:
+            continue
+        if line == finding.line - 1 and not p.comment_only:
+            continue
+        if finding.rule in p.rules:
+            return p
+    return None
+
+
+def run_lint(paths: Sequence[str], root: Optional[str] = None,
+             rules: Optional[Sequence[str]] = None) -> LintReport:
+    """Lint ``paths`` (files or directories) against the registered rules.
+
+    ``root`` anchors repo-relative lookups for cross-file rules (Makefile,
+    tests/, benchmarks/, experiments/); defaults to the current directory.
+    ``rules`` restricts to a subset of rule ids (default: all registered).
+    """
+    root = os.path.abspath(root or ".")
+    selected = sorted(RULES) if rules is None else list(rules)
+    errors: List[str] = []
+    for r in selected:
+        if r not in RULES:
+            errors.append(f"unknown rule id {r!r} "
+                          f"(known: {', '.join(sorted(RULES))})")
+    if errors:
+        return LintReport([], [], errors, 0, selected)
+
+    modules: List[Module] = []
+    for path in _collect_files(paths, root):
+        try:
+            modules.append(_load_module(path, root))
+        except (OSError, SyntaxError) as e:
+            errors.append(f"cannot parse {path}: {e}")
+    if errors:
+        return LintReport([], [], errors, len(modules), selected)
+
+    ctx = LintContext(root=root, modules=modules,
+                      by_dotted={m.dotted: m for m in modules})
+    by_rel = {m.rel: m for m in modules}
+
+    raw: List[Finding] = []
+    for rid in selected:
+        raw.extend(RULES[rid].fn(ctx))
+
+    active: List[Finding] = []
+    suppressed: List[dict] = []
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.rule)):
+        mod = by_rel.get(f.path)
+        pragma = _suppression_for(mod, f) if mod is not None else None
+        if pragma is not None and pragma.reason:
+            suppressed.append({"finding": f, "reason": pragma.reason})
+        else:
+            active.append(f)
+
+    # pragma hygiene (LF000, never suppressible): mandatory reason, known ids
+    for mod in modules:
+        for p in mod.pragmas.values():
+            if not p.reason:
+                active.append(Finding(
+                    PRAGMA_ID, mod.rel, p.line,
+                    "ignore pragma without a reason — write "
+                    "'# leafi: ignore[RULE]: why this is safe'"))
+            for rid in p.rules:
+                if rid not in RULES:
+                    active.append(Finding(
+                        PRAGMA_ID, mod.rel, p.line,
+                        f"ignore pragma names unknown rule {rid!r}"))
+
+    active.sort(key=lambda f: (f.path, f.line, f.rule))
+    return LintReport(active, suppressed, errors, len(modules), selected)
+
+
+def render(report: LintReport, fmt: str = "human") -> str:
+    if fmt == "json":
+        return json.dumps(report.to_json(), indent=1)
+    return report.render_human()

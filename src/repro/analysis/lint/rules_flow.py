@@ -1,0 +1,210 @@
+"""Dataflow rule: LF003 — no reads after buffer donation.
+
+``donate_argnums`` tells XLA it may alias an input buffer into the output;
+reading the donated array afterwards returns garbage (or raises, backend-
+dependent) — precisely the aliasing bug the pipelined serving path had to
+design around (at most one in-flight batch per program, see
+``serving/session.py``).  The rule tracks, per function scope:
+
+* which local callables are *donating* — assigned from a call that carries
+  ``donate_argnums=``/``donate_argnames=``, a ``donate=`` flag, or a
+  ``**kw`` whose name mentions donation (the ``jax.jit(run_pq,
+  **donate_kw)`` idiom), including tuple-unpacked and ``self.x`` targets
+  and decorator form ``@partial(jax.jit, donate_argnums=...)``;
+* which variable names were passed in a donated position at a call of such
+  a callable;
+* any later ``Load`` of those names in the same scope (rebinding clears the
+  taint; reads lexically inside the donating call itself are fine — args
+  are consumed before the call donates).
+
+Scope-local on purpose: cross-function escape analysis would drown the
+signal in false positives.  Nested ``def`` bodies are separate scopes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .framework import Finding, LintContext, Module, rule
+from .rules_jit import _last_attr
+
+
+def _donated_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Donated positional indices if this call creates a donating callable.
+
+    () means "donating, positions unknown" (donate every positional arg);
+    None means not a donation site at all.
+    """
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            val = kw.value
+            elts = val.elts if isinstance(val, (ast.Tuple, ast.List)) else [val]
+            nums = tuple(e.value for e in elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, int))
+            return nums or ()
+        if kw.arg == "donate":
+            if isinstance(kw.value, ast.Constant) and kw.value.value is False:
+                return None
+            return ()
+        if kw.arg is None and isinstance(kw.value, ast.Name) \
+                and "donate" in kw.value.id.lower():
+            return ()                      # jax.jit(f, **donate_kw)
+    return None
+
+
+def _target_names(target: ast.AST) -> Iterable[str]:
+    """Bindable names in an assignment target: x, self.x, (a, b) unpack."""
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, ast.Attribute) and \
+            isinstance(target.value, ast.Name) and target.value.id == "self":
+        yield f"self.{target.attr}"
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _target_names(elt)
+
+
+def _callee_key(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute) and \
+            isinstance(func.value, ast.Name) and func.value.id == "self":
+        return f"self.{func.attr}"
+    return None
+
+
+class _Scope:
+    """Linear walk of one function body in source order."""
+
+    def __init__(self, mod: Module,
+                 donating: Dict[str, Tuple[int, ...]]):
+        self.mod = mod
+        self.donating = donating
+        # name -> (donation position, callee) of the pending donation
+        self.tainted: Dict[str, Tuple[Tuple[int, int], str]] = {}
+        self.findings: List[Finding] = []
+
+    def run(self, body: List[ast.stmt]) -> List[Finding]:
+        for stmt in body:
+            self._stmt(stmt)
+        return self.findings
+
+    def _stmt(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                         # separate scope
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            # evaluation order: RHS first (a donating call taints its
+            # args), then the binding clears taint — so the
+            # `x, y = step(x, y)` rebind idiom stays clean.
+            if node.value is not None:
+                for expr in _exprs_in_order(node.value, as_root=True):
+                    self._expr(expr)
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for tgt in targets:
+                for expr in _exprs_in_order(tgt, as_root=True):
+                    self._expr(expr)
+            return
+        for expr in _exprs_in_order(node):
+            self._expr(expr)
+        for block in ("body", "orelse", "finalbody"):
+            for child in getattr(node, block, []) or []:
+                if isinstance(child, ast.stmt):
+                    self._stmt(child)
+        for h in getattr(node, "handlers", []) or []:
+            for child in h.body:
+                self._stmt(child)
+
+    def _expr(self, node: ast.AST) -> None:
+        pos = (node.lineno, node.col_offset)
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Load):
+                hit = self.tainted.get(node.id)
+                if hit is not None and pos > hit[0]:
+                    self.findings.append(Finding(
+                        "LF003", self.mod.rel, node.lineno,
+                        f"`{node.id}` is read after being donated to "
+                        f"`{hit[1]}` — the buffer may already be aliased "
+                        "into the output; recompute or copy before donating"))
+            elif isinstance(node.ctx, ast.Store):
+                self.tainted.pop(node.id, None)
+        elif isinstance(node, ast.Call):
+            key = _callee_key(node.func)
+            if key is not None and key in self.donating:
+                positions = self.donating[key]
+                end = (getattr(node, "end_lineno", node.lineno),
+                       getattr(node, "end_col_offset", node.col_offset))
+                for i, arg in enumerate(node.args):
+                    if positions and i not in positions:
+                        continue
+                    if isinstance(arg, ast.Name):
+                        self.tainted[arg.id] = (end, key)
+
+
+def _exprs_in_order(stmt: ast.AST, as_root: bool = False) -> List[ast.AST]:
+    """All expression nodes of a statement (not nested stmts/defs), in
+    (line, col) order so donation/read/rebind events sequence correctly.
+    With ``as_root`` the node itself is an expression and is included."""
+    out: List[ast.AST] = []
+    stack: List[ast.AST] = []
+    if as_root:
+        stack.append(stmt)
+    else:
+        for child in ast.iter_child_nodes(stmt):
+            if not isinstance(child, (ast.stmt, ast.excepthandler)):
+                stack.append(child)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if hasattr(node, "lineno"):
+            out.append(node)
+        stack.extend(c for c in ast.iter_child_nodes(node)
+                     if not isinstance(c, ast.stmt))
+    out.sort(key=lambda n: (n.lineno, n.col_offset))
+    return out
+
+
+def _collect_donating(mod: Module) -> Dict[str, Tuple[int, ...]]:
+    """Module-wide table of donating callables (incl. self.x methods —
+    an __init__-created jitted runner is invoked from other methods)."""
+    table: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            positions = _donated_positions(node.value)
+            if positions is None:
+                continue
+            for tgt in node.targets:
+                names = list(_target_names(tgt))
+                for name in names:
+                    if name == "_":
+                        continue
+                    # tuple unpack: which element is the callable is unknown
+                    # — taint all bound names; non-callables are never
+                    # invoked, so they add no findings.
+                    table[name] = positions if len(names) == 1 else ()
+        elif isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    positions = _donated_positions(dec)
+                    if positions is not None and \
+                            _last_attr(dec.func) in ("jit", "partial", "pmap"):
+                        table[node.name] = positions
+    return table
+
+
+@rule("LF003", "no reads after buffer donation")
+def lf003(ctx: LintContext) -> Iterable[Finding]:
+    """A value handed to a ``donate_argnums``/``donate=`` callable must not
+    be read afterwards in the same scope — XLA may have reused its buffer
+    for the output."""
+    for mod in ctx.modules:
+        donating = _collect_donating(mod)
+        if not donating:
+            continue
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from _Scope(mod, donating).run(node.body)

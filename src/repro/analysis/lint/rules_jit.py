@@ -1,0 +1,498 @@
+"""Trace-context rules: LF001 (dynamic shapes under jit) and LF004
+(recompile hazards at jitted call sites).
+
+Both rules share a :class:`JitIndex` — a conservative over-approximation of
+"which functions does XLA trace".  Roots are functions that are (a)
+jit/pmap-decorated (including ``functools.partial(jax.jit, ...)``), (b)
+passed by name into a tracing higher-order call (``jax.jit(f)``,
+``shard_map(f, ...)``, ``lax.scan(f, ...)``, ...), or (c) contain a
+collective (``lax.pmin``/``psum``/``axis_index`` are only legal inside
+``shard_map``/``pmap`` bodies, so containing one *proves* the function is a
+mapped body even when it is built indirectly, e.g. returned from a factory).
+Reachability then follows name references — calls *and* bare mentions, so
+``vmap(probe)`` and ``lax.cond(p, f, g, x)`` create edges — across modules
+via import-alias resolution, with a bare-name fallback into nested scopes
+(factory-made closures like ``_make_shard_body.search_fn`` resolve even
+though they are not importable names).
+
+Over-approximation is the right failure mode for a linter: an unreachable
+function misflagged costs one pragma; a reachable one missed costs a silent
+``ConcretizationTypeError`` (or worse, a host sync) in production.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .framework import Finding, LintContext, Module, rule
+
+# Callables whose function-valued arguments get traced by XLA.
+_TRACING_HOFS = {
+    "jit", "pmap", "vmap", "grad", "value_and_grad", "shard_map", "xmap",
+    "scan", "while_loop", "fori_loop", "cond", "switch", "associated_scan",
+    "associative_scan", "checkify", "custom_jvp", "custom_vjp", "remat",
+    "checkpoint",
+}
+# Ops only legal inside a mapped (shard_map/pmap) body.
+_COLLECTIVES = {
+    "psum", "pmin", "pmax", "pmean", "ppermute", "all_gather", "all_to_all",
+    "axis_index", "psum_scatter", "pshuffle",
+}
+# Array-producing calls with data-dependent output shape.
+_DYNAMIC_SHAPE_FNS = {"nonzero", "unique", "argwhere", "flatnonzero",
+                      "extract", "compress"}
+# Attribute accesses that yield static Python values even on tracers.
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize"}
+
+
+def _last_attr(node: ast.AST) -> Optional[str]:
+    """Rightmost name of a Name/Attribute chain (``jax.lax.scan`` → scan)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+class _FuncInfo:
+    __slots__ = ("node", "qual", "module", "is_root", "uses_jnp", "refs",
+                 "attr_refs", "children")
+
+    def __init__(self, node: ast.AST, qual: str, module: Module):
+        self.node = node
+        self.qual = qual
+        self.module = module
+        self.is_root = False
+        self.uses_jnp = False
+        self.refs: Set[str] = set()              # bare names mentioned
+        self.attr_refs: Set[Tuple[str, str]] = set()   # (alias, name)
+        self.children: List[str] = []            # nested defs' quals
+
+
+class JitIndex:
+    """Cross-module map of functions, jit roots, and reference edges."""
+
+    def __init__(self, ctx: LintContext):
+        self.ctx = ctx
+        # (module_rel, qualname) -> _FuncInfo
+        self.funcs: Dict[Tuple[str, str], _FuncInfo] = {}
+        # module_rel -> {alias -> dotted module it refers to}
+        self.aliases: Dict[str, Dict[str, str]] = {}
+        # module_rel -> {bare function name -> [quals]} (any nesting depth)
+        self.by_name: Dict[str, Dict[str, List[str]]] = {}
+        for mod in ctx.modules:
+            self._index_module(mod)
+        self._mark_hof_roots()
+        self.reachable = self._bfs()
+
+    # -- indexing -----------------------------------------------------------
+
+    def _index_module(self, mod: Module) -> None:
+        self.aliases[mod.rel] = _import_aliases(mod)
+        names: Dict[str, List[str]] = {}
+        self.by_name[mod.rel] = names
+
+        def walk_scope(body, prefix: str, parent: Optional[_FuncInfo]):
+            for node in body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{prefix}{node.name}"
+                    info = _FuncInfo(node, qual, mod)
+                    info.is_root = _is_jit_decorated(node)
+                    _scan_body(node, info)
+                    self.funcs[(mod.rel, qual)] = info
+                    names.setdefault(node.name, []).append(qual)
+                    if parent is not None:
+                        parent.children.append(qual)
+                    walk_scope(node.body, qual + ".", info)
+                elif isinstance(node, ast.ClassDef):
+                    walk_scope(node.body, f"{prefix}{node.name}.", parent)
+                elif hasattr(node, "body") and not isinstance(node, ast.Lambda):
+                    inner = getattr(node, "body", [])
+                    if isinstance(inner, list):
+                        walk_scope(inner, prefix, parent)
+                    for extra in ("orelse", "finalbody"):
+                        eb = getattr(node, extra, None)
+                        if isinstance(eb, list):
+                            walk_scope(eb, prefix, parent)
+                    for h in getattr(node, "handlers", []) or []:
+                        walk_scope(h.body, prefix, parent)
+
+        walk_scope(mod.tree.body, "", None)
+
+    def _mark_hof_roots(self) -> None:
+        """Functions handed by name to a tracing HOF become roots."""
+        for mod in self.ctx.modules:
+            names = self.by_name[mod.rel]
+            for call in ast.walk(mod.tree):
+                if not isinstance(call, ast.Call):
+                    continue
+                head = _last_attr(call.func)
+                if head == "partial":
+                    # functools.partial(jax.jit, ...) → treat like jit(...)
+                    if call.args and _last_attr(call.args[0]) in _TRACING_HOFS:
+                        call_args = call.args[1:]
+                    else:
+                        continue
+                elif head in _TRACING_HOFS:
+                    call_args = list(call.args)
+                else:
+                    continue
+                cands = call_args + [kw.value for kw in call.keywords]
+                for arg in cands:
+                    if isinstance(arg, ast.Name) and arg.id in names:
+                        for qual in names[arg.id]:
+                            self.funcs[(mod.rel, qual)].is_root = True
+
+    def _bfs(self) -> Set[Tuple[str, str]]:
+        seen: Set[Tuple[str, str]] = set()
+        frontier = [k for k, f in self.funcs.items() if f.is_root]
+        while frontier:
+            key = frontier.pop()
+            if key in seen or key not in self.funcs:
+                continue
+            seen.add(key)
+            info = self.funcs[key]
+            frontier.extend((key[0], c) for c in info.children)
+            frontier.extend(self._resolve_edges(info))
+        return seen
+
+    def _resolve_edges(self, info: _FuncInfo):
+        mod_rel = info.module.rel
+        names = self.by_name[mod_rel]
+        for name in info.refs:
+            for qual in names.get(name, ()):          # bare-name fallback:
+                yield (mod_rel, qual)                 # any nesting depth
+        for alias, name in info.attr_refs:
+            target = self.aliases[mod_rel].get(alias)
+            if target is None:
+                continue
+            tmod = self.ctx.by_dotted.get(target)
+            if tmod is None:
+                continue
+            for qual in self.by_name.get(tmod.rel, {}).get(name, ()):
+                if "." not in qual:                   # only top-level names
+                    yield (tmod.rel, qual)
+
+
+def _import_aliases(mod: Module) -> Dict[str, str]:
+    """alias -> dotted module, resolving relative imports against mod.dotted."""
+    out: Dict[str, str] = {}
+    pkg_parts = mod.dotted.split(".")[:-1]            # containing package
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = pkg_parts[: len(pkg_parts) - (node.level - 1)]
+                prefix = ".".join(base + ([node.module] if node.module else []))
+            else:
+                prefix = node.module or ""
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = (f"{prefix}.{a.name}"
+                                           if prefix else a.name)
+    return out
+
+
+def _is_jit_decorated(node) -> bool:
+    for dec in node.decorator_list:
+        if _last_attr(dec) in ("jit", "pmap"):
+            return True
+        if isinstance(dec, ast.Call):
+            head = _last_attr(dec.func)
+            if head in ("jit", "pmap"):
+                return True
+            if head == "partial" and dec.args and \
+                    _last_attr(dec.args[0]) in ("jit", "pmap"):
+                return True
+    return False
+
+
+def _scan_body(fn_node, info: _FuncInfo) -> None:
+    """Collect reference edges + jnp usage from a function's own statements
+    (nested defs are indexed separately; their refs stay their own)."""
+    for node in _own_nodes(fn_node):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            info.refs.add(node.id)
+            if node.id in ("jnp", "jax", "lax"):
+                info.uses_jnp = True
+        elif isinstance(node, ast.Attribute):
+            if isinstance(node.value, ast.Name):
+                info.attr_refs.add((node.value.id, node.attr))
+        elif isinstance(node, ast.Call):
+            if _last_attr(node.func) in _COLLECTIVES:
+                info.is_root = True
+
+
+def _own_nodes(fn_node) -> Iterable[ast.AST]:
+    """All AST nodes of a function excluding nested function bodies."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn_node))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# ---------------------------------------------------------------------------
+# LF001 — dynamic-shape / host-sync ops inside traced code
+# ---------------------------------------------------------------------------
+
+
+def _has_nonstatic_name(node: ast.AST, static: Set[str] = frozenset()) -> bool:
+    """True when the expression mentions a value that could be a tracer —
+    i.e. it is not built purely from constants, shapes, lens, dtypes, and
+    names already known static (``static``)."""
+    if isinstance(node, ast.Constant):
+        return False
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False
+        return _has_nonstatic_name(node.value, static)
+    if isinstance(node, ast.Call):
+        head = _last_attr(node.func)
+        if head in ("len", "bit_length"):
+            return False
+        if head in ("range", "enumerate", "min", "max", "abs", "round",
+                    "int", "float", "bool"):
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            return any(_has_nonstatic_name(a, static) for a in args)
+        return True                    # unknown call: may return an array
+    if isinstance(node, ast.Name):
+        return node.id not in static
+    return any(_has_nonstatic_name(c, static)
+               for c in ast.iter_child_nodes(node))
+
+
+_SCALAR_ANNOTATIONS = {"int", "float", "bool", "str"}
+
+
+def _static_locals(fn_node) -> Set[str]:
+    """Names provably static inside this function: parameters annotated
+    with a Python scalar type, plus locals assigned from static-only
+    expressions (a single forward pass in source order — shape-derived
+    chains like ``dh = x.shape[-1]; d = int(dh * f)`` resolve)."""
+    static: Set[str] = set()
+    a = fn_node.args
+    for p in a.posonlyargs + a.args + a.kwonlyargs:
+        ann = p.annotation
+        if isinstance(ann, ast.Name) and ann.id in _SCALAR_ANNOTATIONS:
+            static.add(p.arg)
+    stmts = sorted((n for n in _own_nodes(fn_node)
+                    if isinstance(n, (ast.Assign, ast.AugAssign))),
+                   key=lambda n: (n.lineno, n.col_offset))
+    for node in stmts:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if _has_nonstatic_name(node.value, static):
+                static.discard(name)
+            else:
+                static.add(name)
+        elif isinstance(node, ast.AugAssign) and \
+                isinstance(node.target, ast.Name):
+            if _has_nonstatic_name(node.value, static):
+                static.discard(node.target.id)
+    return static
+
+
+def _is_boolean_mask(expr: ast.AST) -> bool:
+    if isinstance(expr, ast.Compare):
+        return True
+    if isinstance(expr, ast.BoolOp):
+        return True
+    if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, (ast.Invert,
+                                                              ast.Not)):
+        return _is_boolean_mask(expr.operand)
+    return False
+
+
+@rule("LF001", "dynamic-shape / host-sync ops inside jit-traced code")
+def lf001(ctx: LintContext) -> Iterable[Finding]:
+    """Data-dependent shapes (``jnp.nonzero``/``unique``/boolean-mask
+    indexing) and host syncs (``.item()``, ``int()``/``float()`` on a likely
+    tracer) break tracing — or worse, silently sync — inside any function XLA
+    traces.  The engine's whole design (padded slabs, fixed-capacity survivor
+    buffers, sentinel rows) exists to avoid these; this rule keeps them out."""
+    index = JitIndex(ctx)
+    for key in sorted(index.reachable):
+        info = index.funcs[key]
+        mod = info.module
+        static = _static_locals(info.node)
+        for node in _own_nodes(info.node):
+            if isinstance(node, ast.Call):
+                head = _last_attr(node.func)
+                if head in _DYNAMIC_SHAPE_FNS:
+                    yield Finding(
+                        "LF001", mod.rel, node.lineno,
+                        f"`{head}` has a data-dependent output shape; "
+                        f"inside jit-reachable `{info.qual}` use a masked "
+                        "fixed-capacity formulation instead")
+                elif head == "where" and len(node.args) == 1:
+                    yield Finding(
+                        "LF001", mod.rel, node.lineno,
+                        "single-argument `where` has a data-dependent "
+                        f"output shape inside jit-reachable `{info.qual}`; "
+                        "use the three-argument select form")
+                elif head in ("item", "tolist") and not node.args:
+                    yield Finding(
+                        "LF001", mod.rel, node.lineno,
+                        f"`.{head}()` forces a host sync inside "
+                        f"jit-reachable `{info.qual}`")
+                elif (isinstance(node.func, ast.Name)
+                      and node.func.id in ("int", "float", "bool")
+                      and info.uses_jnp and len(node.args) == 1
+                      and _has_nonstatic_name(node.args[0], static)):
+                    yield Finding(
+                        "LF001", mod.rel, node.lineno,
+                        f"`{node.func.id}(...)` on a possibly-traced value "
+                        f"inside jit-reachable `{info.qual}` concretizes the "
+                        "tracer (shape/len/dtype-derived values are exempt)")
+            elif isinstance(node, ast.Subscript):
+                if _is_boolean_mask(node.slice):
+                    yield Finding(
+                        "LF001", mod.rel, node.lineno,
+                        "boolean-mask indexing has a data-dependent output "
+                        f"shape inside jit-reachable `{info.qual}`; use "
+                        "`jnp.where(mask, x, fill)` or a masked reduction")
+
+
+# ---------------------------------------------------------------------------
+# LF004 — recompile hazards at jitted call sites
+# ---------------------------------------------------------------------------
+
+
+def _jit_static_params(mod: Module) -> Dict[str, Tuple[Tuple[str, ...],
+                                                       Tuple[str, ...]]]:
+    """name -> (static_argnames, positional params of the jitted def).
+
+    Covers ``@partial(jax.jit, static_argnames=...)`` decorators and
+    ``g = jax.jit(f, static_argnames=...)`` assignments within the module.
+    """
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, node)
+
+    def statics_from_call(call: ast.Call) -> Optional[Tuple[str, ...]]:
+        for kw in call.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                names: List[str] = []
+                vals = kw.value.elts if isinstance(
+                    kw.value, (ast.Tuple, ast.List)) else [kw.value]
+                for v in vals:
+                    if isinstance(v, ast.Constant):
+                        names.append(str(v.value))
+                return tuple(names)
+        return ()
+
+    out: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {}
+
+    def params_of(fn: ast.FunctionDef) -> Tuple[str, ...]:
+        a = fn.args
+        return tuple(p.arg for p in a.posonlyargs + a.args)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call) and \
+                        _last_attr(dec.func) == "partial" and dec.args and \
+                        _last_attr(dec.args[0]) == "jit":
+                    st = statics_from_call(dec)
+                    # static_argnums → map to names via the def
+                    named = _nums_to_names(st, dec, node)
+                    out[node.name] = (named, params_of(node))
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            call = node.value
+            if _last_attr(call.func) == "jit" and call.args:
+                inner = call.args[0]
+                if isinstance(inner, ast.Name) and inner.id in defs:
+                    st = statics_from_call(call)
+                    named = _nums_to_names(st, call, defs[inner.id])
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            out[tgt.id] = (named, params_of(defs[inner.id]))
+    return out
+
+
+def _nums_to_names(statics, call: ast.Call,
+                   fn: ast.FunctionDef) -> Tuple[str, ...]:
+    params = [p.arg for p in fn.args.posonlyargs + fn.args.args]
+    named: List[str] = []
+    for s in statics or ():
+        if s.isdigit() and int(s) < len(params):
+            named.append(params[int(s)])
+        else:
+            named.append(s)
+    return tuple(named)
+
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp, ast.GeneratorExp)
+
+
+@rule("LF004", "recompile hazards at jitted call sites")
+def lf004(ctx: LintContext) -> Iterable[Finding]:
+    """A jitted callable keyed on static args recompiles per distinct value:
+    passing an unhashable literal is a ``TypeError`` at runtime, and passing
+    the loop variable of the enclosing ``for`` re-traces every iteration —
+    the serving layer's ``(bucket, k)`` program-cache discipline exists
+    precisely to bound this."""
+    for mod in ctx.modules:
+        table = _jit_static_params(mod)
+        if not table:
+            continue
+        # call-site walk with enclosing for-loop targets tracked
+        def visit(node, loop_vars: Set[str]):
+            if isinstance(node, ast.For):
+                inner = set(loop_vars)
+                for t in ast.walk(node.target):
+                    if isinstance(t, ast.Name):
+                        inner.add(t.id)
+                for child in node.body + node.orelse:
+                    yield from visit(child, inner)
+                return
+            if isinstance(node, ast.Call):
+                callee = node.func.id if isinstance(node.func, ast.Name) \
+                    else None
+                if callee in table:
+                    statics, params = table[callee]
+                    yield from _check_site(node, callee, statics, params,
+                                           loop_vars, mod)
+            for child in ast.iter_child_nodes(node):
+                yield from visit(child, loop_vars)
+
+        for top in mod.tree.body:
+            yield from visit(top, set())
+
+
+def _check_site(call: ast.Call, callee: str, statics, params,
+                loop_vars: Set[str], mod: Module) -> Iterable[Finding]:
+    bound: List[Tuple[str, ast.AST]] = []
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            return                        # cannot map positions past *args
+        if i < len(params):
+            bound.append((params[i], arg))
+    for kw in call.keywords:
+        if kw.arg is not None:
+            bound.append((kw.arg, kw.value))
+    for name, expr in bound:
+        if name not in statics:
+            continue
+        if isinstance(expr, _UNHASHABLE):
+            yield Finding(
+                "LF004", mod.rel, call.lineno,
+                f"unhashable literal bound to static arg `{name}` of jitted "
+                f"`{callee}` — jit static args must be hashable (use a "
+                "tuple)")
+        elif isinstance(expr, ast.Name) and expr.id in loop_vars:
+            yield Finding(
+                "LF004", mod.rel, call.lineno,
+                f"loop variable `{expr.id}` bound to static arg `{name}` of "
+                f"jitted `{callee}` re-traces every iteration; hoist or "
+                "bucket it (pow2 buckets bound the program cache)")

@@ -1,0 +1,119 @@
+"""Repo-contract rules: LF002 (parity-oracle coverage) and LF005
+(benchmark-claim hygiene).
+
+Both read fixed repo-relative locations through ``ctx.read_extra`` /
+``ctx.root`` rather than the linted path set, so ``python -m
+repro.analysis.lint src`` still checks ``tests/`` and ``benchmarks/``
+contracts without linting those trees.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, List, Set
+
+from .framework import Finding, LintContext, rule
+
+_TESTS_REL = "tests/test_kernels.py"
+_BENCH_REL = "benchmarks/run.py"
+
+
+def _referenced_names(tree: ast.Module) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            names.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            names.add(node.attr)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                names.add(a.asname or a.name.split(".")[-1])
+    return names
+
+
+@rule("LF002", "every public kernel op keeps a parity oracle")
+def lf002(ctx: LintContext) -> Iterable[Finding]:
+    """Every public export of ``kernels/*/ops.py`` (top-level def or
+    assignment not prefixed ``_``) must be referenced from
+    ``tests/test_kernels.py`` — the "every fast path keeps a parity oracle"
+    convention as a gate.  A fast-path variant nobody pins drifts."""
+    ops_modules = [m for m in ctx.modules
+                   if re.search(r"kernels/[^/]+/ops\.py$", m.rel)]
+    if not ops_modules:
+        return
+    tests = ctx.read_extra(_TESTS_REL)
+    if tests is None:
+        for m in ops_modules:
+            yield Finding("LF002", m.rel, 1,
+                          f"no {_TESTS_REL} found to reference this "
+                          "kernel's exports from")
+        return
+    referenced = _referenced_names(tests.tree)
+    for m in ops_modules:
+        for node in m.tree.body:
+            name, line = None, None
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                name, line = node.name, node.lineno
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name, line = node.targets[0].id, node.lineno
+            if not name or name.startswith("_") or name.isupper():
+                continue                  # private / constant table
+            if name not in referenced:
+                yield Finding(
+                    "LF002", m.rel, line,
+                    f"public kernel export `{name}` is never referenced "
+                    f"from {_TESTS_REL} — add a parity test or prefix it "
+                    "with `_`")
+
+
+@rule("LF005", "every benchmark suite backs its claim")
+def lf005(ctx: LintContext) -> Iterable[Finding]:
+    """Every suite registered in ``benchmarks/run.py`` must have (a) its
+    JSON artifact committed under ``experiments/`` and (b) a
+    ``bench-<suite>`` Makefile target — the "every perf claim lands as a
+    suite entry with a JSON artifact" convention as a gate."""
+    bench = ctx.read_extra(_BENCH_REL)
+    if bench is None:
+        return                            # no benchmark layer, nothing owed
+    suites: List = []                     # (name, artifact_rel, line)
+    for node in ast.walk(bench.tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "SUITES"
+                and isinstance(node.value, ast.Dict)):
+            continue
+        for key, val in zip(node.value.keys, node.value.values):
+            if not (isinstance(key, ast.Constant)
+                    and isinstance(key.value, str)):
+                continue
+            artifact = None
+            if isinstance(val, (ast.Tuple, ast.List)):
+                for elt in val.elts:
+                    if isinstance(elt, ast.Constant) \
+                            and isinstance(elt.value, str) \
+                            and elt.value.endswith(".json"):
+                        artifact = elt.value
+            suites.append((key.value, artifact, key.lineno))
+    makefile_path = os.path.join(ctx.root, "Makefile")
+    makefile = ""
+    if os.path.isfile(makefile_path):
+        with open(makefile_path, encoding="utf-8") as f:
+            makefile = f.read()
+    for name, artifact, line in suites:
+        if artifact is None:
+            yield Finding(
+                "LF005", _BENCH_REL, line,
+                f"suite `{name}` does not name a .json artifact path")
+        elif not os.path.isfile(os.path.join(ctx.root, artifact)):
+            yield Finding(
+                "LF005", _BENCH_REL, line,
+                f"suite `{name}` claims artifact `{artifact}` but it is "
+                "not committed under experiments/ — run the suite and "
+                "commit the JSON, or drop the suite")
+        if not re.search(rf"^bench-{re.escape(name)}\s*:", makefile,
+                         re.MULTILINE):
+            yield Finding(
+                "LF005", _BENCH_REL, line,
+                f"suite `{name}` has no `bench-{name}` Makefile target")

@@ -76,8 +76,8 @@ def load_pytree(path: str, like: Any = None) -> tuple[Any, dict]:
     if missing:
         raise KeyError(f"checkpoint missing {len(missing)} leaves, "
                        f"e.g. {missing[:3]}")
-    new_leaves = [by_path[p].astype(np.asarray(l).dtype)
-                  for p, l in zip(paths, leaves)]
+    new_leaves = [by_path[p].astype(np.asarray(leaf).dtype)
+                  for p, leaf in zip(paths, leaves)]
     return jax.tree_util.tree_unflatten(treedef, new_leaves), meta["metadata"]
 
 

@@ -53,8 +53,8 @@ def sax_lower_bound(query_paa: jnp.ndarray, edges: jnp.ndarray,
     d = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
     # ±inf edges at the extremes produce d=0 there; inf*0 guards:
     d = jnp.where(jnp.isfinite(d), d, 0.0)
-    l = edges.shape[-2]
-    lb2 = (length / l) * (d * d).sum(axis=-1)
+    wl = edges.shape[-2]
+    lb2 = (length / wl) * (d * d).sum(axis=-1)
     return jnp.sqrt(lb2)
 
 

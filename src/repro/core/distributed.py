@@ -78,8 +78,8 @@ class ShardedLeaFi:
             st = summaries.segment_stats(queries, s)
             q = jnp.concatenate([st[..., 0], st[..., 1]], -1)
         else:
-            l = self.lb_lo.shape[-1]
-            q = summaries.paa(queries, l)
+            wl = self.lb_lo.shape[-1]
+            q = summaries.paa(queries, wl)
         return q * jnp.asarray(self.qscale)
 
 
@@ -121,10 +121,10 @@ def shard_leafi(lfi: LeaFiIndex, n_shards: int,
         qscale = np.concatenate([w, w])
     else:
         edges = np.asarray(index.payload["sax_edges"])
-        l = edges.shape[1]
-        scale = np.sqrt(index.length / l)
+        wl = edges.shape[1]
+        scale = np.sqrt(index.length / wl)
         lo, hi = edges[..., 0] * scale, edges[..., 1] * scale
-        qscale = np.full(l, scale, np.float32)
+        qscale = np.full(wl, scale, np.float32)
 
     m = index.length
     h = lfi.filter_params["w1"].shape[-1] if lfi.filter_params else m

@@ -95,6 +95,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import sanitize
 from ..kernels.l2_scan import ops as l2_ops
 
 _INF = jnp.float32(jnp.inf)
@@ -213,9 +214,9 @@ def _bucket_leaf_topk(series, leaf_start, leaf_size, queries_b, leaf_b,
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
-                   leaf_valid=None, bsf_ub=None):
-    """Exact sequential-cascade replay over per-leaf top-k summaries.
+def _replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
+                    leaf_valid=None, bsf_ub=None):
+    """Jitted body of :func:`replay_cascade` — see the wrapper's docstring.
 
     Identical decision logic and merge arithmetic to ``_scan_cascade`` — the
     k smallest of (running top-k ∪ a leaf's k smallest) equal the k smallest
@@ -273,6 +274,24 @@ def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
 
     return jax.vmap(per_query, in_axes=(0, 0, 0, 0, 0, 0, 0))(
         leaf_d, leaf_i, d_lb, d_F, order, bsf0, bsf_ub)
+
+
+def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
+                   leaf_valid=None, bsf_ub=None):
+    """Exact sequential-cascade replay over per-leaf top-k summaries.
+
+    The single copy of the bsf cascade's decision logic (see
+    :func:`_replay_cascade` for the merge-equivalence argument): the compact
+    search strategy runs it over gathered candidate summaries, conformal
+    calibration (``conformal.simulate_search``) runs it with k=1 over the
+    precollected d_L matrices, and the distributed fixed-width compaction
+    (``compact_bsf_cascade``) runs it with k=1 from a collective bsf seed.
+    Under ``REPRO_CHECKIFY=1`` eager calls run checkify-instrumented
+    (``repro.sanitize``); traced calls pass straight through.
+    """
+    return sanitize.call(_replay_cascade, leaf_d, leaf_i, d_lb, d_F, order,
+                         k=k, bsf0=bsf0, leaf_valid=leaf_valid,
+                         bsf_ub=bsf_ub)
 
 
 def _pow2_chunk(per_leaf_bytes: int, cap: int) -> int:
@@ -343,8 +362,8 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
     # its values are written verbatim below so the replay stays consistent)
     probe_impl = "matmul" if dist_impl == "pairwise" else dist_impl
     leaf0 = order[:, :1]                                 # (Q, 1)
-    p_vals, p_ids = _bucket_leaf_topk(
-        series, leaf_start, leaf_size, queries, leaf0,
+    p_vals, p_ids = sanitize.call(
+        _bucket_leaf_topk, series, leaf_start, leaf_size, queries, leaf0,
         kk=kk, max_leaf=max_leaf, chunk=1, dist_impl=probe_impl)
     bsf0 = p_vals[:, 0, k - 1] if k <= kk else jnp.full((Q,), _INF)
     # the replay's effective lb threshold never exceeds min(bsf0, ub) after
@@ -360,8 +379,11 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
     # -- phase 2: bucket queries by survivor count, compact leaf lists ------
     counts = np.asarray(mask.sum(axis=1))
     computed = counts.astype(np.int32).copy()            # per-query paid leaves
-    leaf_d = jnp.full((Q, L, kk), _INF)
-    leaf_i = jnp.full((Q, L, kk), -1, jnp.int32)
+    # leaf row L is a scratch row: invalid/padded slots aim their scatters at
+    # it (in-bounds by construction, so index sanitizers stay quiet) and it
+    # is sliced off before the replay.
+    leaf_d = jnp.full((Q, L + 1, kk), _INF)
+    leaf_i = jnp.full((Q, L + 1, kk), -1, jnp.int32)
     # survivors first, in ascending-lb order (argsort of bool is stable)
     mask_ord = jnp.take_along_axis(mask, order, axis=1)
     sel_all = jnp.argsort(~mask_ord, axis=1)
@@ -395,9 +417,9 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
             Up = max(_next_pow2(uni.size), chunk)
             leaf_u = jnp.asarray(np.pad(uni, (0, Up - uni.size),
                                         constant_values=L))
-            vals, ids = _union_leaf_topk(
-                series, leaf_start, leaf_size, queries[qidx], leaf_u,
-                kk=kk, max_leaf=max_leaf, chunk=chunk)
+            vals, ids = sanitize.call(
+                _union_leaf_topk, series, leaf_start, leaf_size,
+                queries[qidx], leaf_u, kk=kk, max_leaf=max_leaf, chunk=chunk)
             # padded queries must not scatter: aim their writes at leaf L
             leaf_sc = jnp.where(pad_q[:, None], L, leaf_u[None, :])
         else:
@@ -405,17 +427,19 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
             Cp = -(-C // chunk) * chunk                  # pad C to chunks
             if Cp > C:                                   # invalid-slot pad
                 leaf = jnp.pad(leaf, ((0, 0), (0, Cp - C)), constant_values=L)
-            vals, ids = _bucket_leaf_topk(
-                series, leaf_start, leaf_size, queries[qidx], leaf,
+            vals, ids = sanitize.call(
+                _bucket_leaf_topk, series, leaf_start, leaf_size,
+                queries[qidx], leaf,
                 kk=kk, max_leaf=max_leaf, chunk=chunk, dist_impl=dist_impl)
             leaf_sc = leaf
-        # scatter into the (Q, L, kk) summaries; leaf==L slots drop
+        # scatter into the (Q, L+1, kk) summaries; leaf==L slots land in the
+        # scratch row
         leaf_d = leaf_d.at[qidx[:, None, None], leaf_sc[:, :, None],
-                           jnp.arange(kk)[None, None, :]].set(
-                               vals, mode="drop")
+                           jnp.arange(kk)[None, None, :]].set(vals)
         leaf_i = leaf_i.at[qidx[:, None, None], leaf_sc[:, :, None],
-                           jnp.arange(kk)[None, None, :]].set(
-                               ids, mode="drop")
+                           jnp.arange(kk)[None, None, :]].set(ids)
+
+    leaf_d, leaf_i = leaf_d[:, :L], leaf_i[:, :L]        # drop the scratch row
 
     # reuse the probe's leaf-0 values verbatim: the replay's bsf after the
     # first merge then equals bsf0 bitwise, which is what makes the phase-1
@@ -484,9 +508,9 @@ def run_cascade(
     ub = (jnp.full(queries.shape[0], _INF) if bsf_ub is None
           else jnp.asarray(bsf_ub, jnp.float32))
     if strategy == "scan":
-        td, ti, n_s, n_plb, n_pf = _scan_cascade(
-            series, leaf_start, leaf_size, queries, d_lb, d_F, ub,
-            k=k, max_leaf=max_leaf)
+        td, ti, n_s, n_plb, n_pf = sanitize.call(
+            _scan_cascade, series, leaf_start, leaf_size, queries, d_lb,
+            d_F, ub, k=k, max_leaf=max_leaf)
         n_c = jnp.full(queries.shape[0], leaf_start.shape[0], jnp.int32)
     elif strategy == "compact":
         td, ti, n_s, n_plb, n_pf, n_c = _compact_cascade(
@@ -548,9 +572,9 @@ def nn_distance_all_leaves(
     if chunk is None:
         chunk = _pow2_chunk((Q * max_leaf + max_leaf * m) * 4,
                             _next_pow2(L))
-    return _all_leaves_min(series, leaf_start, leaf_size, queries,
-                           max_leaf=max_leaf, chunk=chunk,
-                           dist_impl=dist_impl)
+    return sanitize.call(_all_leaves_min, series, leaf_start, leaf_size,
+                         queries, max_leaf=max_leaf, chunk=chunk,
+                         dist_impl=dist_impl)
 
 
 @functools.partial(jax.jit,
@@ -600,9 +624,9 @@ def nn_distance_own_leaf(
     if chunk is None:
         chunk = _pow2_chunk((nq * max_leaf + max_leaf * m + nq * m) * 4,
                             _next_pow2(max(F, 1)))
-    return _own_leaf_min(series, leaf_start, leaf_size, local_queries,
-                         jnp.asarray(leaf_ids), max_leaf=max_leaf,
-                         chunk=chunk, dist_impl=dist_impl)
+    return sanitize.call(_own_leaf_min, series, leaf_start, leaf_size,
+                         local_queries, jnp.asarray(leaf_ids),
+                         max_leaf=max_leaf, chunk=chunk, dist_impl=dist_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -754,6 +778,7 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
     P = leaf_start.shape[0]
     if max_survivors is None:
         max_survivors = default_max_survivors(P)
+    # leafi: ignore[LF001]: max_survivors is a host int (caller arg or leaf-count default) — capacity must be static
     C = max(min(int(max_survivors), P), 1)
     dist_impl = dist_impl or l2_ops.default_gathered_impl()
     if bsf_ub is None:
@@ -783,13 +808,16 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
     Cp = -(-C // chunk) * chunk                          # pad C to chunks
     if Cp > C:
         leaf_b = jnp.pad(leaf_b, ((0, 0), (0, Cp - C)), constant_values=P)
-    vals, _ = _bucket_leaf_topk(series, leaf_start, leaf_size, queries,
-                                leaf_b, kk=1, max_leaf=max_leaf,
-                                chunk=chunk, dist_impl=dist_impl)
-    # per-leaf min-distance summaries; sentinel (== P) scatters drop
-    leaf_min = jnp.full((Q, P), _INF)
+    vals, _ = sanitize.call(_bucket_leaf_topk, series, leaf_start,
+                            leaf_size, queries, leaf_b, kk=1,
+                            max_leaf=max_leaf, chunk=chunk,
+                            dist_impl=dist_impl)
+    # per-leaf min-distance summaries; sentinel (== P) writes land in a
+    # scratch row that is sliced off — in-bounds by construction, so index
+    # sanitizers stay quiet.
+    leaf_min = jnp.full((Q, P + 1), _INF)
     leaf_min = leaf_min.at[jnp.arange(Q)[:, None], leaf_b].set(
-        vals[:, :, 0], mode="drop")
+        vals[:, :, 0])[:, :P]
 
     td, _, n_s, _, _ = replay_cascade(
         leaf_min[..., None], jnp.full((Q, P, 1), -1, jnp.int32),

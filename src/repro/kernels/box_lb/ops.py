@@ -41,8 +41,8 @@ def box_lb(q, lo, hi, *, bq: int = 128, bl: int = 128,
 def sax_lb(query_paa: jnp.ndarray, edges: jnp.ndarray, *, length: int,
            interpret: bool | None = None) -> jnp.ndarray:
     """query_paa (Q, l), edges (L, l, 2) → (Q, L) iSAX MINDIST."""
-    l = edges.shape[1]
-    scale = jnp.sqrt(jnp.float32(length) / l)
+    wl = edges.shape[1]
+    scale = jnp.sqrt(jnp.float32(length) / wl)
     return box_lb(query_paa * scale, edges[..., 0] * scale,
                   edges[..., 1] * scale, interpret=interpret)
 

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from . import kernel, ref
+from ... import sanitize
 from ..common import pad_to as _pad_to, use_interpret as _use_interpret
 
 _INF = jnp.float32(jnp.inf)
@@ -138,8 +139,17 @@ def gather_leaf_slabs(
 
     Returns (slabs (F, R, m), rows (F, R) global row ids, valid (F, R)).
     Invalid leaf ids (== L, the engine's padding convention) clamp their
-    gathers harmlessly and come back with an all-False valid mask.
+    gathers harmlessly and come back with an all-False valid mask; the
+    clamp is explicit (``jnp.minimum``), so ``REPRO_CHECKIFY=1`` eager
+    calls (routed through ``repro.sanitize``) stay clean on healthy
+    layouts and trip on genuinely corrupted ones (a ``leaf_start`` aimed
+    past the padded series rows).
     """
+    return sanitize.call(_gather_leaf_slabs, series, leaf_start, leaf_size,
+                         leaf_ids, max_leaf)
+
+
+def _gather_leaf_slabs(series, leaf_start, leaf_size, leaf_ids, max_leaf):
     L = leaf_start.shape[0]
     ids = jnp.asarray(leaf_ids)
     ok = ids < L

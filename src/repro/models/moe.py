@@ -76,6 +76,7 @@ def moe_ffn(params: dict, x: jnp.ndarray, moe: MoEConfig,
     aux = E * (me * ce).sum()
 
     # per-row capacity and position-in-expert (rank within the row)
+    # leafi: ignore[LF001]: moe.capacity_factor is a Python config float (MoEConfig), concrete at trace time
     C = S * K if no_drop else (int(moe.capacity_factor * S * K / E) or 1)
     flat_e = eidx.reshape(B, S * K)                            # (B, S*K)
     onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (B, S*K, E)

@@ -34,7 +34,7 @@ def adamw_init(params: Any) -> dict:
 
 def global_norm(tree: Any) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
 
 
 def adamw_update(params: Any, grads: Any, state: dict, cfg: AdamWConfig,

@@ -1,0 +1,70 @@
+"""Env-gated runtime sanitizer wiring (``REPRO_CHECKIFY=1``).
+
+The engine's padded-slab layout makes out-of-bounds indexing *silent*: XLA
+clamps OOB gather/dynamic-slice indices, so a corrupted ``leaf_start`` (or a
+compaction bug that aims a gather past the series rows) reads garbage instead
+of crashing — exactly the failure class that cost the padding-leaf probe bug
+a debugging session (see CHANGES.md, PR 3).  This module threads
+``jax.experimental.checkify`` through the engine's jitted passes
+(``engine.run_cascade`` / ``replay_cascade`` / ``compact_bsf_cascade`` and
+the leaf-slab gathers in ``kernels.l2_scan.ops``) so those failures are loud
+in CI: ``REPRO_CHECKIFY=1 make test``.
+
+Checks enabled: ``index_checks`` (OOB gather / scatter / dynamic-slice) and
+``nan_checks``.  ``float_checks``'s inf detection is deliberately *not*
+enabled — the cascade's ±inf sentinels (−inf ⇒ a filter that never prunes,
++inf padding distances and bsf seeds) are load-bearing, so inf-freedom is
+not an invariant of this code; NaN-freedom and in-bounds indexing are.
+Note ``index_checks`` flags OOB indices even under explicit
+``mode="drop"``/``"clip"`` — which is why the engine scatters its sentinel
+slots into a real scratch row instead of relying on drop semantics.
+
+Dispatch contract of :func:`call`:
+
+* sanitizer disabled (the default): straight call, zero overhead;
+* any argument is a tracer (the callee is being traced inside an enclosing
+  jit / shard_map / scan): straight call — the instrumentation boundary is
+  the outermost *eager* call, because ``err.throw()`` needs concrete values;
+* otherwise: the callee runs under ``checkify.checkify`` and any recorded
+  error is thrown as ``checkify.JaxRuntimeError``.
+
+Sanitizer mode re-traces the callee through checkify per call site (the
+checkified wrapper is cached per function, the inner jit cache still
+applies); it is a CI/debug configuration, not a serving one.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+
+def enabled() -> bool:
+    """True when ``REPRO_CHECKIFY`` is set to anything but ``""``/``"0"``."""
+    return os.environ.get("REPRO_CHECKIFY", "0") not in ("", "0")
+
+
+@functools.lru_cache(maxsize=None)
+def _checkified(fn):
+    from jax.experimental import checkify
+    return checkify.checkify(
+        fn, errors=checkify.index_checks | checkify.nan_checks)
+
+
+def _has_tracer(args, kwargs) -> bool:
+    return any(isinstance(x, jax.core.Tracer)
+               for x in jax.tree_util.tree_leaves((args, kwargs)))
+
+
+def call(fn, *args, **kwargs):
+    """``fn(*args, **kwargs)``, checkify-instrumented when enabled.
+
+    Static (hashable Python) kwargs pass through to the callee's own jit
+    wrapper unchanged; checkify only functionalizes the array computation.
+    """
+    if not enabled() or _has_tracer(args, kwargs):
+        return fn(*args, **kwargs)
+    err, out = _checkified(fn)(*args, **kwargs)
+    err.throw()
+    return out

@@ -4,6 +4,11 @@ process) forces 512 host devices."""
 import numpy as np
 import pytest
 
+# Lint-rule fixture trees under tests/lint_fixtures/ are linter *inputs*, not
+# test modules — keep pytest from importing them (the LF002 fixture ships its
+# own tests/test_kernels.py which would shadow-collide with the real one).
+collect_ignore = ["lint_fixtures"]
+
 
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches_between_modules():

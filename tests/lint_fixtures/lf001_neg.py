@@ -1,0 +1,15 @@
+"""LF001 negative fixture: static-shape idioms and host-only code."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def good_static(x):
+    n = int(x.shape[0])                  # shape-derived: exempt
+    mask = x > 0
+    return jnp.where(mask, x, 0.0).sum() + n
+
+
+def host_only(x):
+    # not jit-reachable: dynamic shapes are fine on the host side
+    return jnp.nonzero(x > 0)[0]

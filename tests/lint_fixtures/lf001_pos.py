@@ -1,0 +1,23 @@
+"""LF001 positive fixture: dynamic-shape / host-sync ops in traced code."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_dynamic(x):
+    idx = jnp.nonzero(x > 0)[0]          # finding: dynamic output shape
+    y = x[x > 0]                         # finding: boolean-mask indexing
+    s = x.sum().item()                   # finding: host sync
+    n = int(x.sum())                     # finding: concretizes a tracer
+    return idx, y, s, n
+
+
+def helper(x):
+    return jnp.unique(x)                 # finding: reachable from a jit root
+
+
+@functools.partial(jax.jit, static_argnames=())
+def calls_helper(x):
+    return helper(x)

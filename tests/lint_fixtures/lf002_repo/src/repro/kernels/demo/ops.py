@@ -1,0 +1,13 @@
+"""LF002 fixture kernel: one covered export, one uncovered, one private."""
+
+
+def covered_op(x):
+    return x
+
+
+def uncovered_op(x):
+    return x
+
+
+def _private_helper(x):
+    return x

@@ -1,0 +1,6 @@
+"""LF002 fixture test file: references covered_op only."""
+from repro.kernels.demo.ops import covered_op
+
+
+def test_covered():
+    assert covered_op(1) == 1

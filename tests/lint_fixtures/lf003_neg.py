@@ -1,0 +1,9 @@
+"""LF003 negative fixture: the rebind idiom — donation then reassignment."""
+import jax
+
+
+def loop(fn, state, batches):
+    step = jax.jit(fn, donate_argnums=(0,))
+    for batch in batches:
+        state = step(state, batch)       # rebind clears the taint
+    return state

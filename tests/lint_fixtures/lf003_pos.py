@@ -1,0 +1,8 @@
+"""LF003 positive fixture: a donated buffer read after the donating call."""
+import jax
+
+
+def loop(fn, state, batch):
+    step = jax.jit(fn, donate_argnums=(0,))
+    out = step(state, batch)
+    return state.sum() + out             # finding: state was donated above

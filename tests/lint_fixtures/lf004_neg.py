@@ -1,0 +1,14 @@
+"""LF004 negative fixture: hoisted static arg — one program, many calls."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk(x, k):
+    return jax.lax.top_k(x, k)[0]
+
+
+def drive(xs):
+    k = 4                                # hoisted: a single compiled program
+    return [topk(x, k) for x in xs]

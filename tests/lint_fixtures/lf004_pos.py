@@ -1,0 +1,18 @@
+"""LF004 positive fixture: loop-varying and unhashable static args."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk(x, k):
+    return jax.lax.top_k(x, k)[0]
+
+
+def drive():
+    out = []
+    for n in range(4):
+        out.append(topk(jnp.ones(8), n))     # finding: re-traces per n
+    out.append(topk(jnp.ones(8), k=[1, 2]))  # finding: unhashable static
+    return out

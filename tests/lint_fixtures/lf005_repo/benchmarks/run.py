@@ -1,0 +1,7 @@
+"""LF005 fixture suite registry: one healthy suite, two broken ones."""
+
+SUITES = {
+    "good": (None, "experiments/good_bench.json"),
+    "noartifact": (None, "experiments/missing_bench.json"),
+    "notarget": (None, "experiments/notarget_bench.json"),
+}

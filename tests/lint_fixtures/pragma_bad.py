@@ -1,0 +1,13 @@
+"""Pragma fixture: reasonless and unknown-rule pragmas suppress nothing."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def unexplained(x):
+    return jnp.unique(x)  # leafi: ignore[LF001]
+
+
+@jax.jit
+def unknown_rule(x):
+    return jnp.nonzero(x)  # leafi: ignore[LF999]: not a registered rule

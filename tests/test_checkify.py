@@ -1,0 +1,96 @@
+"""Runtime-sanitizer smoke tests (``REPRO_CHECKIFY=1``).
+
+The engine's padded-slab layout silently clamps out-of-bounds gathers, so a
+corrupted ``leaf_start`` returns plausible garbage instead of crashing.
+These tests pin the sanitizer contract on both backbones and both cascade
+strategies:
+
+* clean inputs run bitwise-identically with the sanitizer on;
+* a corrupted ``leaf_start`` raises ``checkify.JaxRuntimeError`` under
+  ``REPRO_CHECKIFY=1`` (scan AND compact);
+* without the env var the same corruption is silent — which is exactly why
+  the sanitizer exists.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import checkify
+
+from repro import sanitize
+from repro.core import bounds, engine, tree
+
+
+@pytest.fixture(scope="module", params=["dstree", "isax"])
+def index_small(request, randwalk_small):
+    if request.param == "dstree":
+        return tree.build_dstree(randwalk_small[:2000], leaf_capacity=64)
+    return tree.build_isax(randwalk_small[:2000], leaf_capacity=64)
+
+
+def _run(index, queries, d_lb, d_F, k, strategy, leaf_start=None):
+    if leaf_start is None:
+        leaf_start = jnp.asarray(index.leaf_start)
+    return engine.run_cascade(
+        jnp.asarray(index.series), leaf_start,
+        jnp.asarray(index.leaf_size), queries, d_lb, d_F,
+        k=k, max_leaf=index.max_leaf_size, strategy=strategy)
+
+
+def _inputs(index, queries_small, n_queries=8):
+    q = jnp.asarray(queries_small[:n_queries])
+    d_lb = bounds.lower_bounds(index, q)
+    d_F = jnp.full(d_lb.shape, -jnp.inf)
+    return q, d_lb, d_F
+
+
+def _corrupt(index):
+    """A leaf_start aiming one leaf's slab far past the series rows."""
+    start = jnp.asarray(index.leaf_start)
+    return start.at[index.n_leaves // 2].set(index.series.shape[0] + 1000)
+
+
+def test_enabled_flag(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    assert not sanitize.enabled()
+    monkeypatch.setenv("REPRO_CHECKIFY", "0")
+    assert not sanitize.enabled()
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    assert sanitize.enabled()
+
+
+@pytest.mark.parametrize("strategy", ["scan", "compact"])
+def test_clean_run_matches_uninstrumented(index_small, queries_small,
+                                          strategy, monkeypatch):
+    q, d_lb, d_F = _inputs(index_small, queries_small)
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    plain = _run(index_small, q, d_lb, d_F, 5, strategy)
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    checked = _run(index_small, q, d_lb, d_F, 5, strategy)
+    np.testing.assert_array_equal(np.asarray(plain.topk_d),
+                                  np.asarray(checked.topk_d))
+    np.testing.assert_array_equal(np.asarray(plain.topk_i),
+                                  np.asarray(checked.topk_i))
+    np.testing.assert_array_equal(np.asarray(plain.n_searched),
+                                  np.asarray(checked.n_searched))
+
+
+@pytest.mark.parametrize("strategy", ["scan", "compact"])
+def test_corrupted_leaf_start_caught(index_small, queries_small, strategy,
+                                     monkeypatch):
+    q, d_lb, d_F = _inputs(index_small, queries_small)
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    with pytest.raises(checkify.JaxRuntimeError, match="out-of-bounds"):
+        _run(index_small, q, d_lb, d_F, 5, strategy,
+             leaf_start=_corrupt(index_small))
+
+
+@pytest.mark.parametrize("strategy", ["scan", "compact"])
+def test_corruption_is_silent_without_env(index_small, queries_small,
+                                          strategy, monkeypatch):
+    """The motivating failure: without the sanitizer, OOB slabs clamp and the
+    cascade returns finite garbage as if nothing happened."""
+    q, d_lb, d_F = _inputs(index_small, queries_small)
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    res = _run(index_small, q, d_lb, d_F, 5, strategy,
+               leaf_start=_corrupt(index_small))
+    assert np.isfinite(np.asarray(res.topk_d)).all()

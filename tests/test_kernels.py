@@ -172,6 +172,76 @@ def test_box_lb_matches_oracle(Q, L, d):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_gathered_leaf_l2_impls_agree_and_leaf_topk():
+    """The compact engine's candidate primitives: both gathered-distance
+    impls (and the backend default) agree, and leaf_topk returns each
+    leaf's k smallest with their row ids."""
+    N, C, R, m, k = 3, 4, 10, 16, 3
+    q = jnp.asarray(RNG.standard_normal((N, m)), jnp.float32)
+    slabs = jnp.asarray(RNG.standard_normal((N, C, R, m)), jnp.float32)
+    d_direct = l2_ops.gathered_leaf_l2(q, slabs, "direct")
+    d_matmul = l2_ops.gathered_leaf_l2(q, slabs, "matmul")
+    np.testing.assert_allclose(np.asarray(d_direct), np.asarray(d_matmul),
+                               rtol=1e-4, atol=1e-4)
+    assert l2_ops.default_gathered_impl() in ("direct", "matmul")
+    d_default = l2_ops.gathered_leaf_l2(q, slabs)        # backend default
+    assert d_default.shape == (N, C, R)
+    rows = jnp.broadcast_to(jnp.arange(C * R).reshape(1, C, R), (N, C, R))
+    vals, ids = l2_ops.leaf_topk(d_direct, rows, k)
+    dd = np.asarray(d_direct)
+    np.testing.assert_allclose(np.asarray(vals),
+                               np.sort(dd, axis=-1)[..., :k],
+                               rtol=0, atol=0)
+    np.testing.assert_array_equal(
+        np.asarray(ids),
+        np.asarray(rows)[np.arange(N)[:, None, None],
+                         np.arange(C)[None, :, None],
+                         np.argsort(dd, axis=-1)[..., :k]])
+
+
+def test_shared_slab_l2_impls_agree():
+    """All three shared-slab impls (the union candidate pass / build sweep)
+    agree; the backend default is one of them."""
+    Q, C, R, m = 5, 3, 12, 16
+    q = jnp.asarray(RNG.standard_normal((Q, m)), jnp.float32)
+    slabs = jnp.asarray(RNG.standard_normal((C, R, m)), jnp.float32)
+    d_direct = l2_ops.shared_slab_l2(q, slabs, "direct")
+    d_matmul = l2_ops.shared_slab_l2(q, slabs, "matmul")
+    d_pair = l2_ops.shared_slab_l2(q, slabs, "pairwise", interpret=True)
+    np.testing.assert_allclose(np.asarray(d_matmul), np.asarray(d_direct),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(d_pair), np.asarray(d_direct),
+                               rtol=1e-4, atol=1e-4)
+    assert l2_ops.default_slab_impl() in ("pairwise", "matmul")
+
+
+def test_pack_fused_layout_roundtrip():
+    """pack_fused's grouped layout invariant: lane j of group g holds
+    filter g·bf + j//h' — unpacking recovers the original weights."""
+    F, m, h, bf = 6, 16, 8, 4
+    w1, b1, w2, b2, ym, ys, off = _mlp_stack(F, m, h)
+    g = mlp_ops.pack_fused(w1, b1, w2, b2, ym, ys, off, bf=bf)
+    G = -(-F // bf)
+    mp = g["w1g"].shape[1]
+    hp = g["w1g"].shape[2] // bf
+    w1g = np.asarray(g["w1g"]).reshape(G, mp, bf, hp).transpose(0, 2, 1, 3)
+    b1g = np.asarray(g["b1g"]).reshape(G, bf, hp)
+    for f in range(F):
+        np.testing.assert_array_equal(w1g[f // bf, f % bf, :m, :h],
+                                      np.asarray(w1[f]))
+        np.testing.assert_array_equal(b1g[f // bf, f % bf, :h],
+                                      np.asarray(b1[f]))
+
+
+def test_reference_aliases_are_the_oracles():
+    """Each kernel package re-exports its oracle under ``reference`` —
+    benchmarks and parity harnesses rely on the alias staying wired."""
+    assert l2_ops.reference is l2_ref.pairwise_l2
+    assert box_ops.reference is box_ref.box_lb
+    assert mlp_ops.reference is mlp_ref.filter_predict
+    assert mlp_ops.fused_reference is mlp_ref.filter_predict_destd
+
+
 def test_kernel_paths_agree_with_bound_oracles(randwalk_small):
     """sax_lb / eapca_lb kernel wrappers == core.bounds jnp forms."""
     from repro.core import bounds, summaries, tree

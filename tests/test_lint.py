@@ -1,0 +1,250 @@
+"""Tests for the invariant linter (`repro.analysis.lint`).
+
+Each rule is exercised against small fixture files under
+``tests/lint_fixtures/`` — a positive fixture that must trip the rule and a
+negative fixture encoding the blessed idiom that must stay clean.  The
+pragma machinery, JSON output, CLI entry point, and exit-code contract are
+covered here too, plus a meta-test that the real source tree lints clean
+with every suppression carrying a reason.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis.lint import RULES, run_lint
+from repro.analysis.lint.__main__ import main
+
+FIXTURES = pathlib.Path(__file__).parent / "lint_fixtures"
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _lint_fixture(name):
+    report = run_lint([str(FIXTURES / name)], root=str(FIXTURES))
+    assert not report.errors, report.errors
+    return report
+
+
+def _by_rule(report, rule):
+    return [f for f in report.findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# rule registry
+# ---------------------------------------------------------------------------
+
+def test_all_five_rules_registered():
+    assert set(RULES) == {"LF001", "LF002", "LF003", "LF004", "LF005"}
+    for r in RULES.values():
+        assert r.title and r.doc
+
+
+# ---------------------------------------------------------------------------
+# LF001 — dynamic shapes / host syncs in jit-reachable code
+# ---------------------------------------------------------------------------
+
+def test_lf001_positive_fixture_trips():
+    report = _lint_fixture("lf001_pos.py")
+    findings = _by_rule(report, "LF001")
+    # nonzero, bool-mask subscript, .item(), int(tracer) inside the jit fn,
+    # and jnp.unique in the helper reached from the jitted caller.
+    assert len(findings) == 5, [f.render() for f in findings]
+    texts = " ".join(f.message for f in findings)
+    assert "nonzero" in texts
+    assert "unique" in texts
+    assert len({f.line for f in findings}) == 5
+
+
+def test_lf001_negative_fixture_clean():
+    report = _lint_fixture("lf001_neg.py")
+    assert _by_rule(report, "LF001") == []
+
+
+# ---------------------------------------------------------------------------
+# LF002 — kernel ops exports must be referenced from the parity tests
+# ---------------------------------------------------------------------------
+
+def test_lf002_uncovered_export_trips():
+    root = FIXTURES / "lf002_repo"
+    report = run_lint([str(root / "src")], root=str(root))
+    assert not report.errors, report.errors
+    findings = _by_rule(report, "LF002")
+    assert len(findings) == 1, [f.render() for f in findings]
+    assert "`uncovered_op`" in findings[0].message
+    assert "_private_helper" not in findings[0].message
+    assert "`covered_op`" not in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# LF003 — reads after buffer donation
+# ---------------------------------------------------------------------------
+
+def test_lf003_read_after_donation_trips():
+    report = _lint_fixture("lf003_pos.py")
+    findings = _by_rule(report, "LF003")
+    assert len(findings) == 1, [f.render() for f in findings]
+    assert "`state`" in findings[0].message
+
+
+def test_lf003_rebind_idiom_clean():
+    report = _lint_fixture("lf003_neg.py")
+    assert _by_rule(report, "LF003") == []
+
+
+# ---------------------------------------------------------------------------
+# LF004 — recompile hazards at jitted call sites
+# ---------------------------------------------------------------------------
+
+def test_lf004_loop_var_and_unhashable_trip():
+    report = _lint_fixture("lf004_pos.py")
+    findings = _by_rule(report, "LF004")
+    assert len(findings) == 2, [f.render() for f in findings]
+    texts = " ".join(f.message for f in findings)
+    assert "loop variable" in texts
+    assert "unhashable" in texts
+
+
+def test_lf004_hoisted_static_clean():
+    report = _lint_fixture("lf004_neg.py")
+    assert _by_rule(report, "LF004") == []
+
+
+# ---------------------------------------------------------------------------
+# LF005 — benchmark suites need artifacts + Makefile targets
+# ---------------------------------------------------------------------------
+
+def test_lf005_missing_artifact_and_target_trip():
+    root = FIXTURES / "lf005_repo"
+    report = run_lint([str(root / "benchmarks")], root=str(root))
+    assert not report.errors, report.errors
+    findings = _by_rule(report, "LF005")
+    assert len(findings) == 2, [f.render() for f in findings]
+    texts = " ".join(f.message for f in findings)
+    assert "`noartifact`" in texts
+    assert "`notarget`" in texts
+    assert "`good`" not in texts
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+
+def test_pragma_with_reason_suppresses():
+    report = _lint_fixture("pragma_ok.py")
+    assert report.findings == [], [f.render() for f in report.findings]
+    assert len(report.suppressed) == 1
+    entry = report.suppressed[0]
+    assert entry["finding"].rule == "LF001"
+    assert entry["reason"] == "fixture-documented exception"
+
+
+def test_reasonless_and_unknown_pragmas_rejected():
+    report = _lint_fixture("pragma_bad.py")
+    # Neither pragma suppresses its LF001 finding; both also raise LF000.
+    assert report.suppressed == []
+    lf000 = _by_rule(report, "LF000")
+    lf001 = _by_rule(report, "LF001")
+    assert len(lf000) == 2, [f.render() for f in lf000]
+    assert len(lf001) == 2, [f.render() for f in lf001]
+    texts = " ".join(f.message for f in lf000)
+    assert "without a reason" in texts
+    assert "LF999" in texts
+
+
+# ---------------------------------------------------------------------------
+# CLI: JSON output and exit codes
+# ---------------------------------------------------------------------------
+
+def test_cli_json_findings_exit_1(capsys):
+    rc = main([str(FIXTURES / "lf001_pos.py"), "--root", str(FIXTURES),
+               "--format", "json"])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["errors"] == []
+    assert payload["exit_code"] == 1
+    assert {f["rule"] for f in payload["findings"]} == {"LF001"}
+    sample = payload["findings"][0]
+    assert {"rule", "path", "line", "message"} <= set(sample)
+
+
+def test_cli_clean_exit_0(capsys):
+    rc = main([str(FIXTURES / "lf001_neg.py"), "--root", str(FIXTURES),
+               "--format", "json"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["findings"] == []
+
+
+def test_cli_suppressed_only_exit_0(capsys):
+    rc = main([str(FIXTURES / "pragma_ok.py"), "--root", str(FIXTURES)])
+    assert rc == 0
+    assert "1 suppressed" in capsys.readouterr().out
+
+
+def test_cli_json_reports_suppressions_with_reasons(capsys):
+    rc = main([str(FIXTURES / "pragma_ok.py"), "--root", str(FIXTURES),
+               "--format", "json"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert len(payload["suppressed"]) == 1
+    assert payload["suppressed"][0]["reason"] == "fixture-documented exception"
+
+
+def test_cli_unparseable_file_exit_2(tmp_path, capsys):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def nope(:\n")
+    rc = main([str(bad), "--root", str(tmp_path), "--format", "json"])
+    assert rc == 2
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["errors"]
+
+
+def test_cli_unknown_rule_exit_2(capsys):
+    rc = main([str(FIXTURES / "lf001_neg.py"), "--root", str(FIXTURES),
+               "--rules", "LF042"])
+    assert rc == 2
+    assert "unknown rule" in capsys.readouterr().out
+
+
+def test_cli_rule_filter(capsys):
+    rc = main([str(FIXTURES / "lf001_pos.py"), "--root", str(FIXTURES),
+               "--rules", "lf003", "--format", "json"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["findings"] == []
+    assert payload["rules"] == ["LF003"]
+
+
+def test_cli_list_rules(capsys):
+    rc = main(["--list-rules"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    for rid in sorted(RULES):
+        assert rid in out
+
+
+# ---------------------------------------------------------------------------
+# the real tree must lint clean with every suppression reasoned
+# ---------------------------------------------------------------------------
+
+def test_source_tree_lints_clean():
+    report = run_lint([str(REPO_ROOT / "src")], root=str(REPO_ROOT))
+    assert not report.errors, report.errors
+    assert report.findings == [], [f.render() for f in report.findings]
+    for entry in report.suppressed:
+        assert entry["reason"], f"reasonless pragma: {entry['finding'].render()}"
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_every_rule_has_a_failing_fixture(rule):
+    """Acceptance guard: each rule demonstrably fires on some fixture."""
+    if rule in ("LF002", "LF005"):
+        sub = "lf002_repo" if rule == "LF002" else "lf005_repo"
+        root = FIXTURES / sub
+        scan = root / ("src" if rule == "LF002" else "benchmarks")
+        report = run_lint([str(scan)], root=str(root))
+    else:
+        report = _lint_fixture(f"{rule.lower()}_pos.py")
+    assert _by_rule(report, rule), f"{rule} fired nowhere"

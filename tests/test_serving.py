@@ -167,8 +167,8 @@ def test_batcher_trace_replay_is_deterministic():
     a_c, a_log = _drive(trace, max_batch=8, max_wait=0.005)
     b_c, b_log = _drive(trace, max_batch=8, max_wait=0.005)
     # everything but the measured wall-clock around execute is replayable
-    strip = lambda log: [{k: v for k, v in b.items() if k != "wall"}
-                         for b in log]
+    def strip(log):
+        return [{k: v for k, v in b.items() if k != "wall"} for b in log]
     assert strip(a_log) == strip(b_log)
     assert {r: c["latency"] for r, c in a_c.items()} == \
         {r: c["latency"] for r, c in b_c.items()}
@@ -391,8 +391,10 @@ def test_pipelined_serve_matches_serial_bitwise(lfi, mixed_queries, warm):
     s0, r0 = _serve_mode(lfi, trace, pipeline=0, warm=warm)
     s1, r1 = _serve_mode(lfi, trace, pipeline=1, warm=warm)
     host_keys = ("wall", "dispatch_s", "harvest_s", "t_disp", "t_done")
-    strip = lambda log: [{k: v for k, v in b.items() if k not in host_keys}
-                         for b in log]
+
+    def strip(log):
+        return [{k: v for k, v in b.items() if k not in host_keys}
+                for b in log]
     assert strip(r0["batches"]) == strip(r1["batches"])
     for rid in r0["completions"]:
         c0, c1 = r0["completions"][rid], r1["completions"][rid]
