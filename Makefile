@@ -5,7 +5,8 @@
 # requirements-dev.txt extras) — tests/_hypothesis_compat.py guarantees the
 # property tests degrade rather than break collection.
 #
-# `make check` = lint + tests, the full local gate.  `make lint` runs both
+# `make check` = lint + tests + the checkify-sanitized rerun
+# (`make test-sanitize`), the full local gate.  `make lint` runs both
 # halves of the static gate: ruff (style, skipped when not installed) and
 # the stdlib-only invariant linter (`python -m repro.analysis.lint`, rules
 # LF001–LF005 — see README "Static analysis & sanitizers"), which always
@@ -14,17 +15,22 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: check test test-fast lint lint-invariants bench bench-engine \
-	bench-build bench-dist bench-serve bench-serve-quick bench-filters \
-	dev-deps
+.PHONY: check test test-fast test-sanitize lint lint-invariants bench \
+	bench-engine bench-build bench-dist bench-serve bench-serve-quick \
+	bench-filters bench-obs dev-deps
 
-check: test
+check: test test-sanitize
 
 test: lint
 	python -m pytest -x -q
 
 test-fast:
 	python -m pytest -x -q -m "not slow"
+
+# tier-1 under the checkify sanitizer: every sanitize.call-wrapped engine
+# entry point runs with NaN/OOB/div checks compiled in (src/repro/sanitize).
+test-sanitize:
+	REPRO_CHECKIFY=1 python -m pytest -x -q
 
 # ruff is a dev extra (requirements-dev.txt); the bare runtime image must
 # still pass `make test`, so a missing ruff degrades to a notice, not a
@@ -61,6 +67,9 @@ bench-serve-quick:
 
 bench-filters:
 	python -m benchmarks.run --suite filters
+
+bench-obs:
+	python -m benchmarks.run --suite obs
 
 dev-deps:
 	pip install -r requirements-dev.txt

@@ -1,0 +1,120 @@
+"""Traced-vs-untraced cascade throughput: the observability overhead pin.
+
+The cascade trace (``engine.run_cascade(trace=True)``) promises two things:
+``trace=False`` compiles to the byte-identical untraced program (so the
+default path pays nothing), and ``trace=True`` stays cheap — a few masked
+int32 reductions next to the distance compute.  This benchmark pins the
+second claim: one index, one query batch, a sweep of synthetic
+rank-threshold pruning levels spanning the paper's operating range
+(~0.65–0.98 pruning ratio), and at each level both engine strategies run
+traced and untraced.  The headline number is the compact path's traced
+overhead percentage (LF005 keeps the committed payload fresh; the <5%
+budget is asserted by the payload's ``max_compact_overhead_pct``).
+
+    PYTHONPATH=src python -m benchmarks.obs_bench \
+        --out experiments/obs_bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds, engine, tree
+from repro.data.series import make_query_set
+
+from . import common
+from .engine_bench import _rank_threshold_predictions
+
+
+def bench_obs(n: int = 20_000, m: int = 128, leaf_capacity: int = 128,
+              n_queries: int = 32, k: int = 5,
+              repeat: int = 10) -> Tuple[List[str], Dict]:
+    rng = np.random.default_rng(1)
+    S = rng.standard_normal((n, m), dtype=np.float32).cumsum(axis=1)
+    index = tree.build_dstree(S, leaf_capacity=leaf_capacity)
+    L = index.n_leaves
+    queries = make_query_set(S, n_queries, noise=0.3, seed=7)
+    q = jnp.asarray(queries)
+    d_lb = bounds.lower_bounds(index, q)
+    lb_np = np.asarray(d_lb)
+    series = jnp.asarray(index.series)
+    starts = jnp.asarray(index.leaf_start)
+    sizes = jnp.asarray(index.leaf_size)
+
+    def run(strategy, d_F, trace):
+        res = engine.run_cascade(series, starts, sizes, q, d_lb,
+                                 jnp.asarray(d_F), k=k,
+                                 max_leaf=index.max_leaf_size,
+                                 strategy=strategy, trace=trace)
+        jax.block_until_ready(res.topk_d)
+        return res
+
+    def timed(strategy, d_F, trace):
+        res = run(strategy, d_F, trace)            # warmup / compile
+        best = float("inf")                        # min-of-repeats: noise-
+        for _ in range(repeat):                    # robust overhead pin
+            t0 = time.perf_counter()
+            res = run(strategy, d_F, trace)
+            best = min(best, time.perf_counter() - t0)
+        return best, res
+
+    # rank thresholds spanning the paper's pruning operating range
+    ratios = (0.65, 0.80, 0.90, 0.98)
+    rows, payload = [], {"n": n, "m": m, "L": L, "k": k,
+                         "n_queries": n_queries, "repeat": repeat,
+                         "levels": []}
+    for target in ratios:
+        keep = max(int(round(L * (1.0 - target))), 1)
+        d_F = _rank_threshold_predictions(lb_np, keep)
+        rec = {"target_pruning": target, "keep": keep}
+        for strategy in ("scan", "compact"):
+            dt_off, res_off = timed(strategy, d_F, trace=False)
+            dt_on, res_on = timed(strategy, d_F, trace=True)
+            assert np.array_equal(np.asarray(res_off.topk_d),
+                                  np.asarray(res_on.topk_d)), strategy
+            tr = res_on.trace
+            pruned = (np.asarray(tr.pruned_box) + np.asarray(tr.pruned_seed)
+                      + np.asarray(tr.pruned_filter))
+            assert np.array_equal(
+                pruned, L - np.asarray(tr.survivors)
+                - np.asarray(tr.probed)), strategy
+            rec[f"{strategy}_ms"] = dt_off * 1e3
+            rec[f"{strategy}_traced_ms"] = dt_on * 1e3
+            rec[f"{strategy}_overhead_pct"] = \
+                100.0 * (dt_on - dt_off) / max(dt_off, 1e-12)
+        rec["pruning_ratio"] = 1.0 - float(
+            np.asarray(res_on.n_searched).mean()) / L
+        payload["levels"].append(rec)
+        rows.append(common.csv_line(
+            f"obs/prune{target:.2f}", rec["compact_traced_ms"] * 1e3,
+            f"compact={rec['compact_ms']:.2f}ms;"
+            f"traced={rec['compact_traced_ms']:.2f}ms;"
+            f"overhead={rec['compact_overhead_pct']:+.1f}%;"
+            f"scan_overhead={rec['scan_overhead_pct']:+.1f}%"))
+    payload["max_compact_overhead_pct"] = max(
+        lv["compact_overhead_pct"] for lv in payload["levels"])
+    rows.append(common.csv_line(
+        "obs/max_compact_overhead", payload["max_compact_overhead_pct"],
+        "budget=5%"))
+    return rows, payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/obs_bench.json")
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--repeat", type=int, default=5)
+    args = ap.parse_args()
+    rows, payload = bench_obs(n=args.n, n_queries=args.queries,
+                              repeat=args.repeat)
+    common.write_suite_payload(rows, payload, args.out)
+
+
+if __name__ == "__main__":
+    main()

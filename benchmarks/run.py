@@ -14,7 +14,9 @@ pairwise cascade execution), ``dist`` → dist_bench (scan vs fixed-width
 compact shard bodies on a 1×N host-device mesh), ``serve`` → serve_bench
 (micro-batched mixed-quality-target open-loop serving vs the homogeneous
 batch path), ``filters`` → filters_bench (per-filter vs fused filter
-inference kernels × weight dtype, with the roofline bound pin).
+inference kernels × weight dtype, with the roofline bound pin), ``obs`` →
+obs_bench (traced vs untraced cascade throughput across pruning ratios —
+the observability overhead pin).
 """
 from __future__ import annotations
 
@@ -24,7 +26,7 @@ import os
 import time
 
 from . import (build_bench, common, dist_bench, engine_bench, filters_bench,
-               kernels_bench, paper_tables, serve_bench, wallclock)
+               kernels_bench, obs_bench, paper_tables, serve_bench, wallclock)
 
 SUITES = {
     "build": (build_bench.bench_build, "experiments/build_bench.json"),
@@ -33,6 +35,7 @@ SUITES = {
     "serve": (serve_bench.bench_serve, "experiments/serve_bench.json"),
     "filters": (filters_bench.bench_filters,
                 "experiments/filters_bench.json"),
+    "obs": (obs_bench.bench_obs, "experiments/obs_bench.json"),
 }
 
 

@@ -30,6 +30,7 @@ import numpy as np
 
 from . import conformal, filter_training, filters, search, selection, tree
 from .flat_index import FlatIndex
+from ..obs import span
 
 
 @dataclasses.dataclass
@@ -112,13 +113,15 @@ def build_leafi(series: np.ndarray, config: LeaFiConfig = LeaFiConfig(),
 
     # 0. backbone index
     t0 = time.perf_counter()
-    if config.backbone == "dstree":
-        index = tree.build_dstree(series, config.leaf_capacity,
-                                  config.n_segments)
-    elif config.backbone == "isax":
-        index = tree.build_isax(series, config.leaf_capacity, config.word_len)
-    else:
-        raise ValueError(config.backbone)
+    with span("build.index", cat="build", backbone=config.backbone):
+        if config.backbone == "dstree":
+            index = tree.build_dstree(series, config.leaf_capacity,
+                                      config.n_segments)
+        elif config.backbone == "isax":
+            index = tree.build_isax(series, config.leaf_capacity,
+                                    config.word_len)
+        else:
+            raise ValueError(config.backbone)
     report["t_index_build"] = time.perf_counter() - t0
 
     # 1. SelectLeafNode (Alg. 3) — t_F/t_S from config (measured on real
@@ -141,8 +144,10 @@ def build_leafi(series: np.ndarray, config: LeaFiConfig = LeaFiConfig(),
     # 2-3. training data (global + local, two-pass collection)
     t0 = time.perf_counter()
     kdata, ktrain = jax.random.split(key)
-    data = filter_training.collect_training_data(
-        index, leaf_ids, config.n_global, config.n_local, kdata)
+    with span("build.collect", cat="build", n_filters=len(leaf_ids),
+              n_global=config.n_global, n_local=config.n_local):
+        data = filter_training.collect_training_data(
+            index, leaf_ids, config.n_global, config.n_local, kdata)
     report["t_collect"] = time.perf_counter() - t0
 
     # 4. TrainFilters — vmapped SGD on the proper-training split
@@ -156,8 +161,9 @@ def build_leafi(series: np.ndarray, config: LeaFiConfig = LeaFiConfig(),
         leaf_ids=data.leaf_ids)
     t0 = time.perf_counter()
     cfg_train = dataclasses.replace(config.train, hidden=config.hidden)
-    params, train_report = filter_training.train_filters(
-        index, train_data, cfg_train, ktrain)
+    with span("build.train", cat="build", n_filters=len(leaf_ids)):
+        params, train_report = filter_training.train_filters(
+            index, train_data, cfg_train, ktrain)
     report["t_train"] = time.perf_counter() - t0
     report["val_rmse_z"] = float(train_report["val_rmse_z"].mean())
 
@@ -168,18 +174,19 @@ def build_leafi(series: np.ndarray, config: LeaFiConfig = LeaFiConfig(),
 
     # 5. FitAutoTuners on the calibration split (Alg. 4)
     t0 = time.perf_counter()
-    calib = CalibSplit(queries=np.asarray(data.global_queries[-n_cal:]),
-                       d_lb=np.asarray(data.global_d_lb[-n_cal:]),
-                       d_L=np.asarray(data.global_d_L[-n_cal:]))
-    d_pred_cal = search.predictions_for_all_leaves(
-        index, params, leaf_ids, jnp.asarray(calib.queries), offsets=None,
-        filter_type=config.filter_type)
-    # unfiltered leaves must never filter-prune in the simulation: -inf
-    tuner, cal_report = conformal.fit_autotuners(
-        d_lb=calib.d_lb,
-        d_pred=np.asarray(d_pred_cal),
-        d_L=calib.d_L,
-        leaf_ids=leaf_ids)
+    with span("build.calibrate", cat="build", n_cal=n_cal):
+        calib = CalibSplit(queries=np.asarray(data.global_queries[-n_cal:]),
+                           d_lb=np.asarray(data.global_d_lb[-n_cal:]),
+                           d_L=np.asarray(data.global_d_L[-n_cal:]))
+        d_pred_cal = search.predictions_for_all_leaves(
+            index, params, leaf_ids, jnp.asarray(calib.queries), offsets=None,
+            filter_type=config.filter_type)
+        # unfiltered leaves must never filter-prune in the simulation: -inf
+        tuner, cal_report = conformal.fit_autotuners(
+            d_lb=calib.d_lb,
+            d_pred=np.asarray(d_pred_cal),
+            d_L=calib.d_L,
+            leaf_ids=leaf_ids)
     report["t_calibrate"] = time.perf_counter() - t0
     report["calib_best_quality"] = float(cal_report["rank_quality"].max())
 

@@ -38,6 +38,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import conformal, engine
+from ..obs.trace import CascadeTrace
 from .build import LeaFiIndex
 
 _INF = jnp.float32(jnp.inf)
@@ -230,7 +231,7 @@ def _shard_pruning_inputs(lo, hi, w1, b1, w2, b2, y_mean, y_std, offsets,
 
 def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
                   bsf0, strategy="compact", max_survivors=None,
-                  dist_impl=None, bsf_ub=None):
+                  dist_impl=None, bsf_ub=None, trace=False):
     """Cascade over this shard's leaves given a starting global bsf.
 
     Routes through the common engine's shard_map-safe forms:
@@ -244,14 +245,26 @@ def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
     tightens prune decisions but never enters ``bsf0`` or the returned bsf
     (both must stay witnessed distances — a pmin over unwitnessed bounds
     would corrupt the global answer).
+
+    ``trace=True`` (Python-level, shard_map-legal) appends a per-query
+    shard-local :class:`~repro.obs.trace.CascadeTrace` (``probed`` stays 0
+    here — the shard body accounts for its phase-1 probe itself).
     """
     if strategy == "scan":
+        if trace:
+            bsf, n_s, (n_box, n_seed, n_pf, n_rows) = engine.masked_bsf_scan(
+                sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
+                bsf0, bsf_ub=bsf_ub, trace=True)
+            zq = jnp.zeros_like(n_s)
+            return bsf, n_s, CascadeTrace(n_box, n_seed, n_pf, zq, n_s, zq,
+                                          n_rows)
         return engine.masked_bsf_scan(sh_series, sh_start, sh_size, lb, d_F,
                                       queries, max_leaf, bsf0, bsf_ub=bsf_ub)
     if strategy == "compact":
         return engine.compact_bsf_cascade(
             sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf, bsf0,
-            max_survivors=max_survivors, dist_impl=dist_impl, bsf_ub=bsf_ub)
+            max_survivors=max_survivors, dist_impl=dist_impl, bsf_ub=bsf_ub,
+            trace=trace)
     raise ValueError(f"unknown distributed shard strategy {strategy!r}")
 
 
@@ -285,7 +298,8 @@ def _make_shard_body(max_leaf: int, model_axis: str,
                      strategy: str = "compact",
                      max_survivors: Optional[int] = None,
                      dist_impl: Optional[str] = None,
-                     per_query_offsets: bool = False):
+                     per_query_offsets: bool = False,
+                     trace: bool = False):
     """The per-shard two-phase search body (runs under shard_map).
 
     Phase 1 probes each query's most promising local leaf (engine probe) and
@@ -301,7 +315,27 @@ def _make_shard_body(max_leaf: int, model_axis: str,
     targets, with the per-leaf offsets gathered onto each shard's local
     slots.  Padding slots gather row L (every (Q, L+…) gather is clamped to
     the last real leaf) but ``has_filter=False`` already disables them.
+
+    With ``trace=True`` the body returns a third output — the per-query
+    :class:`~repro.obs.trace.CascadeTrace` psum'd over the model axis:
+    pruned-leaf attribution and survivors aggregate across shards,
+    ``probed`` counts one phase-1 probe per shard, and ``distances``
+    includes each shard's probe rows.  Global accounting over S shards of P
+    leaf slots: ``Σ pruned = S·P − survivors`` (the probe leaves are also
+    cascade-accounted per shard) with ``probed == S``.
     """
+
+    def _traced_reduce(bsf, n_s, tr, lb, size):
+        # each shard's phase-1 probe pays one leaf pass: argmin over the
+        # padding-masked lb (same choice probe_best_leaf makes).
+        probe_rows = size[lb.argmin(axis=1)].astype(jnp.int32)
+        tr = tr._replace(probed=tr.probed + 1,
+                         distances=tr.distances + probe_rows)
+        tr = jax.tree.map(lambda x: jax.lax.psum(x, model_axis), tr)
+        nn = jax.lax.pmin(bsf, model_axis)                      # collective 2
+        total_searched = jax.lax.psum(n_s, model_axis)
+        return (nn[None], total_searched[None],
+                jax.tree.map(lambda x: x[None], tr))
 
     def search_fn(series, start, size, lo, hi, w1, b1, w2, b2, y_mean,
                   y_std, offsets, has_filter, queries, qcoords):
@@ -323,6 +357,13 @@ def _make_shard_body(max_leaf: int, model_axis: str,
         bsf0 = jax.lax.pmin(bsf_local, model_axis)              # collective 1
 
         # phase 2: full cascade against the global bsf
+        if trace:
+            bsf, n_s, tr = _local_search(series, start, size, lb, d_F,
+                                         queries, max_leaf, bsf0,
+                                         strategy=strategy,
+                                         max_survivors=max_survivors,
+                                         dist_impl=dist_impl, trace=True)
+            return _traced_reduce(bsf, n_s, tr, lb, size)
         bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
                                  max_leaf, bsf0, strategy=strategy,
                                  max_survivors=max_survivors,
@@ -359,6 +400,14 @@ def _make_shard_body(max_leaf: int, model_axis: str,
 
         # warm bound tightens prune decisions only — never folded into bsf0
         # (the pmin'd bsf must stay a witnessed distance on every shard).
+        if trace:
+            bsf, n_s, tr = _local_search(series, start, size, lb, d_F,
+                                         queries, max_leaf, bsf0,
+                                         strategy=strategy,
+                                         max_survivors=max_survivors,
+                                         dist_impl=dist_impl, bsf_ub=bsf_ub,
+                                         trace=True)
+            return _traced_reduce(bsf, n_s, tr, lb, size)
         bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
                                  max_leaf, bsf0, strategy=strategy,
                                  max_survivors=max_survivors,
@@ -396,7 +445,8 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
                             max_survivors: Optional[int] = None,
                             dist_impl: Optional[str] = None,
                             per_query_offsets: bool = False,
-                            donate: bool = False):
+                            donate: bool = False,
+                            trace: bool = False):
     """Build the jitted multi-chip search step over ``mesh``.
 
     Returns fn(queries (Q, m)) → (nn_dist (Q,), total_searched (Q,)), where
@@ -421,13 +471,23 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
     program (per-query mode only) so steady-state pipelined serving re-uses
     their device allocations instead of growing the arena.  Skipped on CPU,
     where XLA ignores donation and warns.
+
+    trace: the returned fn additionally yields a per-query
+    :class:`~repro.obs.trace.CascadeTrace` psum'd across shards (see
+    ``_make_shard_body``); the nn/searched outputs are bitwise those of
+    the untraced program.
     """
     max_leaf = sharded.max_leaf
     spec_idx = P(model_axis)
     spec_q = P(data_axes)
     search_fn = _make_shard_body(max_leaf, model_axis, strategy,
                                  max_survivors, dist_impl,
-                                 per_query_offsets=per_query_offsets)
+                                 per_query_offsets=per_query_offsets,
+                                 trace=trace)
+    spec_out = P(model_axis, *data_axes)
+    out_specs = (spec_out, spec_out)
+    if trace:
+        out_specs = out_specs + (CascadeTrace(*((spec_out,) * 7)),)
 
     idx_args = (sharded.series, sharded.leaf_start, sharded.leaf_size,
                 sharded.lb_lo, sharded.lb_hi, sharded.w1, sharded.b1,
@@ -444,7 +504,7 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
             search_fn, mesh=mesh,
             in_specs=(spec_idx,) * len(idx_pq)
             + (spec_q, spec_q, P(data_axes, None), spec_q),
-            out_specs=(P(model_axis, *data_axes), P(model_axis, *data_axes)),
+            out_specs=out_specs,
             check_rep=False,
         )
 
@@ -453,8 +513,12 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
                               length=sharded.length, kind=sharded.kind,
                               qscale=sharded.qscale)
             qcoords = sh.query_coords(queries)
-            nn, total_searched = smapped(*idx_pq, queries, qcoords,
-                                         qoffsets, bsf_ub)
+            out = smapped(*idx_pq, queries, qcoords, qoffsets, bsf_ub)
+            if trace:
+                nn, total_searched, tr = out
+                return (nn[0], total_searched[0],
+                        jax.tree.map(lambda x: x[0], tr))
+            nn, total_searched = out
             return nn[0], total_searched[0]
 
         donate_kw = {}
@@ -466,7 +530,7 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
     smapped = shard_map(
         search_fn, mesh=mesh,
         in_specs=(spec_idx,) * len(idx_args) + (spec_q, spec_q),
-        out_specs=(P(model_axis, *data_axes), P(model_axis, *data_axes)),
+        out_specs=out_specs,
         check_rep=False,
     )
 
@@ -476,9 +540,14 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
                           length=sharded.length, kind=sharded.kind,
                           qscale=sharded.qscale)
         qcoords = sh.query_coords(queries)
-        nn, total_searched = smapped(*idx_args, queries, qcoords)
+        out = smapped(*idx_args, queries, qcoords)
         # collectives replicate both outputs across the model axis; row 0 is
         # the global nn and the all-shard total searched count per query
+        if trace:
+            nn, total_searched, tr = out
+            return (nn[0], total_searched[0],
+                    jax.tree.map(lambda x: x[0], tr))
+        nn, total_searched = out
         return nn[0], total_searched[0]
 
     return run, idx_args, spec_idx, spec_q

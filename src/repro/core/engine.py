@@ -97,6 +97,7 @@ import numpy as np
 
 from .. import sanitize
 from ..kernels.l2_scan import ops as l2_ops
+from ..obs.trace import CascadeTrace, select as _trace_select, zero_trace
 
 _INF = jnp.float32(jnp.inf)
 
@@ -116,6 +117,7 @@ class EngineResult:
     n_pruned_lb: jnp.ndarray     # (Q,)
     n_pruned_filter: jnp.ndarray  # (Q,)
     n_computed: jnp.ndarray      # (Q,) leaves distance-computed (≥ n_searched)
+    trace: Optional[CascadeTrace] = None  # run_cascade(trace=True) flight data
 
 
 def _next_pow2(n: int) -> int:
@@ -128,9 +130,9 @@ def _next_pow2(n: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_leaf"))
+@functools.partial(jax.jit, static_argnames=("k", "max_leaf", "trace"))
 def _scan_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
-                  bsf_ub, k, max_leaf):
+                  bsf_ub, k, max_leaf, trace=False):
     order = jnp.argsort(d_lb, axis=1)
     row_ids = jnp.arange(max_leaf)
 
@@ -163,6 +165,42 @@ def _scan_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
                     n_plb + p_lb.astype(jnp.int32),
                     n_pf + p_f.astype(jnp.int32)), None
 
+        def step_traced(carry, leaf):
+            # mirrors `step` exactly (the bitwise parity test in
+            # tests/test_engine.py enforces the mirror), plus three
+            # masked-sum counters: box/seed split of the lb prune and the
+            # exact distance rows consulted.
+            topk_d, topk_i, n_s, n_plb, n_pf, n_box, n_seed, n_rows = carry
+            bsf = topk_d[-1]
+            p_lb = lb_row[leaf] > jnp.minimum(bsf, ub)
+            p_box = lb_row[leaf] > bsf
+            p_seed = jnp.logical_and(p_lb, ~p_box)
+            p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
+            pruned = p_lb | p_f
+            start = leaf_start[leaf]
+            slab = jax.lax.dynamic_slice_in_dim(series, start, max_leaf, 0)
+            diff = slab - q[None, :]
+            d = jnp.sqrt((diff * diff).sum(-1))
+            d = jnp.where((row_ids < leaf_size[leaf]) & ~pruned, d, _INF)
+            ids = (start + row_ids).astype(jnp.int32)
+            alld = jnp.concatenate([topk_d, d])
+            alli = jnp.concatenate([topk_i, ids])
+            neg_top, arg = jax.lax.top_k(-alld, k)
+            rows = jnp.where(pruned, 0, leaf_size[leaf]).astype(jnp.int32)
+            return (-neg_top, alli[arg],
+                    n_s + (~pruned).astype(jnp.int32),
+                    n_plb + p_lb.astype(jnp.int32),
+                    n_pf + p_f.astype(jnp.int32),
+                    n_box + p_box.astype(jnp.int32),
+                    n_seed + p_seed.astype(jnp.int32),
+                    n_rows + rows), None
+
+        if trace:
+            init = (jnp.full((k,), _INF), jnp.full((k,), -1, jnp.int32),
+                    jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                    jnp.int32(0), jnp.int32(0), jnp.int32(0))
+            out, _ = jax.lax.scan(step_traced, init, order_row)
+            return out
         init = (jnp.full((k,), _INF), jnp.full((k,), -1, jnp.int32),
                 jnp.int32(0), jnp.int32(0), jnp.int32(0))
         (td, ti, n_s, n_plb, n_pf), _ = jax.lax.scan(step, init, order_row)
@@ -213,9 +251,9 @@ def _bucket_leaf_topk(series, leaf_start, leaf_size, queries_b, leaf_b,
     return jax.lax.fori_loop(0, C // chunk, step, init)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
+@functools.partial(jax.jit, static_argnames=("k", "trace"))
 def _replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
-                    leaf_valid=None, bsf_ub=None):
+                    leaf_valid=None, bsf_ub=None, trace=False):
     """Jitted body of :func:`replay_cascade` — see the wrapper's docstring.
 
     Identical decision logic and merge arithmetic to ``_scan_cascade`` — the
@@ -266,6 +304,35 @@ def _replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
                     n_plb + p_lb.astype(jnp.int32),
                     n_pf + p_f.astype(jnp.int32)), None
 
+        def step_traced(carry, leaf):
+            # mirrors `step` plus the box/seed split of the lb prune
+            # (invalid shard-padding leaves count as box-pruned).
+            topk_d, topk_i, n_s, n_plb, n_pf, n_box, n_seed = carry
+            bsf = topk_d[-1]
+            p_lb = jnp.logical_or(lb_row[leaf] > jnp.minimum(bsf, ub),
+                                  invalid[leaf])
+            p_box = jnp.logical_or(lb_row[leaf] > bsf, invalid[leaf])
+            p_seed = jnp.logical_and(p_lb, ~p_box)
+            p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
+            pruned = p_lb | p_f
+            vals = jnp.where(pruned, _INF, ld[leaf])
+            alld = jnp.concatenate([topk_d, vals])
+            alli = jnp.concatenate([topk_i, li[leaf]])
+            neg_top, arg = jax.lax.top_k(-alld, k)
+            return (-neg_top, alli[arg],
+                    n_s + (~pruned).astype(jnp.int32),
+                    n_plb + p_lb.astype(jnp.int32),
+                    n_pf + p_f.astype(jnp.int32),
+                    n_box + p_box.astype(jnp.int32),
+                    n_seed + p_seed.astype(jnp.int32)), None
+
+        if trace:
+            init = (jnp.full((k,), _INF).at[0].set(b0),
+                    jnp.full((k,), -1, jnp.int32),
+                    jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                    jnp.int32(0), jnp.int32(0))
+            out, _ = jax.lax.scan(step_traced, init, order_row)
+            return out
         init = (jnp.full((k,), _INF).at[0].set(b0),
                 jnp.full((k,), -1, jnp.int32),
                 jnp.int32(0), jnp.int32(0), jnp.int32(0))
@@ -277,7 +344,7 @@ def _replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
 
 
 def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
-                   leaf_valid=None, bsf_ub=None):
+                   leaf_valid=None, bsf_ub=None, trace=False):
     """Exact sequential-cascade replay over per-leaf top-k summaries.
 
     The single copy of the bsf cascade's decision logic (see
@@ -288,10 +355,16 @@ def replay_cascade(leaf_d, leaf_i, d_lb, d_F, order, k, bsf0=None,
     (``compact_bsf_cascade``) runs it with k=1 from a collective bsf seed.
     Under ``REPRO_CHECKIFY=1`` eager calls run checkify-instrumented
     (``repro.sanitize``); traced calls pass straight through.
+
+    ``trace=True`` (static) appends two ``(Q,)`` counters — the box/seed
+    split of ``n_pruned_lb`` at the *replay* stage (``repro.obs.trace``
+    module docstring explains how this differs from the mask-stage
+    attribution ``run_cascade(trace=True)`` reports) — and is jit-legal;
+    ``trace=False`` lowers to the byte-identical program.
     """
     return sanitize.call(_replay_cascade, leaf_d, leaf_i, d_lb, d_F, order,
                          k=k, bsf0=bsf0, leaf_valid=leaf_valid,
-                         bsf_ub=bsf_ub)
+                         bsf_ub=bsf_ub, trace=trace)
 
 
 def _pow2_chunk(per_leaf_bytes: int, cap: int) -> int:
@@ -349,8 +422,38 @@ def _union_leaf_topk(series, leaf_start, leaf_size, queries_b, leaf_u,
     return jax.lax.fori_loop(0, U // chunk, step, init)
 
 
+@jax.jit
+def _compact_trace_stats(mask, d_lb, bsf0, bsf0m, leaf_size, leaf0):
+    """The compact path's whole mask-stage CascadeTrace, as ONE program.
+
+    The compact cascade is host-orchestrated, so writing these ~20 tiny
+    ops eagerly dispatches each one separately — a constant ~ms tax that
+    blows the obs bench's <5% traced-overhead budget.  Fused here they
+    cost one dispatch next to the (Q, L) mask math they mirror.
+    """
+    not_m = ~mask
+    p_box = not_m & (d_lb > bsf0[:, None])
+    p_seed = not_m & ~p_box & (d_lb > bsf0m[:, None])
+    p_filt = not_m & ~p_box & ~p_seed
+    sizes = leaf_size.astype(jnp.int32)
+    # distance rows actually paid: the phase-1 probe pass plus every
+    # gathered candidate row (the probe leaf is gathered again in its
+    # bucket, then overwritten — both passes are real compute).
+    dist_rows = (sizes[leaf0[:, 0]]
+                 + jnp.where(mask, sizes[None, :], 0).sum(axis=1))
+    Q = mask.shape[0]
+    return CascadeTrace(
+        pruned_box=p_box.sum(axis=1).astype(jnp.int32),
+        pruned_seed=p_seed.sum(axis=1).astype(jnp.int32),
+        pruned_filter=p_filt.sum(axis=1).astype(jnp.int32),
+        probed=jnp.ones((Q,), jnp.int32),
+        survivors=(mask.sum(axis=1) - 1).astype(jnp.int32),
+        overflow=jnp.zeros((Q,), jnp.int32),
+        distances=dist_rows)
+
+
 def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
-                     bsf_ub, k, max_leaf, dist_impl):
+                     bsf_ub, k, max_leaf, dist_impl, trace=False):
     Q, m = queries.shape
     L = leaf_start.shape[0]
     kk = min(k, max_leaf)
@@ -375,6 +478,16 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
     bsf0m = jnp.minimum(bsf0, bsf_ub)
     mask = (d_lb <= bsf0m[:, None]) & (d_F <= bsf0[:, None])
     mask = mask.at[jnp.arange(Q), leaf0[:, 0]].set(True)
+
+    if trace:
+        # mask-stage attribution: partition the non-survivors by the first
+        # bound that excluded them (the probe leaf is in `mask`, so it is
+        # excluded from the partition and lands in `probed` instead).
+        # Partition is exact by construction: ~mask ⇒ d_lb > bsf0m or
+        # d_F > bsf0; box takes d_lb > bsf0, seed takes bsf0 ≥ d_lb > bsf0m
+        # (excluded only by the warm-start bound), filter takes the rest.
+        aux = _compact_trace_stats(mask, d_lb, bsf0, bsf0m, leaf_size, leaf0)
+        dist_rows = aux.distances
 
     # -- phase 2: bucket queries by survivor count, compact leaf lists ------
     counts = np.asarray(mask.sum(axis=1))
@@ -413,6 +526,12 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
                 continue                                 # all-padding bucket
             # every bucket query pays distance compute for the whole union
             computed[qis] = uni.size
+            if trace:
+                qis_j = jnp.asarray(qis)
+                sizes = leaf_size.astype(jnp.int32)
+                uni_rows = sizes[jnp.asarray(uni)].sum()
+                dist_rows = dist_rows.at[qis_j].set(
+                    sizes[leaf0[qis_j, 0]] + uni_rows)
             chunk = _union_chunk_for(Qb, uni.size, max_leaf, m)
             Up = max(_next_pow2(uni.size), chunk)
             leaf_u = jnp.asarray(np.pad(uni, (0, Up - uni.size),
@@ -452,6 +571,10 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
     # -- phase 3: exact cascade replay over the per-leaf summaries ----------
     td, ti, n_s, n_plb, n_pf = replay_cascade(
         leaf_d, leaf_i, d_lb, d_F, order, k=k, bsf_ub=bsf_ub)
+    if trace:
+        if dist_rows is not aux.distances:       # pairwise union accounting
+            aux = aux._replace(distances=dist_rows)
+        return td, ti, n_s, n_plb, n_pf, jnp.asarray(computed), aux
     return td, ti, n_s, n_plb, n_pf, jnp.asarray(computed)
 
 
@@ -473,6 +596,7 @@ def run_cascade(
     strategy: str = "auto",
     dist_impl: Optional[str] = None,
     bsf_ub: Optional[jnp.ndarray] = None,
+    trace: bool = False,
 ) -> EngineResult:
     """Batched top-k leaf-cascade search over precomputed pruning inputs.
 
@@ -502,23 +626,45 @@ def run_cascade(
     filtered mode the conformal recall contract is preserved because a leaf
     with lb > ub holds no true top-k member.  +inf entries are the no-op
     seed.
+    trace: static flag; True additionally returns a per-query
+    :class:`~repro.obs.trace.CascadeTrace` on ``EngineResult.trace``
+    (which bound pruned which leaf, survivors, exact distance rows paid —
+    see ``repro.obs.trace`` for the attribution semantics and the
+    accounting identity).  Results are bitwise-identical either way, and
+    ``trace=False`` lowers to the byte-identical program (the flag is a
+    Python-level branch on extra masked-sum counters only).
     """
     if strategy == "auto":
         strategy = "compact"
     ub = (jnp.full(queries.shape[0], _INF) if bsf_ub is None
           else jnp.asarray(bsf_ub, jnp.float32))
+    aux = None
     if strategy == "scan":
-        td, ti, n_s, n_plb, n_pf = sanitize.call(
-            _scan_cascade, series, leaf_start, leaf_size, queries, d_lb,
-            d_F, ub, k=k, max_leaf=max_leaf)
+        if trace:
+            (td, ti, n_s, n_plb, n_pf, n_box, n_seed,
+             n_rows) = sanitize.call(
+                _scan_cascade, series, leaf_start, leaf_size, queries,
+                d_lb, d_F, ub, k=k, max_leaf=max_leaf, trace=True)
+            zeros = jnp.zeros(queries.shape[0], jnp.int32)
+            aux = CascadeTrace(n_box, n_seed, n_pf, zeros, n_s, zeros,
+                               n_rows)
+        else:
+            td, ti, n_s, n_plb, n_pf = sanitize.call(
+                _scan_cascade, series, leaf_start, leaf_size, queries,
+                d_lb, d_F, ub, k=k, max_leaf=max_leaf)
         n_c = jnp.full(queries.shape[0], leaf_start.shape[0], jnp.int32)
     elif strategy == "compact":
-        td, ti, n_s, n_plb, n_pf, n_c = _compact_cascade(
-            series, leaf_start, leaf_size, queries, d_lb, d_F, ub,
-            k=k, max_leaf=max_leaf, dist_impl=dist_impl)
+        if trace:
+            td, ti, n_s, n_plb, n_pf, n_c, aux = _compact_cascade(
+                series, leaf_start, leaf_size, queries, d_lb, d_F, ub,
+                k=k, max_leaf=max_leaf, dist_impl=dist_impl, trace=True)
+        else:
+            td, ti, n_s, n_plb, n_pf, n_c = _compact_cascade(
+                series, leaf_start, leaf_size, queries, d_lb, d_F, ub,
+                k=k, max_leaf=max_leaf, dist_impl=dist_impl)
     else:
         raise ValueError(f"unknown engine strategy {strategy!r}")
-    return EngineResult(td, ti, n_s, n_plb, n_pf, n_c)
+    return EngineResult(td, ti, n_s, n_plb, n_pf, n_c, aux)
 
 
 # ---------------------------------------------------------------------------
@@ -658,7 +804,7 @@ def probe_best_leaf(series, leaf_start, leaf_size, lb, queries, max_leaf):
 
 
 def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
-                    max_leaf, bsf0, bsf_ub=None):
+                    max_leaf, bsf0, bsf_ub=None, trace=False):
     """Best-so-far cascade over all leaves from a seed bsf → (bsf, n_s).
 
     The 1-NN, distance-only form of ``strategy="scan"``; leaves with size 0
@@ -669,6 +815,11 @@ def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
     contract) — it tightens the lb test only, never the filter test.  Unlike
     ``bsf0`` it never enters the bsf carry — the returned bsf is always a
     real (witnessed) distance or the seed, never the bound.
+
+    ``trace=True`` (a Python-level flag — still jit/shard_map-safe)
+    appends a ``(n_box, n_seed, n_filter, n_rows)`` tuple of ``(Q,)``
+    step-level counters (box/seed split of the lb prune, filter prunes,
+    distance rows consulted); padding leaves count as box-pruned.
     """
     row_ids = jnp.arange(max_leaf)
     order = jnp.argsort(lb, axis=1)
@@ -691,11 +842,44 @@ def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
             bsf = jnp.minimum(bsf, d.min())
             return (bsf, n_s + (~pruned).astype(jnp.int32)), None
 
+        def step_traced(carry, leaf):
+            # mirrors `step` plus masked-sum trace counters.
+            bsf, n_s, n_box, n_seed, n_pf, n_rows = carry
+            valid = leaf_size[leaf] > 0
+            p_lb = jnp.logical_or(lb_row[leaf] > jnp.minimum(bsf, ub),
+                                  ~valid)
+            p_box = jnp.logical_or(lb_row[leaf] > bsf, ~valid)
+            p_seed = jnp.logical_and(p_lb, ~p_box)
+            p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
+            pruned = p_lb | p_f
+            slab = jax.lax.dynamic_slice_in_dim(
+                series, leaf_start[leaf], max_leaf, 0)
+            diff = slab - q[None, :]
+            d = jnp.sqrt((diff * diff).sum(-1))
+            d = jnp.where((row_ids < leaf_size[leaf]) & ~pruned, d, _INF)
+            bsf = jnp.minimum(bsf, d.min())
+            rows = jnp.where(pruned, 0, leaf_size[leaf]).astype(jnp.int32)
+            return (bsf, n_s + (~pruned).astype(jnp.int32),
+                    n_box + p_box.astype(jnp.int32),
+                    n_seed + p_seed.astype(jnp.int32),
+                    n_pf + p_f.astype(jnp.int32),
+                    n_rows + rows), None
+
+        if trace:
+            init = (bsf_init, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                    jnp.int32(0), jnp.int32(0))
+            (bsf, n_s, n_box, n_seed, n_pf, n_rows), _ = jax.lax.scan(
+                step_traced, init, order_row)
+            return bsf, n_s, n_box, n_seed, n_pf, n_rows
         (bsf, n_s), _ = jax.lax.scan(step, (bsf_init, jnp.int32(0)),
                                      order_row)
         return bsf, n_s
 
-    return jax.vmap(per_query)(queries, lb, d_F, order, bsf0, bsf_ub)
+    out = jax.vmap(per_query)(queries, lb, d_F, order, bsf0, bsf_ub)
+    if trace:
+        bsf, n_s, n_box, n_seed, n_pf, n_rows = out
+        return bsf, n_s, (n_box, n_seed, n_pf, n_rows)
+    return out
 
 
 def default_max_survivors(n_leaves: int) -> int:
@@ -744,7 +928,7 @@ def tuned_max_survivors(survivor_counts, n_leaves: int,
 
 def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
                         max_leaf, bsf0, *, max_survivors=None,
-                        dist_impl=None, bsf_ub=None):
+                        dist_impl=None, bsf_ub=None, trace=False):
     """Fixed-width survivor compaction form of ``masked_bsf_scan``.
 
     Same contract — 1-NN bsf cascade from a seed ``bsf0`` over all leaves,
@@ -773,6 +957,15 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
     masked scan (one ``lax.cond`` over the batch), so semantics stay exact
     at any ``max_survivors``; the default capacity is
     :func:`default_max_survivors` of the leaf-slot count.
+
+    ``trace=True`` (a Python-level flag, shard_map-legal) appends a
+    per-query :class:`~repro.obs.trace.CascadeTrace`: mask-stage
+    box/seed/filter attribution (shard-padding leaves count as
+    box-pruned), ``survivors`` entering the candidate pass, the
+    ``overflow`` fallback flag, and distance rows paid; overflow queries
+    carry the scan fallback's step-level counters instead.  Results are
+    bitwise-identical either way; ``trace=False`` lowers to the
+    byte-identical program.
     """
     Q, m = queries.shape
     P = leaf_start.shape[0]
@@ -829,10 +1022,45 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
     # per query; the cond keeps the scan off the hot path when nobody
     # overflows.
     overflow = n_surv > C
-    bsf_s, ns_s = jax.lax.cond(
+    if not trace:
+        bsf_s, ns_s = jax.lax.cond(
+            overflow.any(),
+            lambda: masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F,
+                                    queries, max_leaf, bsf0, bsf_ub),
+            lambda: (jnp.full((Q,), _INF), jnp.zeros((Q,), jnp.int32)))
+        return (jnp.where(overflow, bsf_s, bsf_c),
+                jnp.where(overflow, ns_s, ns_c))
+
+    zq = jnp.zeros((Q,), jnp.int32)
+    bsf_s, ns_s, scan_tr = jax.lax.cond(
         overflow.any(),
         lambda: masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F,
-                                queries, max_leaf, bsf0, bsf_ub),
-        lambda: (jnp.full((Q,), _INF), jnp.zeros((Q,), jnp.int32)))
+                                queries, max_leaf, bsf0, bsf_ub,
+                                trace=True),
+        lambda: (jnp.full((Q,), _INF), jnp.zeros((Q,), jnp.int32),
+                 (zq, zq, zq, zq)))
+
+    # mask-stage attribution of the non-survivors (exact partition —
+    # ~survive ⇒ invalid, lb > bsf0m, or d_F > bsf0; invalid/padding leaves
+    # land in box because their lb was forced to +inf above).
+    not_s = ~survive
+    p_box = not_s & ((lb > bsf0[:, None]) | ~valid[None, :])
+    p_seed = not_s & ~p_box & (lb > bsf0m[:, None])
+    p_filt = not_s & ~p_box & ~p_seed
+    sizes = leaf_size.astype(jnp.int32)
+    compact_rows = jnp.where(survive, sizes[None, :], 0).sum(axis=1)
+    s_box, s_seed, s_pf, s_rows = scan_tr
+    compact_tr = CascadeTrace(
+        pruned_box=p_box.sum(axis=1).astype(jnp.int32),
+        pruned_seed=p_seed.sum(axis=1).astype(jnp.int32),
+        pruned_filter=p_filt.sum(axis=1).astype(jnp.int32),
+        probed=zq, survivors=n_surv, overflow=zq,
+        distances=compact_rows)
+    scan_as_tr = CascadeTrace(
+        pruned_box=s_box, pruned_seed=s_seed, pruned_filter=s_pf,
+        probed=zq, survivors=ns_s, overflow=jnp.ones((Q,), jnp.int32),
+        distances=s_rows)
+    aux = _trace_select(overflow, scan_as_tr, compact_tr)
     return (jnp.where(overflow, bsf_s, bsf_c),
-            jnp.where(overflow, ns_s, ns_c))
+            jnp.where(overflow, ns_s, ns_c),
+            aux)

@@ -32,6 +32,7 @@ from . import engine, filters, summaries
 from .flat_index import FlatIndex
 from . import bounds as bounds_mod
 from ..kernels.l2_scan import ops as l2_ops
+from ..obs import span
 
 
 # ---------------------------------------------------------------------------
@@ -216,12 +217,17 @@ def collect_training_data(index: FlatIndex, leaf_ids: np.ndarray,
                           dist_impl: Optional[str] = None) -> TrainingData:
     """Alg. 1 steps 2–3 on the engine's leaf-slab layer (batched passes)."""
     kg, kl = jax.random.split(key)
-    gq = make_noisy_queries(np.asarray(index.series[: index.n_series]),
-                            n_global, kg, noise_low, noise_high)
-    d_L = np.asarray(nodewise_nn_distances(index, jnp.asarray(gq), dist_impl))
-    d_lb = np.asarray(bounds_mod.lower_bounds(index, jnp.asarray(gq)))
-    lq = make_local_queries(index, leaf_ids, n_local, kl, noise_low, noise_high)
-    ld = local_nn_distances(index, lq, leaf_ids, dist_impl)
+    with span("collect.global", cat="build", n_global=n_global):
+        gq = make_noisy_queries(np.asarray(index.series[: index.n_series]),
+                                n_global, kg, noise_low, noise_high)
+        d_L = np.asarray(nodewise_nn_distances(index, jnp.asarray(gq),
+                                               dist_impl))
+        d_lb = np.asarray(bounds_mod.lower_bounds(index, jnp.asarray(gq)))
+    with span("collect.local", cat="build", n_local=n_local,
+              n_filters=len(leaf_ids)):
+        lq = make_local_queries(index, leaf_ids, n_local, kl,
+                                noise_low, noise_high)
+        ld = local_nn_distances(index, lq, leaf_ids, dist_impl)
     return TrainingData(gq, d_L, d_lb, lq, ld, np.asarray(leaf_ids))
 
 
@@ -363,10 +369,11 @@ def train_filters(index: FlatIndex, data: TrainingData,
     vl = np.zeros(n_l, np.float32)
     vl[rng.choice(n_l, max(int(n_l * cfg.val_fraction), 1), replace=False)] = 1
 
-    best, best_val = _train_filters_jit(
-        params, jnp.asarray(data.global_queries), ygz,
-        jnp.asarray(data.local_queries), ylz,
-        jnp.asarray(vg), jnp.asarray(vl), cfg)
+    with span("train.sgd", cat="build", n_filters=F, epochs=cfg.epochs):
+        best, best_val = _train_filters_jit(
+            params, jnp.asarray(data.global_queries), ygz,
+            jnp.asarray(data.local_queries), ylz,
+            jnp.asarray(vg), jnp.asarray(vl), cfg)
     params.update(best)
     report = {"val_rmse_z": np.asarray(jnp.sqrt(best_val))}
     return params, report

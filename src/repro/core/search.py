@@ -54,6 +54,9 @@ class SearchResult:
     # strategy; the phase-1 survivor superset on the compact strategy, the
     # bucket's survivor union under dist_impl="pairwise")
     computed: Optional[np.ndarray] = None
+    # search_batched(trace=True): host-side dict of the engine's per-query
+    # CascadeTrace fields (repro.obs.trace.to_numpy), else None
+    trace: Optional[dict] = None
 
     @property
     def pruning_ratio(self) -> np.ndarray:
@@ -85,6 +88,7 @@ class PendingSearch:
 
     def result(self) -> SearchResult:
         """Materialize to a :class:`SearchResult` (blocks on the device)."""
+        from ..obs import trace as obs_trace
         r = self.raw
         ids_sorted = np.asarray(r.topk_i)
         valid = ids_sorted >= 0
@@ -95,7 +99,8 @@ class PendingSearch:
             searched=np.asarray(r.n_searched),
             pruned_lb=np.asarray(r.n_pruned_lb),
             pruned_filter=np.asarray(r.n_pruned_filter),
-            n_leaves=self.n_leaves, computed=np.asarray(r.n_computed))
+            n_leaves=self.n_leaves, computed=np.asarray(r.n_computed),
+            trace=(None if r.trace is None else obs_trace.to_numpy(r.trace)))
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +172,7 @@ def search_batched_async(
     strategy: str = "auto",
     dist_impl: Optional[str] = None,
     bsf_ub: np.ndarray | None = None,
+    trace: bool = False,
 ) -> PendingSearch:
     """Dispatch a batched LeaFi search without blocking on the device.
 
@@ -176,6 +182,11 @@ def search_batched_async(
     (``engine.run_cascade``'s warm-start seed — tightens pruning, never
     changes the answer).  Returns a :class:`PendingSearch` holding device
     arrays; call ``.result()`` to materialize.
+
+    ``trace=True`` threads the engine's :class:`repro.obs.CascadeTrace`
+    through the cascade (per-query pruning attribution); the materialized
+    ``SearchResult.trace`` is its numpy dict.  Results stay bitwise
+    identical to ``trace=False``.
     """
     queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
     d_lb = bounds_mod.lower_bounds(index, queries)                  # (Q, L)
@@ -204,7 +215,7 @@ def search_batched_async(
         jnp.asarray(index.series), jnp.asarray(index.leaf_start),
         jnp.asarray(index.leaf_size), queries, d_lb, d_F,
         k=k, max_leaf=index.max_leaf_size, strategy=strategy,
-        dist_impl=dist_impl, bsf_ub=bsf_ub)
+        dist_impl=dist_impl, bsf_ub=bsf_ub, trace=trace)
     return PendingSearch(raw=res, order=np.asarray(index.order),
                          n_series=index.n_series, n_leaves=index.n_leaves)
 
@@ -224,6 +235,7 @@ def search_batched(
     strategy: str = "auto",
     dist_impl: Optional[str] = None,
     bsf_ub: np.ndarray | None = None,
+    trace: bool = False,
 ) -> SearchResult:
     """Batched LeaFi search.  Exact when filters are disabled.
 
@@ -242,7 +254,7 @@ def search_batched(
         index, queries, k=k, filter_params=filter_params, leaf_ids=leaf_ids,
         tuner=tuner, quality_target=quality_target, use_filters=use_filters,
         use_kernel=use_kernel, filter_type=filter_type, strategy=strategy,
-        dist_impl=dist_impl, bsf_ub=bsf_ub).result()
+        dist_impl=dist_impl, bsf_ub=bsf_ub, trace=trace).result()
 
 
 def search_batched_grouped(

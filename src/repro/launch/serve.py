@@ -36,6 +36,12 @@ from ..models import transformer
 
 def _print_serve_report(report: dict, label: str = "") -> None:
     tag = f" [{label}]" if label else ""
+    if report["n_requests"] == 0:
+        # zero completions (e.g. an empty trace): throughput/makespan are
+        # absent and every windowed stat is NaN — report that, don't crash
+        print(f"served{tag} 0 requests in {report['n_batches']} batches "
+              f"(no completions)")
+        return
     print(f"served{tag} {report['n_requests']} requests in "
           f"{report['n_batches']} batches "
           f"(padding {report['padding_fraction']:.1%}): "
@@ -54,7 +60,15 @@ def serve_leafi(args) -> None:
 
     from ..core import build, filter_training
     from ..core.summaries import znormalize
+    from ..obs import SpanRecorder, export as obs_export, set_recorder
     from ..serving import MicroBatcher, ServingSession, poisson_trace
+
+    recorder = None
+    if args.trace_dump:
+        # isolated capture: build + serve spans land here, not in the
+        # process default recorder
+        recorder = SpanRecorder()
+        set_recorder(recorder)
 
     targets = tuple(float(t) for t in args.targets.split(","))
     if args.ckpt and os.path.exists(os.path.join(args.ckpt, "DONE")):
@@ -137,6 +151,20 @@ def serve_leafi(args) -> None:
         print("telemetry summary:")
         print(json.dumps(session_for_summary.telemetry.summary(), indent=2,
                          default=float))
+
+    if args.metrics_dump:
+        obs_export.write_metrics(args.metrics_dump,
+                                 session.telemetry.registry)
+        fmt = ("prometheus" if args.metrics_dump.endswith(".prom")
+               else "jsonl")
+        print(f"metrics dumped to {args.metrics_dump} ({fmt})")
+    if args.trace_dump:
+        set_recorder(None)
+        obs_export.write_chrome_trace(args.trace_dump,
+                                      spans=recorder.drain(),
+                                      batch_log=report["batches"])
+        print(f"chrome trace dumped to {args.trace_dump} "
+              f"(open in https://ui.perfetto.dev)")
 
 
 def serve_leafi_dist_trace(lfi, trace, args, oracle) -> None:
@@ -258,6 +286,14 @@ def main() -> None:
     ap.add_argument("--summary", action="store_true",
                     help="print the session telemetry summary (rolling "
                          "percentiles incl. queue-wait/form/execute phases)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="dump the serving metrics registry on exit: "
+                         "JSON-lines, or Prometheus text exposition when "
+                         "PATH ends in .prom (--arch leafi)")
+    ap.add_argument("--trace-dump", default=None, metavar="PATH",
+                    help="dump a Chrome trace-event JSON of the serve run "
+                         "(batch dispatch/in-flight/harvest lanes + host "
+                         "spans; open in Perfetto) (--arch leafi)")
     args = ap.parse_args()
 
     if args.arch == "leafi":

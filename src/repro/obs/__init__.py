@@ -1,0 +1,36 @@
+"""Observability subsystem: cascade traces, metrics registry, span profiling.
+
+Three layers, importable from anywhere in the repo (this package depends
+only on numpy/jax — never on ``repro.core`` or ``repro.serving``, so the
+engine and the serving runtime can both build on it without cycles):
+
+* :mod:`repro.obs.trace` — ``CascadeTrace``, the statically-shaped aux
+  pytree ``engine.run_cascade(trace=True)`` threads through the cascade
+  (which bound pruned which leaf, survivors, overflow fallbacks, distance
+  rows paid) — jit/shard_map-legal masked sums only.
+* :mod:`repro.obs.metrics` — process-wide ``MetricsRegistry`` (counters /
+  gauges / windowed histograms with labels, snapshot/delta, JSON-lines and
+  Prometheus export) plus the ``RecallDriftMonitor`` staleness hook;
+  ``serving.Telemetry`` is a facade over these instruments.
+* :mod:`repro.obs.spans` / :mod:`repro.obs.export` — host-side span
+  timers with ``jax.profiler.TraceAnnotation`` pass-through and Chrome
+  trace-event JSON export (Perfetto-viewable serving pipeline timelines).
+
+See README "Observability" for schemas and the Perfetto workflow.
+"""
+from .metrics import (DEFAULT_REGISTRY, Counter, Gauge, Histogram,
+                      MetricsRegistry, RecallDriftMonitor, get_registry)
+from .spans import Span, SpanRecorder, get_recorder, recording, set_recorder, span
+from .trace import (CascadeTrace, accounting_residual, combine, select,
+                    to_numpy, zero_trace)
+from . import export
+
+__all__ = [
+    "CascadeTrace", "accounting_residual", "combine", "select", "to_numpy",
+    "zero_trace",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "RecallDriftMonitor", "DEFAULT_REGISTRY", "get_registry",
+    "Span", "SpanRecorder", "get_recorder", "recording", "set_recorder",
+    "span",
+    "export",
+]

@@ -1,0 +1,108 @@
+"""Device-side cascade flight recorder: the ``CascadeTrace`` aux pytree.
+
+The engine's :class:`~repro.core.engine.EngineResult` counters answer the
+paper's searched-leaf accounting (how many leaves the sequential cascade
+*scans*).  ``CascadeTrace`` answers the complementary systems question —
+*which bound saved which compute* — per query, with statically-shaped
+masked sums only, so it is legal everywhere the engine is (jit, vmap,
+shard_map; LF001: no host syncs, no data-dependent shapes).
+
+Attribution semantics
+---------------------
+
+``pruned_box`` / ``pruned_seed`` / ``pruned_filter`` attribute every leaf
+that was excluded from the engine's distance pass to the *first* bound that
+excluded it, at the stage where the exclusion actually happened:
+
+* ``strategy="scan"`` — the per-step cascade test is the only stage.  A
+  leaf is ``pruned_box`` when its lower bound exceeds the witnessed bsf,
+  ``pruned_seed`` when only the warm-start bound ``bsf_ub`` excluded it
+  (``bsf < lb ≤`` never true; precisely: ``lb ≤ bsf`` but ``lb >
+  min(bsf, ub)``), and ``pruned_filter`` when the conformal-adjusted
+  prediction ``d_F`` exceeded the bsf.  ``probed == 0`` and ``survivors ==
+  n_searched``.
+* ``strategy="compact"`` — the phase-1 survivor mask is the stage that
+  decides which leaves are ever gathered.  ``pruned_box``: ``d_lb > bsf0``
+  (the probe's bsf seed); ``pruned_seed``: ``bsf0 ≥ d_lb > min(bsf0,
+  bsf_ub)``; ``pruned_filter``: the remainder (``d_F > bsf0``).  The probe
+  leaf is counted in ``probed`` (1 per query), not in ``survivors``.
+* ``compact_bsf_cascade`` (the shard_map form) — same mask-stage
+  attribution from the collective seed ``bsf0``; shard-padding leaves
+  (``leaf_size == 0``) count as ``pruned_box``.  Queries whose survivors
+  overflow the static capacity carry the masked-scan fallback's step-level
+  attribution instead, flagged in ``overflow``.  ``probed == 0`` here —
+  the distributed probe pass happens outside, in the shard body, which
+  adds its own ``probed``/``distances`` contribution before the psum.
+
+The accounting identity (pinned in tests/test_engine.py)::
+
+    pruned_box + pruned_seed + pruned_filter == n_leaves − survivors − probed
+
+holds per query for every strategy; for the shard body it holds per shard
+with ``probed == 0`` before the body's probe contribution is added.
+
+``distances`` counts exact distance *rows* (series compared) the engine
+paid for a query: probe rows plus every gathered candidate row for the
+compact paths, and the consulted (unpruned, valid) rows for the scan paths
+— the masked scan's dead lanes are shape-static overhead, not evaluations,
+and are not counted.
+
+``replay_cascade(trace=True)`` exposes the complementary *replay-stage*
+box/seed split of its ``n_pruned_lb`` counter (the compact strategies'
+second look at the same leaves); it is not folded into ``CascadeTrace``
+because the replay runs over already-gathered summaries — no compute left
+to save.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class CascadeTrace(NamedTuple):
+    """Per-query cascade accounting, all fields ``(Q,)`` int32.
+
+    A NamedTuple so it is a pytree automatically — it can cross jit,
+    ``lax.cond`` branches and ``shard_map`` boundaries, and collectives
+    (``lax.psum``) apply leaf-wise via ``jax.tree.map``.
+    """
+
+    pruned_box: jnp.ndarray      # leaves excluded by the box lower bound
+    pruned_seed: jnp.ndarray     # leaves excluded only by the bsf_ub seed
+    pruned_filter: jnp.ndarray   # leaves excluded by the learned filter
+    probed: jnp.ndarray          # phase-1 probe passes paid
+    survivors: jnp.ndarray       # leaves entering the candidate (MXU) pass
+    overflow: jnp.ndarray        # 1 ⇒ capacity overflow → scan fallback
+    distances: jnp.ndarray       # exact distance rows computed
+
+
+def zero_trace(n_queries: int) -> CascadeTrace:
+    """All-zero trace for ``n_queries`` queries (cond branches, seeds)."""
+    z = jnp.zeros((n_queries,), jnp.int32)
+    return CascadeTrace(z, z, z, z, z, z, z)
+
+
+def combine(a: CascadeTrace, b: CascadeTrace) -> CascadeTrace:
+    """Field-wise sum — merge per-shard or per-batch traces."""
+    return CascadeTrace(*(x + y for x, y in zip(a, b)))
+
+
+def select(cond, a: CascadeTrace, b: CascadeTrace) -> CascadeTrace:
+    """Per-query ``where(cond, a, b)`` across every field (jit-legal)."""
+    c = jnp.asarray(cond)
+    return CascadeTrace(*(jnp.where(c, x, y) for x, y in zip(a, b)))
+
+
+def to_numpy(trace: CascadeTrace) -> dict:
+    """Host-side dict of int64 numpy arrays (field name → ``(Q,)``)."""
+    return {name: np.asarray(val, dtype=np.int64)
+            for name, val in zip(trace._fields, trace)}
+
+
+def accounting_residual(trace: CascadeTrace, n_leaves: int) -> jnp.ndarray:
+    """``n_leaves − survivors − probed − Σ pruned_*`` — zero per query when
+    the attribution partition is exact (the tests pin this)."""
+    pruned = trace.pruned_box + trace.pruned_seed + trace.pruned_filter
+    return jnp.int32(n_leaves) - trace.survivors - trace.probed - pruned

@@ -39,6 +39,7 @@ import numpy as np
 from .. import checkpoint
 from ..core import build, conformal, search
 from ..core.flat_index import FlatIndex
+from ..obs import span
 from . import batcher as batcher_mod
 from .batcher import MicroBatch, MicroBatcher, Request, _pow2_floor
 from .telemetry import (Telemetry, latency_percentiles,
@@ -389,12 +390,14 @@ class ServingSession:
         t0 = time.perf_counter()
         seq = self._seq
         self._seq += 1
-        bsf_ub = None
-        if self.warm_start:
-            self.warm_cache.commit_through(seq - 1 - self.warm_lag)
-            bsf_ub = self.warm_cache.seed(batch.queries, batch.k)
-        pending = self._search_async(batch.queries, batch.targets, batch.k,
-                                     bsf_ub=bsf_ub)
+        with span("serve.dispatch", cat="serve", seq=seq,
+                  bucket=batch.bucket, n_valid=batch.n_valid, k=batch.k):
+            bsf_ub = None
+            if self.warm_start:
+                self.warm_cache.commit_through(seq - 1 - self.warm_lag)
+                bsf_ub = self.warm_cache.seed(batch.queries, batch.k)
+            pending = self._search_async(batch.queries, batch.targets,
+                                         batch.k, bsf_ub=bsf_ub)
         self.telemetry.record_phases(
             queue_wait=(batch.formed_at - batch.arrivals).tolist(),
             form_s=time.perf_counter() - t0)
@@ -403,7 +406,9 @@ class ServingSession:
     def harvest(self, pb: PendingBatch):
         """Block on one dispatched batch; fold telemetry + warm staging."""
         t0 = time.perf_counter()
-        res = pb.pending.result()
+        with span("serve.harvest", cat="serve", seq=pb.seq,
+                  bucket=pb.batch.bucket, n_valid=pb.batch.n_valid):
+            res = pb.pending.result()
         self.telemetry.record_phases(exec_s=time.perf_counter() - t0)
         b = pb.batch
         if self.warm_start:

@@ -1,10 +1,28 @@
-"""Serving telemetry: rolling latency percentiles, pruning/survivor
-counters, and an online achieved-recall estimator per quality-target group.
+"""Serving telemetry: a facade over the :mod:`repro.obs.metrics` registry.
 
-Everything is windowed (bounded deques) so a long-lived serving session
-reports *recent* behaviour: latency p50/p95/p99 over the last W requests,
-pruning ratio and survivor counts over the last W queries, and per-target
-recall as a running (hits, total) pair per distinct requested target.
+Every number the serving runtime reports — rolling latency percentiles,
+pruning/survivor counters, per-target achieved recall — lives in registry
+instruments (counters / gauges / windowed histograms), not in a parallel
+deque implementation: ``Telemetry`` is the serving-shaped view over one
+:class:`~repro.obs.metrics.MetricsRegistry`.  That buys three things:
+
+* one export path — ``session.telemetry.registry`` snapshots/dumps as
+  JSON-lines or Prometheus text like any other instrumented component
+  (``launch/serve.py --metrics-dump``);
+* windowed semantics for free — histograms keep lifetime count/sum plus a
+  bounded rolling window, so a long-lived session reports *recent*
+  behaviour (latency p50/p95/p99 over the last W requests, pruning and
+  survivor counts over the last W queries);
+* the recall-drift watchdog — achieved recall@1 per requested target feeds
+  a :class:`~repro.obs.metrics.RecallDriftMonitor`, whose per-target flag
+  is the staleness hook ROADMAP item 1's recalibration trigger consumes.
+
+Determinism contract: only the ``form``/``exec`` phase histograms are fed
+host wall-clock time, and they are registered ``wall=True`` so registry
+snapshots segregate them under the ``"wall"`` subtree (the
+trace-determinism test masks exactly that subtree).  Latency and
+queue-wait ride the batcher's virtual clock under an injected
+``service_time`` and are then bitwise-reproducible.
 
 The survivor-count window doubles as the feedback signal for the
 fixed-width distributed compaction: :meth:`Telemetry.suggest_max_survivors`
@@ -15,17 +33,20 @@ follow-up).
 """
 from __future__ import annotations
 
-from collections import deque
 from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from ..core import engine
+from ..obs.metrics import Histogram, MetricsRegistry, RecallDriftMonitor
 
 
 def latency_percentiles(samples, pcts: Sequence[int] = (50, 95, 99)
                         ) -> Dict[str, float]:
-    """{'p50': …, 'p95': …, 'p99': …} from a latency sample iterable."""
+    """{'p50': …, 'p95': …, 'p99': …} from a latency sample iterable.
+
+    NaN-safe: an empty sample set yields NaN percentiles, never a
+    traceback (the zero-request serve-report contract)."""
     arr = np.asarray(list(samples), np.float64)
     if arr.size == 0:
         return {f"p{p}": float("nan") for p in pcts}
@@ -50,44 +71,158 @@ def recall_summary(cells: Dict[float, list]) -> Dict[float, Dict[str, float]]:
             for t, (h, n) in sorted(cells.items())}
 
 
-class Telemetry:
-    """Rolling serving counters; one instance per :class:`ServingSession`."""
+class _WindowView:
+    """Deque-shaped live view over one histogram's (unlabeled) window.
 
-    def __init__(self, window: int = 4096):
+    Keeps the pre-registry ``Telemetry`` surface working: code that reads
+    ``telemetry.latencies`` / ``len(telemetry.queue_wait)`` or seeds a
+    window with ``telemetry.survivors.extend([...])`` goes through the
+    registry instrument, so lifetime count/sum stay consistent with the
+    window it mutates.
+    """
+
+    __slots__ = ("_hist",)
+
+    def __init__(self, hist: Histogram):
+        self._hist = hist
+
+    def _window(self):
+        s = self._hist._series.get(())
+        return s.window if s is not None else ()
+
+    def __len__(self) -> int:
+        return len(self._window())
+
+    def __iter__(self):
+        return iter(list(self._window()))
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def append(self, value: float) -> None:
+        self._hist.observe(float(value))
+
+    def extend(self, values) -> None:
+        self._hist.extend(values)
+
+    def clear(self) -> None:
+        self._hist.reset_window()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"_WindowView({list(self._window())!r})"
+
+
+class Telemetry:
+    """Registry-backed rolling serving counters; one per ServingSession.
+
+    ``registry=None`` creates a private :class:`MetricsRegistry` so
+    concurrent sessions (and determinism tests) stay isolated; pass
+    ``repro.obs.get_registry()`` to aggregate into the process-wide one.
+    All instrument names carry the ``serve_`` prefix.
+    """
+
+    def __init__(self, window: int = 4096,
+                 registry: Optional[MetricsRegistry] = None,
+                 drift_window: int = 512, drift_min_samples: int = 64,
+                 drift_slack: float = 0.0):
         self.window = window
-        self.latencies: deque = deque(maxlen=window)      # seconds/request
-        self.searched: deque = deque(maxlen=window)       # leaves/query
-        self.survivors: deque = deque(maxlen=window)      # computed leaves/q
-        # end-to-end latency decomposition (the pipeline-bubble view):
-        # queue-wait is per request on the trace's virtual clock; batch
-        # formation/dispatch and device-execute (result-harvest wait) are
-        # per batch on the host's real clock.  In pipelined serving the
-        # execute component is the *residual* wait after overlap — near
-        # zero when dispatch of batch N+1 fully hides batch N's compute.
-        self.queue_wait: deque = deque(maxlen=window)     # s/request
-        self.form_s: deque = deque(maxlen=window)         # s/batch (host)
-        self.exec_s: deque = deque(maxlen=window)         # s/batch (device)
+        self.registry = registry if registry is not None else \
+            MetricsRegistry()
+        r = self.registry
+        self._c_requests = r.counter(
+            "serve_requests_total", help="valid requests answered")
+        self._c_batches = r.counter(
+            "serve_batches_total", help="micro-batches executed")
+        self._c_padded = r.counter(
+            "serve_padded_slots_total", help="wasted pow2-bucket slots")
+        self._g_n_leaves = r.gauge(
+            "serve_index_leaves", help="leaf count of the served index")
+        self._g_pruning = r.gauge(
+            "serve_pruning_ratio_windowed",
+            help="1 - mean(searched)/n_leaves over the rolling window")
+        self._h_latency = r.histogram(
+            "serve_latency_s", window=window,
+            help="end-to-end request latency (virtual clock under an "
+                 "injected service_time)")
+        self._h_searched = r.histogram(
+            "serve_searched_leaves", window=window,
+            help="leaves actually scanned per query")
+        self._h_survivors = r.histogram(
+            "serve_survivor_leaves", window=window,
+            help="leaves the engine paid distance compute for, per query")
+        self._h_queue_wait = r.histogram(
+            "serve_queue_wait_s", window=window,
+            help="request arrival -> batch formation (virtual clock)")
+        # host wall-clock phases: segregated under the snapshot's "wall"
+        # subtree so determinism tests can mask them (see module docstring)
+        self._h_form = r.histogram(
+            "serve_form_s", window=window, wall=True,
+            help="host batch-formation + dispatch seconds per batch")
+        self._h_exec = r.histogram(
+            "serve_exec_s", window=window, wall=True,
+            help="device-execute / harvest-wait seconds per batch")
+        self.drift = RecallDriftMonitor(
+            r, window=drift_window, min_samples=drift_min_samples,
+            slack=drift_slack, prefix="serve")
         self._recall: Dict[float, list] = {}              # target → [hit, n]
         self.n_leaves: Optional[int] = None
-        self.n_requests = 0
-        self.n_batches = 0
-        self.n_padded = 0                                 # wasted batch slots
+
+    # -- the pre-registry deque surface (live window views) -----------------
+
+    @property
+    def latencies(self) -> _WindowView:
+        return _WindowView(self._h_latency)
+
+    @property
+    def searched(self) -> _WindowView:
+        return _WindowView(self._h_searched)
+
+    @property
+    def survivors(self) -> _WindowView:
+        return _WindowView(self._h_survivors)
+
+    @property
+    def queue_wait(self) -> _WindowView:
+        return _WindowView(self._h_queue_wait)
+
+    @property
+    def form_s(self) -> _WindowView:
+        return _WindowView(self._h_form)
+
+    @property
+    def exec_s(self) -> _WindowView:
+        return _WindowView(self._h_exec)
+
+    @property
+    def n_requests(self) -> int:
+        return int(self._c_requests.value())
+
+    @property
+    def n_batches(self) -> int:
+        return int(self._c_batches.value())
+
+    @property
+    def n_padded(self) -> int:
+        return int(self._c_padded.value())
 
     # -- recording ----------------------------------------------------------
 
     def record_batch(self, result, n_valid: int, bucket: int) -> None:
         """Fold one executed batch's SearchResult (valid rows only)."""
-        self.n_batches += 1
-        self.n_requests += n_valid
-        self.n_padded += bucket - n_valid
+        self._c_batches.inc()
+        self._c_requests.inc(n_valid)
+        self._c_padded.inc(bucket - n_valid)
         self.n_leaves = result.n_leaves
-        self.searched.extend(np.asarray(result.searched)[:n_valid].tolist())
+        self._g_n_leaves.set(result.n_leaves)
+        self._h_searched.extend(
+            np.asarray(result.searched)[:n_valid].tolist())
         if result.computed is not None:
-            self.survivors.extend(
+            self._h_survivors.extend(
                 np.asarray(result.computed)[:n_valid].tolist())
+        self._g_pruning.set(self.pruning_ratio())
 
     def record_latency(self, seconds: float) -> None:
-        self.latencies.append(float(seconds))
+        self._h_latency.observe(float(seconds))
 
     def record_phases(self, *, queue_wait=None, form_s: float = None,
                       exec_s: float = None) -> None:
@@ -98,28 +233,46 @@ class Telemetry:
         dispatch seconds; ``exec_s``: device-execute / harvest-wait seconds.
         """
         if queue_wait is not None:
-            self.queue_wait.extend(float(w) for w in queue_wait)
+            self._h_queue_wait.extend(float(w) for w in queue_wait)
         if form_s is not None:
-            self.form_s.append(float(form_s))
+            self._h_form.observe(float(form_s))
         if exec_s is not None:
-            self.exec_s.append(float(exec_s))
+            self._h_exec.observe(float(exec_s))
 
     def observe_recall(self, target: float, hit: bool) -> None:
-        """One request's recall@1 outcome against the exact oracle."""
+        """One request's recall@1 outcome against the exact oracle.
+
+        Feeds both the lifetime per-target accumulator and the windowed
+        :class:`RecallDriftMonitor` (whose per-target flag is the
+        recalibration hook)."""
         observe_recall_cell(self._recall, target, hit)
+        self.drift.observe(target, hit)
+
+    def flush_windows(self) -> None:
+        """Drop every histogram's windowed samples (lifetime totals and
+        recall accumulators survive) — e.g. after a recalibration, so the
+        rolling views describe post-change behaviour only."""
+        for h in (self._h_latency, self._h_searched, self._h_survivors,
+                  self._h_queue_wait, self._h_form, self._h_exec):
+            h.reset_window()
 
     # -- reading ------------------------------------------------------------
 
     def latency_percentiles(self) -> Dict[str, float]:
-        return latency_percentiles(self.latencies)
+        return latency_percentiles(self._h_latency.window_values())
 
     def pruning_ratio(self) -> float:
-        if not self.searched or not self.n_leaves:
+        vals = self._h_searched.window_values()
+        if not vals or not self.n_leaves:
             return float("nan")
-        return 1.0 - float(np.mean(self.searched)) / self.n_leaves
+        return 1.0 - float(np.mean(vals)) / self.n_leaves
 
     def recall_by_target(self) -> Dict[float, Dict[str, float]]:
         return recall_summary(self._recall)
+
+    def recall_drifting(self) -> Dict[float, bool]:
+        """Per-target windowed drift flags (ROADMAP item 1's hook)."""
+        return self.drift.drifting()
 
     def suggest_max_survivors(self, n_leaves: Optional[int] = None,
                               pct: float = 99.0) -> int:
@@ -133,16 +286,20 @@ class Telemetry:
         """
         L = n_leaves if n_leaves is not None else (self.n_leaves or 1)
         min_samples = int(np.ceil(100.0 / max(100.0 - pct, 1.0)))
-        return engine.tuned_max_survivors(np.asarray(self.survivors), L, pct,
-                                          min_samples=min_samples)
+        return engine.tuned_max_survivors(
+            np.asarray(self._h_survivors.window_values()), L, pct,
+            min_samples=min_samples)
 
     def phase_percentiles(self) -> Dict[str, Dict[str, float]]:
         """Rolling p50/p95/p99 of each latency phase (seconds)."""
-        return {"queue_wait": latency_percentiles(self.queue_wait),
-                "form": latency_percentiles(self.form_s),
-                "execute": latency_percentiles(self.exec_s)}
+        return {
+            "queue_wait": latency_percentiles(
+                self._h_queue_wait.window_values()),
+            "form": latency_percentiles(self._h_form.window_values()),
+            "execute": latency_percentiles(self._h_exec.window_values())}
 
     def summary(self) -> dict:
+        surv = self._h_survivors.window_values()
         out = {"n_requests": self.n_requests, "n_batches": self.n_batches,
                "padding_fraction": (self.n_padded /
                                     max(self.n_padded + self.n_requests, 1)),
@@ -151,7 +308,15 @@ class Telemetry:
         out.update(self.latency_percentiles())
         if self.queue_wait or self.form_s or self.exec_s:
             out["phases"] = self.phase_percentiles()
-        if self.survivors:
-            out["survivors_mean"] = float(np.mean(self.survivors))
+        if surv:
+            out["survivors_mean"] = float(np.mean(surv))
             out["suggested_max_survivors"] = self.suggest_max_survivors()
+        drift = self.recall_drifting()
+        if drift:
+            out["recall_windowed"] = self.drift.windowed_recall()
+            out["recall_drifting"] = drift
         return out
+
+    def snapshot(self) -> dict:
+        """The backing registry's deterministic snapshot (see obs.metrics)."""
+        return self.registry.snapshot()

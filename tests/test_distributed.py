@@ -391,3 +391,66 @@ def test_distributed_serving_pipelined_parity_on_host_mesh():
                        capture_output=True, text=True, timeout=900)
     assert "DIST_SERVE_OK" in r.stdout, \
         r.stdout[-2000:] + r.stderr[-4000:]
+
+
+TRACE_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import build, distributed, filter_training
+from repro.core.summaries import znormalize
+
+rng = np.random.default_rng(0)
+S = rng.standard_normal((3000, 64), dtype=np.float32).cumsum(axis=1)
+cfg = build.LeaFiConfig(backbone="dstree", leaf_capacity=64, n_global=120,
+                        n_local=24, t_filter_over_t_series=10.0,
+                        train=filter_training.TrainConfig(epochs=20))
+lfi = build.build_leafi(S, cfg)
+Q = znormalize(S[rng.integers(0, len(S), 16)]
+               + 0.3 * rng.standard_normal((16, 64)).astype(np.float32))
+Qj = jnp.asarray(Q)
+
+mesh = distributed.make_search_mesh(2, 2)
+sharded = distributed.shard_leafi(lfi, n_shards=2, quality_target=0.99)
+n_shards, P_slots = sharded.leaf_size.shape
+
+for strategy in ("scan", "compact"):
+    run0, *_ = distributed.make_distributed_search(mesh, sharded,
+                                                   strategy=strategy)
+    runt, *_ = distributed.make_distributed_search(mesh, sharded,
+                                                   strategy=strategy,
+                                                   trace=True)
+    with mesh:
+        nn0, tot0 = run0(Qj)
+        nn1, tot1, tr = runt(Qj)
+    # trace=True must not perturb the exchange (same programs modulo the
+    # psum'd int32 side outputs)
+    np.testing.assert_array_equal(np.asarray(nn0), np.asarray(nn1),
+                                  err_msg=strategy)
+    np.testing.assert_array_equal(np.asarray(tot0), np.asarray(tot1),
+                                  err_msg=strategy)
+    # global accounting identity (see distributed._make_shard_body): each
+    # shard probes one leaf that stays cascade-accounted, so probed == S
+    # and the pruned counts partition the S*P slot grid minus survivors
+    pruned = (np.asarray(tr.pruned_box) + np.asarray(tr.pruned_seed)
+              + np.asarray(tr.pruned_filter))
+    np.testing.assert_array_equal(
+        pruned, n_shards * P_slots - np.asarray(tr.survivors),
+        err_msg=strategy)
+    np.testing.assert_array_equal(np.asarray(tr.probed),
+                                  np.full(16, n_shards), err_msg=strategy)
+    assert (np.asarray(tr.distances) > 0).all(), strategy
+
+print("TRACE_OK")
+"""
+
+
+def test_distributed_trace_parity_and_global_accounting():
+    """2-shard host mesh: the traced shard body returns bitwise-identical
+    nn/searched outputs and a psum'd CascadeTrace whose counts satisfy the
+    global identity (sum pruned == S*P - survivors, probed == S)."""
+    r = subprocess.run([sys.executable, "-c", TRACE_CODE],
+                       capture_output=True, text=True, timeout=900)
+    assert "TRACE_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-4000:]

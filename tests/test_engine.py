@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import bounds, build, engine, filter_training, search, tree
 
 
@@ -298,3 +299,102 @@ def test_pairwise_impl_all_leaves_survive(index_small, queries_small):
                                rtol=1e-3, atol=1e-3)
     np.testing.assert_array_equal(np.asarray(a.topk_i), np.asarray(b.topk_i))
     assert (np.asarray(b.n_searched) == index_small.n_leaves).all()
+
+
+# ---------------------------------------------------------------------------
+# cascade trace (repro.obs): trace=True must be result-invisible and must
+# account for every leaf slot, per query, on every strategy
+# ---------------------------------------------------------------------------
+
+
+def _assert_trace_accounts(trace, n_leaves):
+    assert trace is not None
+    res = obs.accounting_residual(trace, n_leaves)
+    np.testing.assert_array_equal(np.asarray(res),
+                                  np.zeros(res.shape, np.int64))
+    for field in trace:
+        assert (np.asarray(field) >= 0).all()
+
+
+@pytest.mark.parametrize("strategy", ["scan", "compact"])
+def test_trace_is_bitwise_invisible(index_small, queries_small, strategy):
+    """Both backbones (fixture) x both strategies: the traced program must
+    return bitwise-identical results and counters to the untraced one, and
+    its per-query attribution must partition the leaf set exactly:
+    pruned_box + pruned_seed + pruned_filter == L - survivors - probed."""
+    q = jnp.asarray(queries_small)
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_F = _synthetic_predictions(d_lb)
+    for k in (1, 5):
+        a = _run(index_small, q, d_lb, d_F, k, strategy)
+        b = engine.run_cascade(
+            jnp.asarray(index_small.series),
+            jnp.asarray(index_small.leaf_start),
+            jnp.asarray(index_small.leaf_size), q, d_lb, d_F,
+            k=k, max_leaf=index_small.max_leaf_size, strategy=strategy,
+            trace=True)
+        _assert_bitwise(a, b)
+        assert a.trace is None
+        _assert_trace_accounts(b.trace, index_small.n_leaves)
+        # an active filter cascade must be visible in the attribution
+        assert np.asarray(b.trace.pruned_filter).sum() > 0
+
+
+def test_trace_through_search_batched(index_small, queries_small):
+    """Public API: search_batched(trace=True) materializes the numpy dict
+    and stays bitwise-identical to the untraced call."""
+    a = search.search_batched(index_small, queries_small, k=3,
+                              use_filters=False, strategy="compact")
+    b = search.search_batched(index_small, queries_small, k=3,
+                              use_filters=False, strategy="compact",
+                              trace=True)
+    np.testing.assert_array_equal(a.dists, b.dists)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.searched, b.searched)
+    assert a.trace is None and isinstance(b.trace, dict)
+    total = (b.trace["pruned_box"] + b.trace["pruned_seed"]
+             + b.trace["pruned_filter"] + b.trace["survivors"]
+             + b.trace["probed"])
+    np.testing.assert_array_equal(
+        total, np.full(len(queries_small), index_small.n_leaves))
+
+
+@pytest.mark.parametrize("cap", [None, 1])
+def test_compact_bsf_cascade_trace_parity(index_small, queries_small, cap):
+    """The 1-NN fixed-width form: traced == untraced bitwise at any
+    capacity; cap=1 forces the overflow->scan fallback, which the trace
+    must flag while keeping the leaf accounting exact."""
+    q = jnp.asarray(queries_small)
+    series, starts, sizes = _bsf_args(index_small)
+    ml = index_small.max_leaf_size
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_F = _synthetic_predictions(d_lb)
+    bsf0 = engine.probe_best_leaf(series, starts, sizes, d_lb, q, ml)
+    a = engine.compact_bsf_cascade(series, starts, sizes, d_lb, d_F, q, ml,
+                                   bsf0, max_survivors=cap)
+    b = engine.compact_bsf_cascade(series, starts, sizes, d_lb, d_F, q, ml,
+                                   bsf0, max_survivors=cap, trace=True)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    _assert_trace_accounts(b[2], index_small.n_leaves)
+    if cap == 1:
+        assert np.asarray(b[2].overflow).sum() > 0
+
+
+def test_masked_bsf_scan_trace_parity(index_small, queries_small):
+    q = jnp.asarray(queries_small)
+    series, starts, sizes = _bsf_args(index_small)
+    ml = index_small.max_leaf_size
+    d_lb = bounds.lower_bounds(index_small, q)
+    d_F = _synthetic_predictions(d_lb)
+    bsf0 = engine.probe_best_leaf(series, starts, sizes, d_lb, q, ml)
+    a = engine.masked_bsf_scan(series, starts, sizes, d_lb, d_F, q, ml, bsf0)
+    b = engine.masked_bsf_scan(series, starts, sizes, d_lb, d_F, q, ml, bsf0,
+                               trace=True)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    n_box, n_seed, n_pf, n_rows = b[2]
+    total = (np.asarray(n_box) + np.asarray(n_seed) + np.asarray(n_pf)
+             + np.asarray(a[1]))
+    np.testing.assert_array_equal(
+        total, np.full(q.shape[0], index_small.n_leaves))

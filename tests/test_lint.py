@@ -237,6 +237,18 @@ def test_source_tree_lints_clean():
         assert entry["reason"], f"reasonless pragma: {entry['finding'].render()}"
 
 
+def test_obs_package_lints_clean():
+    """The observability package is jit-adjacent (CascadeTrace threads
+    through the engine's compiled programs) and must land LF001-clean with
+    zero suppressions — no host syncs hiding behind a pragma."""
+    report = run_lint([str(REPO_ROOT / "src" / "repro" / "obs")],
+                      root=str(REPO_ROOT))
+    assert not report.errors, report.errors
+    assert report.findings == [], [f.render() for f in report.findings]
+    assert report.suppressed == []
+    assert report.files >= 5      # __init__, trace, metrics, spans, export
+
+
 @pytest.mark.parametrize("rule", sorted(RULES))
 def test_every_rule_has_a_failing_fixture(rule):
     """Acceptance guard: each rule demonstrably fires on some fixture."""

@@ -1,0 +1,376 @@
+"""Observability subsystem (`repro.obs`): registry instruments, span
+recording, Chrome trace export, the recall-drift hook, and the serve-level
+trace-determinism pin.
+
+The determinism contract under test: with an injected ``service_time``,
+every registry instrument not declared ``wall=True`` and every non-``ts``/
+``dur`` field of the exported Chrome trace is bitwise-reproducible across
+two seeded serving runs — wall-clock may appear *only* in the snapshot's
+``"wall"`` subtree and in the trace's ``ts``/``dur`` fields.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import build, filter_training
+from repro.launch.serve import _print_serve_report
+from repro.obs import export
+from repro.obs.metrics import MetricsRegistry, RecallDriftMonitor
+from repro.obs.spans import SpanRecorder
+from repro.serving import (MicroBatcher, ServingSession, Telemetry,
+                          poisson_trace)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry: counters / gauges / histograms
+# ---------------------------------------------------------------------------
+
+def test_counter_labels_and_monotonicity():
+    r = MetricsRegistry()
+    c = r.counter("reqs", help="requests")
+    c.inc()
+    c.inc(2.0)
+    c.inc(5, target="0.9")
+    assert c.value() == 3.0
+    assert c.value(target="0.9") == 5.0
+    assert c.value(target="0.99") == 0.0
+    with pytest.raises(ValueError, match="negative"):
+        c.inc(-1)
+
+
+def test_gauge_last_write_wins():
+    r = MetricsRegistry()
+    g = r.gauge("depth")
+    assert g.value(default=-1.0) == -1.0
+    g.set(3)
+    g.set(7, lane="a")
+    g.set(4)
+    assert g.value() == 4.0
+    assert g.value(lane="a") == 7.0
+
+
+def test_histogram_lifetime_vs_window():
+    r = MetricsRegistry()
+    h = r.histogram("lat", window=4)
+    h.extend([1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    assert h.count() == 6                       # lifetime survives overflow
+    assert h.window_values() == [3.0, 4.0, 5.0, 6.0]
+    p = h.percentiles((50,))
+    assert p["p50"] == pytest.approx(4.5)
+    h.reset_window()
+    assert h.window_values() == []
+    assert h.count() == 6                       # lifetime survives the flush
+    assert np.isnan(h.percentiles((50,))["p50"])   # empty window: NaN, no raise
+
+
+def test_registry_idempotent_creation_and_kind_mismatch():
+    r = MetricsRegistry()
+    a = r.counter("x")
+    assert r.counter("x") is a                  # second creation: same object
+    with pytest.raises(ValueError, match="already registered"):
+        r.gauge("x")
+
+
+def test_snapshot_segregates_wall_instruments():
+    r = MetricsRegistry()
+    r.counter("n").inc(3)
+    r.histogram("virt", window=8).observe(1.0)
+    r.histogram("wallclock_s", window=8, wall=True).observe(0.125)
+    snap = r.snapshot()
+    assert snap["counters"]["n"] == 3.0
+    assert snap["histograms"]["virt"]["count"] == 1
+    assert "wallclock_s" not in snap["histograms"]
+    assert snap["wall"]["histograms"]["wallclock_s"]["count"] == 1
+    json.dumps(snap)                            # snapshot is JSON-clean
+
+
+def test_delta_reports_counter_movement():
+    r = MetricsRegistry()
+    c = r.counter("n")
+    c.inc(2)
+    prev = r.snapshot()
+    c.inc(3, target="0.9")
+    d = r.delta(prev)
+    assert d == {'n{target=0.9}': 3.0}
+
+
+def test_jsonl_and_prometheus_export(tmp_path):
+    r = MetricsRegistry()
+    r.counter("serve_requests_total").inc(5)
+    r.histogram("serve_latency_s", window=8).extend([0.1, 0.2, 0.3])
+    r.histogram("empty_h", window=8)            # registered, never observed
+    jl = tmp_path / "m.jsonl"
+    export.write_metrics(jl, r)
+    rows = [json.loads(line) for line in jl.read_text().splitlines()]
+    by_name = {row["name"]: row for row in rows}
+    assert by_name["serve_requests_total"]["value"] == 5.0
+    assert by_name["serve_latency_s"]["count"] == 3
+    assert "empty_h" not in by_name             # no series yet → no row
+    prom = tmp_path / "m.prom"
+    export.write_metrics(prom, r)
+    text = prom.read_text()
+    assert "# TYPE serve_requests_total counter" in text
+    assert "serve_requests_total 5.0" in text
+    assert 'serve_latency_s{quantile="0.5"}' in text
+    assert "serve_latency_s_count 3" in text
+
+
+# ---------------------------------------------------------------------------
+# recall-drift monitor (ROADMAP item 1's recalibration hook)
+# ---------------------------------------------------------------------------
+
+def test_recall_drift_flag_needs_min_samples_then_fires_and_clears():
+    r = MetricsRegistry()
+    mon = RecallDriftMonitor(r, window=16, min_samples=8)
+    for _ in range(7):
+        mon.observe(0.95, False)
+    assert mon.drifting() == {0.95: False}      # below min_samples: no flag
+    mon.observe(0.95, False)
+    assert mon.drifting() == {0.95: True}
+    assert mon.any_drifting()
+    assert r.gauge("serve_recall_drift").value(target="0.95") == 1.0
+    assert r.gauge("serve_recall_windowed").value(target="0.95") == 0.0
+    for _ in range(16):                         # window fills with hits
+        mon.observe(0.95, True)
+    assert mon.drifting() == {0.95: False}
+    assert r.gauge("serve_recall_drift").value(target="0.95") == 0.0
+    assert mon.windowed_recall()[0.95] == 1.0
+
+
+def test_telemetry_surfaces_drift_in_summary():
+    tel = Telemetry(drift_window=16, drift_min_samples=4)
+    for _ in range(6):
+        tel.observe_recall(0.9, False)
+    assert tel.recall_drifting() == {0.9: True}
+    s = tel.summary()
+    assert s["recall_drifting"] == {0.9: True}
+    assert s["recall_windowed"][0.9] == 0.0
+    assert s["recall_by_target"][0.9]["n"] == 6
+
+
+# ---------------------------------------------------------------------------
+# telemetry facade: registry-backed, NaN-safe when empty
+# ---------------------------------------------------------------------------
+
+def test_fresh_telemetry_is_nan_safe_everywhere():
+    tel = Telemetry()
+    assert np.isnan(tel.latency_percentiles()["p50"])
+    assert np.isnan(tel.pruning_ratio())
+    s = tel.summary()
+    assert s["n_requests"] == 0 and s["n_batches"] == 0
+    assert np.isnan(s["p99"])
+    assert "phases" not in s                    # no wall-clock seen yet
+    assert "recall_drifting" not in s
+    assert not tel.latencies and len(tel.queue_wait) == 0
+
+
+def test_telemetry_windows_are_registry_instruments():
+    tel = Telemetry(window=8)
+    tel.record_latency(0.25)
+    tel.survivors.extend([2, 3, 4])             # pre-registry deque surface
+    tel.record_phases(queue_wait=[0.001, 0.002], form_s=0.01, exec_s=0.02)
+    snap = tel.snapshot()
+    assert snap["histograms"]["serve_latency_s"]["count"] == 1
+    assert snap["histograms"]["serve_survivor_leaves"]["sum"] == 9.0
+    assert snap["histograms"]["serve_queue_wait_s"]["count"] == 2
+    # host wall-clock phases live under the maskable "wall" subtree only
+    assert "serve_form_s" not in snap["histograms"]
+    assert snap["wall"]["histograms"]["serve_form_s"]["count"] == 1
+    assert snap["wall"]["histograms"]["serve_exec_s"]["count"] == 1
+    assert list(tel.survivors) == [2.0, 3.0, 4.0]
+    tel.flush_windows()
+    assert len(tel.latencies) == 0
+    assert tel.snapshot()["histograms"]["serve_latency_s"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# span recording
+# ---------------------------------------------------------------------------
+
+def test_recording_captures_nesting_and_restores_previous_recorder():
+    before = obs.get_recorder()
+    with obs.recording() as rec:
+        assert obs.get_recorder() is rec
+        with obs.span("outer", cat="t", a=1):
+            with obs.span("inner", cat="t"):
+                pass
+    assert obs.get_recorder() is before
+    inner, outer = rec.spans()                  # append order: close order
+    assert (inner.name, inner.depth) == ("inner", 1)
+    assert (outer.name, outer.depth) == ("outer", 0)
+    assert outer.args == {"a": 1}
+    assert inner.lane == outer.lane == 0        # dense lanes, not thread ids
+    assert outer.dur >= inner.dur >= 0.0
+
+
+def test_recorder_is_bounded_and_drains():
+    rec = SpanRecorder(maxlen=4)
+    for i in range(10):
+        with rec.span(f"s{i}"):
+            pass
+    got = rec.drain()
+    assert [s.name for s in got] == ["s6", "s7", "s8", "s9"]
+    assert rec.spans() == []
+
+
+def test_disabled_recorder_records_nothing():
+    rec = SpanRecorder(enabled=False)
+    with rec.span("x"):
+        pass
+    assert rec.spans() == []
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export
+# ---------------------------------------------------------------------------
+
+def _demo_batch_log():
+    return [
+        # serial run_trace entry: no t_disp → one combined execute slice
+        {"bucket": 4, "n_valid": 3, "k": 1, "service": 0.01,
+         "rids": [0, 1, 2], "wall": 0.02},
+        # pipelined entry: dispatch / in-flight / harvest lanes
+        {"bucket": 8, "n_valid": 8, "k": 1, "service": 0.01,
+         "rids": list(range(3, 11)), "t_disp": 10.0, "dispatch_s": 0.001,
+         "t_done": 10.5, "harvest_s": 0.002},
+    ]
+
+
+def test_chrome_trace_lane_layout():
+    with obs.recording() as rec:
+        with obs.span("build.train", cat="build", n_filters=3):
+            pass
+    trace = export.chrome_trace(spans=rec.drain(),
+                                batch_log=_demo_batch_log())
+    evs = trace["traceEvents"]
+    lanes = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+    assert lanes == {"serve/dispatch", "serve/in-flight", "serve/harvest",
+                     "spans/lane0"}
+    xs = {e["name"]: e for e in evs if e["ph"] == "X"}
+    serial = xs["batch[4x k=1]"]
+    assert serial["tid"] == 1 and serial["ts"] == 0.0
+    assert serial["dur"] == pytest.approx(0.02 * 1e6)
+    assert serial["args"]["n_requests"] == 3
+    assert xs["dispatch batch[8x k=1]"]["tid"] == 1
+    assert xs["in-flight batch[8x k=1]"]["tid"] == 2
+    assert xs["harvest batch[8x k=1]"]["tid"] == 3
+    span_ev = xs["build.train"]
+    assert span_ev["tid"] == 10 and span_ev["args"] == {"n_filters": 3,
+                                                        "depth": 0}
+
+
+def test_mask_wallclock_zeroes_only_ts_dur():
+    trace = export.chrome_trace(batch_log=_demo_batch_log())
+    masked = export.mask_wallclock(trace)
+    for e in masked["traceEvents"]:
+        if e["ph"] == "X":
+            assert e["ts"] == 0.0 and e["dur"] == 0.0
+    # non-wall-clock fields survive untouched; the input is not mutated
+    assert ([(e["name"], e.get("args")) for e in masked["traceEvents"]]
+            == [(e["name"], e.get("args")) for e in trace["traceEvents"]])
+    assert any(e.get("dur", 0.0) > 0.0 for e in trace["traceEvents"])
+
+
+def test_write_chrome_trace_roundtrips(tmp_path):
+    path = tmp_path / "trace.json"
+    trace = export.write_chrome_trace(path, batch_log=_demo_batch_log())
+    loaded = json.loads(path.read_text())
+    assert loaded == json.loads(json.dumps(trace))
+    assert loaded["displayTimeUnit"] == "ms"
+
+
+# ---------------------------------------------------------------------------
+# cascade-trace host helpers (device-side semantics: tests/test_engine.py)
+# ---------------------------------------------------------------------------
+
+def test_cascade_trace_host_helpers():
+    z = obs.zero_trace(3)
+    assert all(np.asarray(f).shape == (3,) for f in z)
+    t = obs.CascadeTrace(*(np.full((3,), i, np.int32)
+                           for i in range(len(z._fields))))
+    both = obs.combine(t, t)
+    assert np.array_equal(np.asarray(both.pruned_filter),
+                          np.asarray(t.pruned_filter) * 2)
+    sel = obs.select(np.asarray([True, False, True]), t, z)
+    assert np.asarray(sel.survivors).tolist() == [4, 0, 4]
+    d = obs.to_numpy(t)
+    assert set(d) == set(t._fields)
+    assert d["distances"].dtype == np.int64
+    # residual: n_leaves = Σpruned + survivors + probed ⇒ zero
+    n_leaves = int(0 + 1 + 2 + 3 + 4)
+    assert np.asarray(obs.accounting_residual(t, n_leaves)).tolist() \
+        == [0, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# serve-level determinism + zero-request regression (needs a built index)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lfi_obs(randwalk_small):
+    cfg = build.LeaFiConfig(backbone="dstree", leaf_capacity=64,
+                            n_global=120, n_local=24,
+                            t_filter_over_t_series=10.0,
+                            train=filter_training.TrainConfig(epochs=20))
+    return build.build_leafi(randwalk_small[:2000], cfg)
+
+
+def _serve_once(lfi, trace, oracle):
+    tel = Telemetry(drift_window=32, drift_min_samples=8)
+    session = ServingSession(lfi, telemetry=tel)
+    with obs.recording() as rec:
+        report = session.serve(
+            trace, batcher=MicroBatcher(max_batch=8, max_wait=0.004),
+            recall_oracle=oracle, service_time=lambda b: 0.002)
+    chrome = export.mask_wallclock(export.chrome_trace(
+        spans=rec.drain(), batch_log=report["batches"]))
+    return report, tel.snapshot(), chrome
+
+
+def test_serve_observability_is_deterministic_modulo_wallclock(
+        lfi_obs, queries_small):
+    trace = poisson_trace(queries_small, rate=500.0, n_requests=48,
+                          targets=(0.9, 0.99), seed=5)
+    session = ServingSession(lfi_obs)
+    exact = session.search_exact(queries_small)
+    oracle = {r.rid: float(np.asarray(exact.dists)[r.pool_row, 0])
+              for r in trace}
+    rep1, snap1, chrome1 = _serve_once(lfi_obs, trace, oracle)
+    rep2, snap2, chrome2 = _serve_once(lfi_obs, trace, oracle)
+    assert rep1["n_requests"] == 48
+
+    # wall-clock leaked somewhere it shouldn't ⇒ these dumps differ
+    def masked(snap):
+        s = dict(snap)
+        wall = s.pop("wall")
+        return s, wall
+    s1, wall1 = masked(snap1)
+    s2, _ = masked(snap2)
+    assert json.dumps(s1, sort_keys=True) == json.dumps(s2, sort_keys=True)
+    assert json.dumps(chrome1, sort_keys=True) \
+        == json.dumps(chrome2, sort_keys=True)
+
+    # ... and the run did populate every layer being compared
+    assert s1["counters"]["serve_requests_total"] == 48.0
+    assert s1["histograms"]["serve_latency_s"]["count"] == 48
+    assert wall1["histograms"]["serve_form_s"]["count"] == rep1["n_batches"]
+    assert any(k.startswith("serve_recall_windowed") for k in s1["gauges"])
+    spans_seen = {e["name"] for e in chrome1["traceEvents"]
+                  if e["ph"] == "X"}
+    assert "serve.dispatch" in spans_seen and "serve.harvest" in spans_seen
+
+
+def test_zero_request_serve_report_is_nan_safe(lfi_obs, capsys):
+    session = ServingSession(lfi_obs)
+    report = session.serve([], service_time=lambda b: 0.001)
+    assert report["n_requests"] == 0
+    assert "throughput_qps" not in report
+    assert np.isnan(report["p50"])
+    _print_serve_report(report)                 # must not raise (regression)
+    out = capsys.readouterr().out
+    assert "0 requests" in out and "no completions" in out
+    assert session.telemetry.summary()["n_requests"] == 0
