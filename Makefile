@@ -17,7 +17,7 @@ export PYTHONPATH
 
 .PHONY: check test test-fast test-sanitize lint lint-invariants bench \
 	bench-engine bench-build bench-dist bench-serve bench-serve-quick \
-	bench-filters bench-obs dev-deps
+	bench-filters bench-obs bench-obs-quick dev-deps
 
 check: test test-sanitize
 
@@ -70,6 +70,11 @@ bench-filters:
 
 bench-obs:
 	python -m benchmarks.run --suite obs
+
+# CI-sized overhead + shadow-sweep smoke (writes
+# experiments/obs_bench_quick.json)
+bench-obs-quick:
+	python -m benchmarks.obs_bench --quick
 
 dev-deps:
 	pip install -r requirements-dev.txt

@@ -38,6 +38,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import conformal, engine
+from ..obs import audit as obs_audit
+from ..obs.audit import FilterAudit
 from ..obs.trace import CascadeTrace
 from .build import LeaFiIndex
 
@@ -231,7 +233,7 @@ def _shard_pruning_inputs(lo, hi, w1, b1, w2, b2, y_mean, y_std, offsets,
 
 def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
                   bsf0, strategy="compact", max_survivors=None,
-                  dist_impl=None, bsf_ub=None, trace=False):
+                  dist_impl=None, bsf_ub=None, trace=False, audit=False):
     """Cascade over this shard's leaves given a starting global bsf.
 
     Routes through the common engine's shard_map-safe forms:
@@ -249,8 +251,23 @@ def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
     ``trace=True`` (Python-level, shard_map-legal) appends a per-query
     shard-local :class:`~repro.obs.trace.CascadeTrace` (``probed`` stays 0
     here — the shard body accounts for its phase-1 probe itself).
+
+    ``audit=True`` additionally appends the shard-local per-(query, leaf)
+    :class:`~repro.obs.audit.AuditParts` planes — the return is
+    ``(bsf, n_s[, trace][, parts])`` in flag order.
     """
     if strategy == "scan":
+        if audit:
+            bsf, n_s, (n_box, n_seed, n_pf,
+                       n_rows), parts = engine.masked_bsf_scan(
+                sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
+                bsf0, bsf_ub=bsf_ub, audit=True)
+            if trace:
+                zq = jnp.zeros_like(n_s)
+                return (bsf, n_s,
+                        CascadeTrace(n_box, n_seed, n_pf, zq, n_s, zq,
+                                     n_rows), parts)
+            return bsf, n_s, parts
         if trace:
             bsf, n_s, (n_box, n_seed, n_pf, n_rows) = engine.masked_bsf_scan(
                 sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
@@ -264,7 +281,7 @@ def _local_search(sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf,
         return engine.compact_bsf_cascade(
             sh_series, sh_start, sh_size, lb, d_F, queries, max_leaf, bsf0,
             max_survivors=max_survivors, dist_impl=dist_impl, bsf_ub=bsf_ub,
-            trace=trace)
+            trace=trace, audit=audit)
     raise ValueError(f"unknown distributed shard strategy {strategy!r}")
 
 
@@ -299,7 +316,9 @@ def _make_shard_body(max_leaf: int, model_axis: str,
                      max_survivors: Optional[int] = None,
                      dist_impl: Optional[str] = None,
                      per_query_offsets: bool = False,
-                     trace: bool = False):
+                     trace: bool = False,
+                     audit: bool = False,
+                     data_axes=("data",)):
     """The per-shard two-phase search body (runs under shard_map).
 
     Phase 1 probes each query's most promising local leaf (engine probe) and
@@ -323,6 +342,16 @@ def _make_shard_body(max_leaf: int, model_axis: str,
     includes each shard's probe rows.  Global accounting over S shards of P
     leaf slots: ``Σ pruned = S·P − survivors`` (the probe leaves are also
     cascade-accounted per shard) with ``probed == S``.
+
+    With ``audit=True`` the body returns one more output — the per-leaf
+    :class:`~repro.obs.audit.FilterAudit` for this shard's ``P`` local
+    slots, psum'd over ``data_axes`` (queries shard there, so the data-axis
+    collective restores full-batch per-leaf counts; ``resid_min`` pmins).
+    The model axis is deliberately *not* reduced: each model shard owns
+    distinct leaves, so its ``(1, P)`` rows concatenate into the global
+    ``(S, P)`` shard-slot layout the host folds with
+    :func:`repro.obs.audit.scatter_global` + ``ShardedLeaFi.leaf_global``.
+    The phase-1 probe pass is not audited (see ``repro.obs.audit``).
     """
 
     def _traced_reduce(bsf, n_s, tr, lb, size):
@@ -332,10 +361,33 @@ def _make_shard_body(max_leaf: int, model_axis: str,
         tr = tr._replace(probed=tr.probed + 1,
                          distances=tr.distances + probe_rows)
         tr = jax.tree.map(lambda x: jax.lax.psum(x, model_axis), tr)
+        return jax.tree.map(lambda x: x[None], tr)
+
+    def _audit_reduce(parts, d_F, size):
+        fa = obs_audit.reduce_parts(parts, d_F, size)
+        if data_axes:
+            fa = FilterAudit(*(
+                jax.lax.pmin(x, data_axes) if name == "resid_min"
+                else jax.lax.psum(x, data_axes)
+                for name, x in zip(FilterAudit._fields, fa)))
+        return jax.tree.map(lambda x: x[None], fa)
+
+    def _phase2(series, start, size, lb, d_F, queries, bsf0, bsf_ub=None):
+        out = _local_search(series, start, size, lb, d_F, queries,
+                            max_leaf, bsf0, strategy=strategy,
+                            max_survivors=max_survivors,
+                            dist_impl=dist_impl, bsf_ub=bsf_ub,
+                            trace=trace, audit=audit)
+        bsf, n_s = out[0], out[1]
+        rest = list(out[2:])
         nn = jax.lax.pmin(bsf, model_axis)                      # collective 2
         total_searched = jax.lax.psum(n_s, model_axis)
-        return (nn[None], total_searched[None],
-                jax.tree.map(lambda x: x[None], tr))
+        rets = (nn[None], total_searched[None])
+        if trace:
+            rets = rets + (_traced_reduce(bsf, n_s, rest.pop(0), lb, size),)
+        if audit:
+            rets = rets + (_audit_reduce(rest.pop(0), d_F, size),)
+        return rets
 
     def search_fn(series, start, size, lo, hi, w1, b1, w2, b2, y_mean,
                   y_std, offsets, has_filter, queries, qcoords):
@@ -357,20 +409,7 @@ def _make_shard_body(max_leaf: int, model_axis: str,
         bsf0 = jax.lax.pmin(bsf_local, model_axis)              # collective 1
 
         # phase 2: full cascade against the global bsf
-        if trace:
-            bsf, n_s, tr = _local_search(series, start, size, lb, d_F,
-                                         queries, max_leaf, bsf0,
-                                         strategy=strategy,
-                                         max_survivors=max_survivors,
-                                         dist_impl=dist_impl, trace=True)
-            return _traced_reduce(bsf, n_s, tr, lb, size)
-        bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
-                                 max_leaf, bsf0, strategy=strategy,
-                                 max_survivors=max_survivors,
-                                 dist_impl=dist_impl)
-        nn = jax.lax.pmin(bsf, model_axis)                      # collective 2
-        total_searched = jax.lax.psum(n_s, model_axis)
-        return nn[None], total_searched[None]
+        return _phase2(series, start, size, lb, d_F, queries, bsf0)
 
     def search_fn_pq(series, start, size, lo, hi, w1, b1, w2, b2, y_mean,
                      y_std, offsets, has_filter, leaf_global, queries,
@@ -400,21 +439,8 @@ def _make_shard_body(max_leaf: int, model_axis: str,
 
         # warm bound tightens prune decisions only — never folded into bsf0
         # (the pmin'd bsf must stay a witnessed distance on every shard).
-        if trace:
-            bsf, n_s, tr = _local_search(series, start, size, lb, d_F,
-                                         queries, max_leaf, bsf0,
-                                         strategy=strategy,
-                                         max_survivors=max_survivors,
-                                         dist_impl=dist_impl, bsf_ub=bsf_ub,
-                                         trace=True)
-            return _traced_reduce(bsf, n_s, tr, lb, size)
-        bsf, n_s = _local_search(series, start, size, lb, d_F, queries,
-                                 max_leaf, bsf0, strategy=strategy,
-                                 max_survivors=max_survivors,
-                                 dist_impl=dist_impl, bsf_ub=bsf_ub)
-        nn = jax.lax.pmin(bsf, model_axis)                      # collective 2
-        total_searched = jax.lax.psum(n_s, model_axis)
-        return nn[None], total_searched[None]
+        return _phase2(series, start, size, lb, d_F, queries, bsf0,
+                       bsf_ub=bsf_ub)
 
     return search_fn_pq if per_query_offsets else search_fn
 
@@ -446,7 +472,8 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
                             dist_impl: Optional[str] = None,
                             per_query_offsets: bool = False,
                             donate: bool = False,
-                            trace: bool = False):
+                            trace: bool = False,
+                            audit: bool = False):
     """Build the jitted multi-chip search step over ``mesh``.
 
     Returns fn(queries (Q, m)) → (nn_dist (Q,), total_searched (Q,)), where
@@ -476,6 +503,14 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
     :class:`~repro.obs.trace.CascadeTrace` psum'd across shards (see
     ``_make_shard_body``); the nn/searched outputs are bitwise those of
     the untraced program.
+
+    audit: the returned fn additionally yields a per-leaf
+    :class:`~repro.obs.audit.FilterAudit` in the ``(S, P)`` shard-slot
+    layout — psum'd over the data axes inside the body, concatenated
+    across the model axis (each model shard owns distinct leaves).  Fold
+    to global ``(L,)`` leaf order with
+    ``obs.audit.scatter_global(fa, sharded.leaf_global, n_leaves)``.
+    Output order is ``(nn, searched[, trace][, audit])`` in flag order.
     """
     max_leaf = sharded.max_leaf
     spec_idx = P(model_axis)
@@ -483,11 +518,18 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
     search_fn = _make_shard_body(max_leaf, model_axis, strategy,
                                  max_survivors, dist_impl,
                                  per_query_offsets=per_query_offsets,
-                                 trace=trace)
+                                 trace=trace, audit=audit,
+                                 data_axes=data_axes)
     spec_out = P(model_axis, *data_axes)
     out_specs = (spec_out, spec_out)
     if trace:
         out_specs = out_specs + (CascadeTrace(*((spec_out,) * 7)),)
+    if audit:
+        # audit fields shard over the model axis only: the leading (1,)
+        # per-shard row concatenates into the (S, P) layout, and the
+        # data-axis psum already replicated the values across data shards.
+        out_specs = out_specs + (FilterAudit(
+            *((P(model_axis),) * len(FilterAudit._fields))),)
 
     idx_args = (sharded.series, sharded.leaf_start, sharded.leaf_size,
                 sharded.lb_lo, sharded.lb_hi, sharded.w1, sharded.b1,
@@ -514,12 +556,13 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
                               qscale=sharded.qscale)
             qcoords = sh.query_coords(queries)
             out = smapped(*idx_pq, queries, qcoords, qoffsets, bsf_ub)
+            rets = (out[0][0], out[1][0])
+            rest = list(out[2:])
             if trace:
-                nn, total_searched, tr = out
-                return (nn[0], total_searched[0],
-                        jax.tree.map(lambda x: x[0], tr))
-            nn, total_searched = out
-            return nn[0], total_searched[0]
+                rets = rets + (jax.tree.map(lambda x: x[0], rest.pop(0)),)
+            if audit:
+                rets = rets + (rest.pop(0),)    # (S, P) layout — no unwrap
+            return rets
 
         donate_kw = {}
         if donate and jax.default_backend() != "cpu":
@@ -543,11 +586,12 @@ def make_distributed_search(mesh: Mesh, sharded: ShardedLeaFi,
         out = smapped(*idx_args, queries, qcoords)
         # collectives replicate both outputs across the model axis; row 0 is
         # the global nn and the all-shard total searched count per query
+        rets = (out[0][0], out[1][0])
+        rest = list(out[2:])
         if trace:
-            nn, total_searched, tr = out
-            return (nn[0], total_searched[0],
-                    jax.tree.map(lambda x: x[0], tr))
-        nn, total_searched = out
-        return nn[0], total_searched[0]
+            rets = rets + (jax.tree.map(lambda x: x[0], rest.pop(0)),)
+        if audit:
+            rets = rets + (rest.pop(0),)        # (S, P) layout — no unwrap
+        return rets
 
     return run, idx_args, spec_idx, spec_q

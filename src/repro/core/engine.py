@@ -97,6 +97,8 @@ import numpy as np
 
 from .. import sanitize
 from ..kernels.l2_scan import ops as l2_ops
+from ..obs import audit as obs_audit
+from ..obs.audit import AuditParts, FilterAudit
 from ..obs.trace import CascadeTrace, select as _trace_select, zero_trace
 
 _INF = jnp.float32(jnp.inf)
@@ -118,6 +120,7 @@ class EngineResult:
     n_pruned_filter: jnp.ndarray  # (Q,)
     n_computed: jnp.ndarray      # (Q,) leaves distance-computed (≥ n_searched)
     trace: Optional[CascadeTrace] = None  # run_cascade(trace=True) flight data
+    audit: Optional[FilterAudit] = None   # run_cascade(audit=True) leaf health
 
 
 def _next_pow2(n: int) -> int:
@@ -130,11 +133,13 @@ def _next_pow2(n: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_leaf", "trace"))
+@functools.partial(jax.jit,
+                   static_argnames=("k", "max_leaf", "trace", "audit"))
 def _scan_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
-                  bsf_ub, k, max_leaf, trace=False):
+                  bsf_ub, k, max_leaf, trace=False, audit=False):
     order = jnp.argsort(d_lb, axis=1)
     row_ids = jnp.arange(max_leaf)
+    L = d_lb.shape[1]
 
     def per_query(q, lb_row, dF_row, order_row, ub):
         def step(carry, leaf):
@@ -195,6 +200,53 @@ def _scan_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
                     n_seed + p_seed.astype(jnp.int32),
                     n_rows + rows), None
 
+        def step_audit(carry, leaf):
+            # mirrors `step_traced` exactly and additionally emits the
+            # per-leaf decision planes (visit order) for the FilterAudit
+            # reduction: d.min() over the masked slab is the leaf's exact
+            # NN distance when scanned — a free byproduct of the distance
+            # pass — and +inf when pruned.
+            topk_d, topk_i, n_s, n_plb, n_pf, n_box, n_seed, n_rows = carry
+            bsf = topk_d[-1]
+            p_lb = lb_row[leaf] > jnp.minimum(bsf, ub)
+            p_box = lb_row[leaf] > bsf
+            p_seed = jnp.logical_and(p_lb, ~p_box)
+            p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
+            pruned = p_lb | p_f
+            start = leaf_start[leaf]
+            slab = jax.lax.dynamic_slice_in_dim(series, start, max_leaf, 0)
+            diff = slab - q[None, :]
+            d = jnp.sqrt((diff * diff).sum(-1))
+            d = jnp.where((row_ids < leaf_size[leaf]) & ~pruned, d, _INF)
+            ids = (start + row_ids).astype(jnp.int32)
+            alld = jnp.concatenate([topk_d, d])
+            alli = jnp.concatenate([topk_i, ids])
+            neg_top, arg = jax.lax.top_k(-alld, k)
+            rows = jnp.where(pruned, 0, leaf_size[leaf]).astype(jnp.int32)
+            ys = (p_box, p_seed, p_f, ~pruned, d.min())
+            return (-neg_top, alli[arg],
+                    n_s + (~pruned).astype(jnp.int32),
+                    n_plb + p_lb.astype(jnp.int32),
+                    n_pf + p_f.astype(jnp.int32),
+                    n_box + p_box.astype(jnp.int32),
+                    n_seed + p_seed.astype(jnp.int32),
+                    n_rows + rows), ys
+
+        if audit:
+            init = (jnp.full((k,), _INF), jnp.full((k,), -1, jnp.int32),
+                    jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                    jnp.int32(0), jnp.int32(0), jnp.int32(0))
+            out, ys = jax.lax.scan(step_audit, init, order_row)
+            vb, vs, vf, vk, vnn = ys              # (L,) in visit order
+
+            def scat(v, fill):
+                base = jnp.full((L,), fill, v.dtype)
+                return base.at[order_row].set(v)  # order is a permutation
+
+            parts = AuditParts(scat(vb, False), scat(vs, False),
+                               scat(vf, False), scat(vk, False),
+                               scat(vk, False), scat(vnn, _INF))
+            return out + (parts,)
         if trace:
             init = (jnp.full((k,), _INF), jnp.full((k,), -1, jnp.int32),
                     jnp.int32(0), jnp.int32(0), jnp.int32(0),
@@ -452,8 +504,28 @@ def _compact_trace_stats(mask, d_lb, bsf0, bsf0m, leaf_size, leaf0):
         distances=dist_rows)
 
 
+@jax.jit
+def _compact_audit_parts(mask, d_lb, bsf0, bsf0m, leaf_nn):
+    """The compact path's per-(query, leaf) audit planes, as ONE program.
+
+    Same mask-stage partition as ``_compact_trace_stats`` (and the same
+    one-dispatch reasoning); ``kept`` is the survivor mask itself (the
+    probe leaf included — its rows were paid twice, probe + gather), and
+    ``scored`` is every leaf with a finite gathered summary — equal to
+    ``kept`` for the per-query gather impls, a superset under the
+    pairwise union (co-resident leaves are scored for free).
+    """
+    not_m = ~mask
+    p_box = not_m & (d_lb > bsf0[:, None])
+    p_seed = not_m & ~p_box & (d_lb > bsf0m[:, None])
+    p_filt = not_m & ~p_box & ~p_seed
+    return AuditParts(p_box, p_seed, p_filt, mask,
+                      jnp.isfinite(leaf_nn), leaf_nn)
+
+
 def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
-                     bsf_ub, k, max_leaf, dist_impl, trace=False):
+                     bsf_ub, k, max_leaf, dist_impl, trace=False,
+                     audit=False):
     Q, m = queries.shape
     L = leaf_start.shape[0]
     kk = min(k, max_leaf)
@@ -571,11 +643,18 @@ def _compact_cascade(series, leaf_start, leaf_size, queries, d_lb, d_F,
     # -- phase 3: exact cascade replay over the per-leaf summaries ----------
     td, ti, n_s, n_plb, n_pf = replay_cascade(
         leaf_d, leaf_i, d_lb, d_F, order, k=k, bsf_ub=bsf_ub)
+    out = (td, ti, n_s, n_plb, n_pf, jnp.asarray(computed))
     if trace:
         if dist_rows is not aux.distances:       # pairwise union accounting
             aux = aux._replace(distances=dist_rows)
-        return td, ti, n_s, n_plb, n_pf, jnp.asarray(computed), aux
-    return td, ti, n_s, n_plb, n_pf, jnp.asarray(computed)
+        out = out + (aux,)
+    if audit:
+        # leaf_d already has the scratch row dropped and the probe leaf's
+        # values written verbatim, so column 0 is each scored leaf's exact
+        # NN distance (+inf where the leaf was never gathered).
+        out = out + (_compact_audit_parts(mask, d_lb, bsf0, bsf0m,
+                                          leaf_d[:, :, 0]),)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -597,6 +676,7 @@ def run_cascade(
     dist_impl: Optional[str] = None,
     bsf_ub: Optional[jnp.ndarray] = None,
     trace: bool = False,
+    audit: bool = False,
 ) -> EngineResult:
     """Batched top-k leaf-cascade search over precomputed pruning inputs.
 
@@ -633,14 +713,33 @@ def run_cascade(
     accounting identity).  Results are bitwise-identical either way, and
     ``trace=False`` lowers to the byte-identical program (the flag is a
     Python-level branch on extra masked-sum counters only).
+    audit: static flag; True additionally returns a per-leaf
+    :class:`~repro.obs.audit.FilterAudit` on ``EngineResult.audit`` —
+    prune counts by bound, work saved, and prediction-residual statistics
+    (``true_leaf_nn − d_F``) for the leaves the engine scored exactly, at
+    zero extra distance computations (see ``repro.obs.audit`` for the
+    residual semantics and the per-leaf accounting identity).  Same
+    discipline as ``trace``: results are bitwise-identical either way and
+    ``audit=False`` lowers to the byte-identical program.
     """
     if strategy == "auto":
         strategy = "compact"
     ub = (jnp.full(queries.shape[0], _INF) if bsf_ub is None
           else jnp.asarray(bsf_ub, jnp.float32))
     aux = None
+    parts = None
     if strategy == "scan":
-        if trace:
+        if audit:
+            (td, ti, n_s, n_plb, n_pf, n_box, n_seed, n_rows,
+             parts) = sanitize.call(
+                _scan_cascade, series, leaf_start, leaf_size, queries,
+                d_lb, d_F, ub, k=k, max_leaf=max_leaf, trace=trace,
+                audit=True)
+            if trace:
+                zeros = jnp.zeros(queries.shape[0], jnp.int32)
+                aux = CascadeTrace(n_box, n_seed, n_pf, zeros, n_s, zeros,
+                                   n_rows)
+        elif trace:
             (td, ti, n_s, n_plb, n_pf, n_box, n_seed,
              n_rows) = sanitize.call(
                 _scan_cascade, series, leaf_start, leaf_size, queries,
@@ -654,17 +753,23 @@ def run_cascade(
                 d_lb, d_F, ub, k=k, max_leaf=max_leaf)
         n_c = jnp.full(queries.shape[0], leaf_start.shape[0], jnp.int32)
     elif strategy == "compact":
+        out = _compact_cascade(
+            series, leaf_start, leaf_size, queries, d_lb, d_F, ub,
+            k=k, max_leaf=max_leaf, dist_impl=dist_impl, trace=trace,
+            audit=audit)
+        td, ti, n_s, n_plb, n_pf, n_c = out[:6]
+        rest = list(out[6:])
         if trace:
-            td, ti, n_s, n_plb, n_pf, n_c, aux = _compact_cascade(
-                series, leaf_start, leaf_size, queries, d_lb, d_F, ub,
-                k=k, max_leaf=max_leaf, dist_impl=dist_impl, trace=True)
-        else:
-            td, ti, n_s, n_plb, n_pf, n_c = _compact_cascade(
-                series, leaf_start, leaf_size, queries, d_lb, d_F, ub,
-                k=k, max_leaf=max_leaf, dist_impl=dist_impl)
+            aux = rest.pop(0)
+        if audit:
+            parts = rest.pop(0)
     else:
         raise ValueError(f"unknown engine strategy {strategy!r}")
-    return EngineResult(td, ti, n_s, n_plb, n_pf, n_c, aux)
+    fa = None
+    if audit:
+        fa = obs_audit.reduce_parts(parts, jnp.asarray(d_F, jnp.float32),
+                                    leaf_size)
+    return EngineResult(td, ti, n_s, n_plb, n_pf, n_c, aux, fa)
 
 
 # ---------------------------------------------------------------------------
@@ -804,7 +909,7 @@ def probe_best_leaf(series, leaf_start, leaf_size, lb, queries, max_leaf):
 
 
 def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
-                    max_leaf, bsf0, bsf_ub=None, trace=False):
+                    max_leaf, bsf0, bsf_ub=None, trace=False, audit=False):
     """Best-so-far cascade over all leaves from a seed bsf → (bsf, n_s).
 
     The 1-NN, distance-only form of ``strategy="scan"``; leaves with size 0
@@ -820,9 +925,16 @@ def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
     appends a ``(n_box, n_seed, n_filter, n_rows)`` tuple of ``(Q,)``
     step-level counters (box/seed split of the lb prune, filter prunes,
     distance rows consulted); padding leaves count as box-pruned.
+
+    ``audit=True`` (also Python-level, shard_map-safe) returns
+    ``(bsf, n_s, trace_tuple, parts)`` regardless of ``trace`` — the same
+    step-level counters plus the per-(query, leaf)
+    :class:`~repro.obs.audit.AuditParts` decision planes in leaf order,
+    for the :func:`repro.obs.audit.reduce_parts` leafwise reduction.
     """
     row_ids = jnp.arange(max_leaf)
     order = jnp.argsort(lb, axis=1)
+    L = lb.shape[1]
     if bsf_ub is None:
         bsf_ub = jnp.full(queries.shape[0], _INF)
 
@@ -865,6 +977,44 @@ def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
                     n_pf + p_f.astype(jnp.int32),
                     n_rows + rows), None
 
+        def step_audit(carry, leaf):
+            # mirrors `step_traced` and emits the per-leaf decision planes
+            # (visit order); d.min() is the leaf's exact NN distance when
+            # scanned, +inf when pruned or padding.
+            bsf, n_s, n_box, n_seed, n_pf, n_rows = carry
+            valid = leaf_size[leaf] > 0
+            p_lb = jnp.logical_or(lb_row[leaf] > jnp.minimum(bsf, ub),
+                                  ~valid)
+            p_box = jnp.logical_or(lb_row[leaf] > bsf, ~valid)
+            p_seed = jnp.logical_and(p_lb, ~p_box)
+            p_f = jnp.logical_and(~p_lb, dF_row[leaf] > bsf)
+            pruned = p_lb | p_f
+            slab = jax.lax.dynamic_slice_in_dim(
+                series, leaf_start[leaf], max_leaf, 0)
+            diff = slab - q[None, :]
+            d = jnp.sqrt((diff * diff).sum(-1))
+            d = jnp.where((row_ids < leaf_size[leaf]) & ~pruned, d, _INF)
+            bsf = jnp.minimum(bsf, d.min())
+            rows = jnp.where(pruned, 0, leaf_size[leaf]).astype(jnp.int32)
+            ys = (p_box, p_seed, p_f, ~pruned, d.min())
+            return (bsf, n_s + (~pruned).astype(jnp.int32),
+                    n_box + p_box.astype(jnp.int32),
+                    n_seed + p_seed.astype(jnp.int32),
+                    n_pf + p_f.astype(jnp.int32),
+                    n_rows + rows), ys
+
+        if audit:
+            init = (bsf_init, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                    jnp.int32(0), jnp.int32(0))
+            (bsf, n_s, n_box, n_seed, n_pf, n_rows), ys = jax.lax.scan(
+                step_audit, init, order_row)
+            vb, vs, vf, vk, vnn = ys              # (L,) in visit order
+
+            def scat(v):
+                return jnp.zeros((L,), v.dtype).at[order_row].set(v)
+
+            return (bsf, n_s, n_box, n_seed, n_pf, n_rows,
+                    scat(vb), scat(vs), scat(vf), scat(vk), scat(vnn))
         if trace:
             init = (bsf_init, jnp.int32(0), jnp.int32(0), jnp.int32(0),
                     jnp.int32(0), jnp.int32(0))
@@ -876,6 +1026,10 @@ def masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F, queries,
         return bsf, n_s
 
     out = jax.vmap(per_query)(queries, lb, d_F, order, bsf0, bsf_ub)
+    if audit:
+        bsf, n_s, n_box, n_seed, n_pf, n_rows, pb, ps, pf_, kept, nn = out
+        parts = AuditParts(pb, ps, pf_, kept, kept, nn)
+        return bsf, n_s, (n_box, n_seed, n_pf, n_rows), parts
     if trace:
         bsf, n_s, n_box, n_seed, n_pf, n_rows = out
         return bsf, n_s, (n_box, n_seed, n_pf, n_rows)
@@ -928,7 +1082,8 @@ def tuned_max_survivors(survivor_counts, n_leaves: int,
 
 def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
                         max_leaf, bsf0, *, max_survivors=None,
-                        dist_impl=None, bsf_ub=None, trace=False):
+                        dist_impl=None, bsf_ub=None, trace=False,
+                        audit=False):
     """Fixed-width survivor compaction form of ``masked_bsf_scan``.
 
     Same contract — 1-NN bsf cascade from a seed ``bsf0`` over all leaves,
@@ -966,6 +1121,14 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
     carry the scan fallback's step-level counters instead.  Results are
     bitwise-identical either way; ``trace=False`` lowers to the
     byte-identical program.
+
+    ``audit=True`` (same discipline) additionally appends the
+    per-(query, leaf) :class:`~repro.obs.audit.AuditParts` decision planes
+    — mask-stage attribution with ``kept`` = the survivor mask and
+    ``leaf_nn`` from the candidate pass's per-leaf minima; overflow
+    queries carry the masked-scan fallback's step-level planes instead
+    (selected per query before any leafwise reduction).  The return is
+    ``(bsf, n_s[, trace][, parts])`` in flag order.
     """
     Q, m = queries.shape
     P = leaf_start.shape[0]
@@ -1022,7 +1185,7 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
     # per query; the cond keeps the scan off the hot path when nobody
     # overflows.
     overflow = n_surv > C
-    if not trace:
+    if not (trace or audit):
         bsf_s, ns_s = jax.lax.cond(
             overflow.any(),
             lambda: masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F,
@@ -1032,13 +1195,22 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
                 jnp.where(overflow, ns_s, ns_c))
 
     zq = jnp.zeros((Q,), jnp.int32)
-    bsf_s, ns_s, scan_tr = jax.lax.cond(
-        overflow.any(),
-        lambda: masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F,
-                                queries, max_leaf, bsf0, bsf_ub,
-                                trace=True),
-        lambda: (jnp.full((Q,), _INF), jnp.zeros((Q,), jnp.int32),
-                 (zq, zq, zq, zq)))
+    if audit:
+        bsf_s, ns_s, scan_tr, scan_parts = jax.lax.cond(
+            overflow.any(),
+            lambda: masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F,
+                                    queries, max_leaf, bsf0, bsf_ub,
+                                    audit=True),
+            lambda: (jnp.full((Q,), _INF), jnp.zeros((Q,), jnp.int32),
+                     (zq, zq, zq, zq), obs_audit.zero_parts(Q, P)))
+    else:
+        bsf_s, ns_s, scan_tr = jax.lax.cond(
+            overflow.any(),
+            lambda: masked_bsf_scan(series, leaf_start, leaf_size, lb, d_F,
+                                    queries, max_leaf, bsf0, bsf_ub,
+                                    trace=True),
+            lambda: (jnp.full((Q,), _INF), jnp.zeros((Q,), jnp.int32),
+                     (zq, zq, zq, zq)))
 
     # mask-stage attribution of the non-survivors (exact partition —
     # ~survive ⇒ invalid, lb > bsf0m, or d_F > bsf0; invalid/padding leaves
@@ -1047,20 +1219,28 @@ def compact_bsf_cascade(series, leaf_start, leaf_size, lb, d_F, queries,
     p_box = not_s & ((lb > bsf0[:, None]) | ~valid[None, :])
     p_seed = not_s & ~p_box & (lb > bsf0m[:, None])
     p_filt = not_s & ~p_box & ~p_seed
-    sizes = leaf_size.astype(jnp.int32)
-    compact_rows = jnp.where(survive, sizes[None, :], 0).sum(axis=1)
-    s_box, s_seed, s_pf, s_rows = scan_tr
-    compact_tr = CascadeTrace(
-        pruned_box=p_box.sum(axis=1).astype(jnp.int32),
-        pruned_seed=p_seed.sum(axis=1).astype(jnp.int32),
-        pruned_filter=p_filt.sum(axis=1).astype(jnp.int32),
-        probed=zq, survivors=n_surv, overflow=zq,
-        distances=compact_rows)
-    scan_as_tr = CascadeTrace(
-        pruned_box=s_box, pruned_seed=s_seed, pruned_filter=s_pf,
-        probed=zq, survivors=ns_s, overflow=jnp.ones((Q,), jnp.int32),
-        distances=s_rows)
-    aux = _trace_select(overflow, scan_as_tr, compact_tr)
-    return (jnp.where(overflow, bsf_s, bsf_c),
-            jnp.where(overflow, ns_s, ns_c),
-            aux)
+    rets = (jnp.where(overflow, bsf_s, bsf_c),
+            jnp.where(overflow, ns_s, ns_c))
+    if trace:
+        sizes = leaf_size.astype(jnp.int32)
+        compact_rows = jnp.where(survive, sizes[None, :], 0).sum(axis=1)
+        s_box, s_seed, s_pf, s_rows = scan_tr
+        compact_tr = CascadeTrace(
+            pruned_box=p_box.sum(axis=1).astype(jnp.int32),
+            pruned_seed=p_seed.sum(axis=1).astype(jnp.int32),
+            pruned_filter=p_filt.sum(axis=1).astype(jnp.int32),
+            probed=zq, survivors=n_surv, overflow=zq,
+            distances=compact_rows)
+        scan_as_tr = CascadeTrace(
+            pruned_box=s_box, pruned_seed=s_seed, pruned_filter=s_pf,
+            probed=zq, survivors=ns_s, overflow=jnp.ones((Q,), jnp.int32),
+            distances=s_rows)
+        rets = rets + (_trace_select(overflow, scan_as_tr, compact_tr),)
+    if audit:
+        # leaf_min holds each survivor's exact NN distance (+inf for
+        # never-gathered leaves), so it doubles as the audit's leaf_nn.
+        compact_parts = AuditParts(p_box, p_seed, p_filt, survive,
+                                   jnp.isfinite(leaf_min), leaf_min)
+        rets = rets + (obs_audit.select_parts(overflow, scan_parts,
+                                              compact_parts),)
+    return rets

@@ -57,6 +57,9 @@ class SearchResult:
     # search_batched(trace=True): host-side dict of the engine's per-query
     # CascadeTrace fields (repro.obs.trace.to_numpy), else None
     trace: Optional[dict] = None
+    # search_batched(audit=True): host-side dict of the engine's per-leaf
+    # FilterAudit fields (repro.obs.audit.to_numpy), else None
+    audit: Optional[dict] = None
 
     @property
     def pruning_ratio(self) -> np.ndarray:
@@ -88,6 +91,7 @@ class PendingSearch:
 
     def result(self) -> SearchResult:
         """Materialize to a :class:`SearchResult` (blocks on the device)."""
+        from ..obs import audit as obs_audit
         from ..obs import trace as obs_trace
         r = self.raw
         ids_sorted = np.asarray(r.topk_i)
@@ -100,7 +104,9 @@ class PendingSearch:
             pruned_lb=np.asarray(r.n_pruned_lb),
             pruned_filter=np.asarray(r.n_pruned_filter),
             n_leaves=self.n_leaves, computed=np.asarray(r.n_computed),
-            trace=(None if r.trace is None else obs_trace.to_numpy(r.trace)))
+            trace=(None if r.trace is None else obs_trace.to_numpy(r.trace)),
+            audit=(None if r.audit is None
+                   else obs_audit.to_numpy(r.audit)))
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +179,7 @@ def search_batched_async(
     dist_impl: Optional[str] = None,
     bsf_ub: np.ndarray | None = None,
     trace: bool = False,
+    audit: bool = False,
 ) -> PendingSearch:
     """Dispatch a batched LeaFi search without blocking on the device.
 
@@ -187,6 +194,12 @@ def search_batched_async(
     through the cascade (per-query pruning attribution); the materialized
     ``SearchResult.trace`` is its numpy dict.  Results stay bitwise
     identical to ``trace=False``.
+
+    ``audit=True`` threads the engine's per-leaf
+    :class:`repro.obs.FilterAudit` (prune/kept counts by bound, work
+    saved, prediction-residual health stats — see ``repro.obs.audit``);
+    the materialized ``SearchResult.audit`` is its numpy dict.  Same
+    zero-cost-when-off discipline as ``trace``.
     """
     queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
     d_lb = bounds_mod.lower_bounds(index, queries)                  # (Q, L)
@@ -215,7 +228,7 @@ def search_batched_async(
         jnp.asarray(index.series), jnp.asarray(index.leaf_start),
         jnp.asarray(index.leaf_size), queries, d_lb, d_F,
         k=k, max_leaf=index.max_leaf_size, strategy=strategy,
-        dist_impl=dist_impl, bsf_ub=bsf_ub, trace=trace)
+        dist_impl=dist_impl, bsf_ub=bsf_ub, trace=trace, audit=audit)
     return PendingSearch(raw=res, order=np.asarray(index.order),
                          n_series=index.n_series, n_leaves=index.n_leaves)
 
@@ -236,6 +249,7 @@ def search_batched(
     dist_impl: Optional[str] = None,
     bsf_ub: np.ndarray | None = None,
     trace: bool = False,
+    audit: bool = False,
 ) -> SearchResult:
     """Batched LeaFi search.  Exact when filters are disabled.
 
@@ -254,7 +268,8 @@ def search_batched(
         index, queries, k=k, filter_params=filter_params, leaf_ids=leaf_ids,
         tuner=tuner, quality_target=quality_target, use_filters=use_filters,
         use_kernel=use_kernel, filter_type=filter_type, strategy=strategy,
-        dist_impl=dist_impl, bsf_ub=bsf_ub, trace=trace).result()
+        dist_impl=dist_impl, bsf_ub=bsf_ub, trace=trace,
+        audit=audit).result()
 
 
 def search_batched_grouped(

@@ -20,6 +20,13 @@ and per-target-group achieved recall.
 search (``core/distributed.py``) over every visible device, timing both
 per-shard strategies — with the fixed-width compaction's survivor capacity
 auto-tuned from the serving telemetry's observed survivor counts.
+
+Filter-health observability: ``--shadow-rate R`` re-executes a
+deterministic fraction R of requests through the exact scan off the
+critical path (true recall + per-miss leaf/bound attribution);
+``--health-dump PATH`` writes the windowed per-leaf scoreboard JSON
+(``Telemetry.filters_needing_attention`` is the programmatic form); and
+``--explain RID`` prints one request's full bound-attribution report.
 """
 from __future__ import annotations
 
@@ -71,10 +78,16 @@ def serve_leafi(args) -> None:
         set_recorder(recorder)
 
     targets = tuple(float(t) for t in args.targets.split(","))
+    # per-leaf health needs the engine's audit stream; shadow/health/explain
+    # all imply it (results stay bitwise identical with it on)
+    audit = bool(args.shadow_rate > 0 or args.health_dump
+                 or args.explain is not None)
+    session_kw = dict(strategy=args.strategy, warm_start=args.warm_start,
+                      audit=audit, shadow_rate=args.shadow_rate,
+                      shadow_seed=args.seed)
     if args.ckpt and os.path.exists(os.path.join(args.ckpt, "DONE")):
         t0 = time.perf_counter()
-        session = ServingSession.from_checkpoint(
-            args.ckpt, strategy=args.strategy, warm_start=args.warm_start)
+        session = ServingSession.from_checkpoint(args.ckpt, **session_kw)
         print(f"cold start from {args.ckpt}: "
               f"{time.perf_counter() - t0:.2f}s "
               f"({session.lfi.index.n_series} series, "
@@ -88,8 +101,7 @@ def serve_leafi(args) -> None:
             backbone="dstree", leaf_capacity=256, n_global=200, n_local=60,
             t_filter_over_t_series=20.0,
             train=filter_training.TrainConfig(epochs=40)))
-        session = ServingSession(lfi, strategy=args.strategy,
-                                 warm_start=args.warm_start)
+        session = ServingSession(lfi, **session_kw)
         if args.ckpt:
             session.save(args.ckpt)
             print(f"checkpointed index to {args.ckpt} "
@@ -133,6 +145,41 @@ def serve_leafi(args) -> None:
         recall_oracle=oracle, service_time=service_time,
         pipeline=args.pipeline)
     _print_serve_report(report)
+
+    if "shadow" in report:
+        sh = report["shadow"]
+        print(f"shadow audit: {sh['n_shadowed']} queries re-executed "
+              f"exactly (rate {args.shadow_rate:g}), true recall "
+              f"{sh['recall_mean']:.3f}, {len(sh['misses'])} lost true "
+              f"neighbor(s)")
+        for m in sh["misses"][:5]:
+            print(f"  rid {m['rid']}: neighbor #{m['id']} at "
+                  f"{m['dist']:.4f} lost to leaf {m['leaf']} "
+                  f"({m['bound']} bound)")
+    flagged = session.telemetry.filters_needing_attention()
+    if audit and flagged:
+        print(f"filters needing attention ({len(flagged)} leaves):")
+        for r in flagged[:5]:
+            print(f"  leaf {r.leaf}: {','.join(r.reasons)} "
+                  f"(violation rate {r.violation_rate:.3f}, worst "
+                  f"residual {r.resid_min:.3f}, shadow misses "
+                  f"{r.shadow_misses})")
+
+    if args.health_dump:
+        import json
+        with open(args.health_dump, "w") as fh:
+            json.dump(session.telemetry.health.snapshot(), fh, indent=2,
+                      default=float)
+        print(f"health scoreboard dumped to {args.health_dump}")
+
+    if args.explain is not None:
+        from ..obs import explain as obs_explain
+        from ..serving import explain_query
+        match = [r for r in trace if r.rid == args.explain] or [trace[0]]
+        r = match[0]
+        ctx = explain_query(session, r.query, target=r.quality_target,
+                            k=r.k, rid=r.rid)
+        print(obs_explain.render_text(ctx))
 
     if args.dist:
         if args.k == 1:
@@ -290,6 +337,18 @@ def main() -> None:
                     help="dump the serving metrics registry on exit: "
                          "JSON-lines, or Prometheus text exposition when "
                          "PATH ends in .prom (--arch leafi)")
+    ap.add_argument("--shadow-rate", type=float, default=0.0,
+                    help="fraction of requests re-executed exactly off the "
+                         "critical path for true-recall auditing "
+                         "(deterministic per-rid sampling; --arch leafi)")
+    ap.add_argument("--health-dump", default=None, metavar="PATH",
+                    help="dump the per-leaf filter-health scoreboard "
+                         "(windowed audit + shadow evidence) as JSON on "
+                         "exit (--arch leafi; implies audited serving)")
+    ap.add_argument("--explain", type=int, default=None, metavar="RID",
+                    help="print a per-query explain report (bound "
+                         "attribution, residuals, shadow-truth misses) for "
+                         "one request id of the trace (--arch leafi)")
     ap.add_argument("--trace-dump", default=None, metavar="PATH",
                     help="dump a Chrome trace-event JSON of the serve run "
                          "(batch dispatch/in-flight/harvest lanes + host "

@@ -8,6 +8,16 @@ engine and the serving runtime can both build on it without cycles):
   pytree ``engine.run_cascade(trace=True)`` threads through the cascade
   (which bound pruned which leaf, survivors, overflow fallbacks, distance
   rows paid) — jit/shard_map-legal masked sums only.
+* :mod:`repro.obs.audit` — ``FilterAudit``, the per-**leaf** transpose of
+  the trace: prune counts by bound, work saved, and prediction-residual
+  stats (safety violations included) for every leaf the engine scored
+  exactly; psum-able through the distributed shard body.
+* :mod:`repro.obs.health` — ``LeafHealthBoard``, the windowed per-leaf
+  scoreboard over audit batches + shadow-truth misses behind the metrics
+  registry; ``filters_needing_attention()`` is the staleness trigger
+  ROADMAP item 1 consumes.
+* :mod:`repro.obs.explain` — pure renderers (text + JSON) for per-query
+  explain reports assembled by ``serving.shadow.explain_query``.
 * :mod:`repro.obs.metrics` — process-wide ``MetricsRegistry`` (counters /
   gauges / windowed histograms with labels, snapshot/delta, JSON-lines and
   Prometheus export) plus the ``RecallDriftMonitor`` staleness hook;
@@ -18,19 +28,25 @@ engine and the serving runtime can both build on it without cycles):
 
 See README "Observability" for schemas and the Perfetto workflow.
 """
+from .audit import (AuditParts, FilterAudit, RESIDUAL_EDGES,
+                    accounting_residual_leaf)
+from .health import LeafHealthBoard, LeafHealthReport
 from .metrics import (DEFAULT_REGISTRY, Counter, Gauge, Histogram,
                       MetricsRegistry, RecallDriftMonitor, get_registry)
 from .spans import Span, SpanRecorder, get_recorder, recording, set_recorder, span
 from .trace import (CascadeTrace, accounting_residual, combine, select,
                     to_numpy, zero_trace)
-from . import export
+from . import audit, explain, export, health
 
 __all__ = [
     "CascadeTrace", "accounting_residual", "combine", "select", "to_numpy",
     "zero_trace",
+    "AuditParts", "FilterAudit", "RESIDUAL_EDGES",
+    "accounting_residual_leaf",
+    "LeafHealthBoard", "LeafHealthReport",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "RecallDriftMonitor", "DEFAULT_REGISTRY", "get_registry",
     "Span", "SpanRecorder", "get_recorder", "recording", "set_recorder",
     "span",
-    "export",
+    "audit", "explain", "export", "health",
 ]

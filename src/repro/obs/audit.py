@@ -1,0 +1,235 @@
+"""Per-leaf filter health accumulators: the ``FilterAudit`` pytree.
+
+:class:`~repro.obs.trace.CascadeTrace` answers *which bound saved which
+compute* per **query**; ``FilterAudit`` transposes the question to per
+**leaf** — which learned filter is earning its keep, how tight its
+conformal-adjusted predictions run, and whether it violates its safety
+contract on the leaves the engine *did* score exactly — at zero extra
+distance computations.  Everything here is statically shaped masked
+arithmetic (LF001: no host syncs, no data-dependent shapes), so the audit
+is legal everywhere the engine is: jit, vmap, ``lax.cond`` branches, and
+``shard_map`` bodies (collectives apply leaf-wise via ``jax.tree.map``).
+
+Two-stage computation
+---------------------
+
+The engines emit per-(query, leaf) indicator planes — :class:`AuditParts`,
+all ``(Q, L)`` — at the stage where the prune decision actually happened
+(the same attribution stage ``CascadeTrace`` documents).  A single jitted
+reduction, :func:`reduce_parts`, then folds the planes over the query axis
+into the per-leaf :class:`FilterAudit` accumulators.  The split exists for
+``engine.compact_bsf_cascade``: its overflow ``lax.cond`` must select
+per-query between the compact mask-stage parts and the masked-scan
+fallback's step-level parts *before* the leafwise reduction collapses the
+query axis (:func:`select_parts`).
+
+Residual semantics
+------------------
+
+For every leaf the engine scored exactly (``scored``; the leaf's true NN
+distance to the query is a byproduct of the distance pass already paid),
+the prediction residual is::
+
+    residual = true_leaf_nn − d_F        # d_F = pred − conformal offset
+
+measured only where the leaf carries a filter (``d_F`` finite; unfiltered
+leaves ride at −inf and are excluded).  Positive residual = the adjusted
+prediction under-estimates the leaf's NN distance (safe, possibly loose);
+*negative* residual = the adjusted prediction over-estimates it — had the
+bsf sat between the two, the filter would have pruned a leaf holding a
+closer neighbor.  ``violations`` counts those, ``resid_min`` tracks the
+worst one, and ``resid_buckets`` histograms the distribution against the
+fixed :data:`RESIDUAL_EDGES` so tightness drift is visible without
+shipping raw residuals off-device.
+
+The per-leaf accounting identity (pinned in tests/test_obs.py)::
+
+    pruned_box + pruned_seed + pruned_filter + kept == n_queries
+
+holds per leaf for every engine path; for the distributed shard body it
+holds per shard *after* the data-axis psum (each data shard sees a slice
+of the query batch).  The distributed probe pass is deliberately **not**
+audited: it is a collective bsf-seeding device outside the cascade's
+prune decisions, and folding it in would double-count the probe leaf's
+scan (``CascadeTrace.probed`` still accounts for its cost).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_INF = jnp.float32(jnp.inf)
+
+#: Fixed residual-histogram bucket edges (z-normalized distance units).
+#: Buckets are ``(-inf, e0], (e0, e1], …, (e_last, inf)`` — the two buckets
+#: below 0.0 count safety-relevant negative residuals by severity, the ones
+#: above measure filter tightness (how much pruning headroom the conformal
+#: offset gave away).  Fixed at module level so histograms from different
+#: batches/shards/processes add without re-binning.
+RESIDUAL_EDGES = (-1.0, -0.1, 0.0, 0.1, 1.0, 10.0)
+N_BUCKETS = len(RESIDUAL_EDGES) + 1
+
+
+class AuditParts(NamedTuple):
+    """Per-(query, leaf) decision planes, all ``(Q, L)``.
+
+    ``p_box`` / ``p_seed`` / ``p_filter`` (bool): exact partition of the
+    leaves excluded from the distance pass, by the first bound that
+    excluded them (same stage semantics as ``CascadeTrace``).  ``kept``
+    (bool): the complement — leaves whose rows entered the distance pass
+    (for the compact strategy this includes the probe leaf).  ``scored``
+    (bool): leaves with an exactly computed leaf-NN distance in
+    ``leaf_nn`` — equals ``kept`` for the scan paths; a superset for the
+    pairwise-union compact path (union co-residents are scored for free).
+    ``leaf_nn`` (f32): the exact NN distance of the query to the leaf
+    where ``scored``, +inf elsewhere.
+    """
+
+    p_box: jnp.ndarray
+    p_seed: jnp.ndarray
+    p_filter: jnp.ndarray
+    kept: jnp.ndarray
+    scored: jnp.ndarray
+    leaf_nn: jnp.ndarray
+
+
+class FilterAudit(NamedTuple):
+    """Per-leaf audit accumulators; every field ``(L,)`` except
+    ``resid_buckets`` ``(L, N_BUCKETS)``.
+
+    Additive across batches/shards (:func:`combine`) except ``resid_min``,
+    which combines by minimum — both directions are handled leaf-wise, so
+    ``jax.lax.psum`` applies to everything but ``resid_min`` (the shard
+    body psums the sums and pmins the min).
+    """
+
+    pruned_box: jnp.ndarray      # int32: queries this leaf was box-pruned for
+    pruned_seed: jnp.ndarray     # int32: … excluded only by the bsf_ub seed
+    pruned_filter: jnp.ndarray   # int32: … excluded by the learned filter
+    kept: jnp.ndarray            # int32: queries whose distance pass paid it
+    scored: jnp.ndarray          # int32: queries with an exact leaf-NN here
+    rows_saved: jnp.ndarray      # int32: pruned-away distance rows (× size)
+    resid_count: jnp.ndarray     # int32: residual observations (scored+filtered)
+    resid_sum: jnp.ndarray       # f32:  Σ residual
+    resid_sumsq: jnp.ndarray     # f32:  Σ residual²
+    resid_min: jnp.ndarray       # f32:  worst (most negative) residual; +inf
+    violations: jnp.ndarray      # int32: residual < 0 observations
+    resid_buckets: jnp.ndarray   # int32 (L, N_BUCKETS) fixed-edge histogram
+
+
+def zero_parts(n_queries: int, n_leaves: int) -> AuditParts:
+    """All-false/+inf parts (cond fallback branches)."""
+    f = jnp.zeros((n_queries, n_leaves), bool)
+    return AuditParts(f, f, f, f, f, jnp.full((n_queries, n_leaves), _INF))
+
+
+def zero_audit(n_leaves: int) -> FilterAudit:
+    """Identity element of :func:`combine` for ``n_leaves`` leaves."""
+    zi = jnp.zeros((n_leaves,), jnp.int32)
+    zf = jnp.zeros((n_leaves,), jnp.float32)
+    return FilterAudit(zi, zi, zi, zi, zi, zi, zi, zf, zf,
+                       jnp.full((n_leaves,), _INF),
+                       zi, jnp.zeros((n_leaves, N_BUCKETS), jnp.int32))
+
+
+def select_parts(cond, a: AuditParts, b: AuditParts) -> AuditParts:
+    """Per-query ``where(cond, a, b)`` across every plane (jit-legal)."""
+    c = jnp.asarray(cond)[:, None]
+    return AuditParts(*(jnp.where(c, x, y) for x, y in zip(a, b)))
+
+
+@functools.partial(jax.jit, donate_argnums=())
+def reduce_parts(parts: AuditParts, d_F: jnp.ndarray,
+                 leaf_size: jnp.ndarray) -> FilterAudit:
+    """Fold ``(Q, L)`` decision planes into the per-leaf accumulators.
+
+    ONE jitted program on purpose: the compact engine is host-orchestrated,
+    and dispatching these ~25 small reductions eagerly is a constant ~ms
+    tax that would blow the obs bench's <5% audit-overhead budget (same
+    reasoning as ``engine._compact_trace_stats``).
+
+    ``d_F``: the ``(Q, L)`` conformal-adjusted predictions the engine
+    pruned with (−inf ⇒ leaf has no filter → excluded from residuals).
+    ``leaf_size``: ``(L,)`` rows per leaf, for the work-saved accounting.
+    """
+    i32 = jnp.int32
+    pruned = parts.p_box | parts.p_seed | parts.p_filter
+    sizes = leaf_size.astype(i32)
+    # residuals only where the leaf-NN was exactly computed AND the leaf
+    # actually carries a filter whose adjusted prediction is meaningful
+    rmask = parts.scored & jnp.isfinite(d_F) & jnp.isfinite(parts.leaf_nn)
+    resid = jnp.where(rmask, parts.leaf_nn - d_F, 0.0)
+    # fixed-edge histogram as static masked sums (bucket b of value v:
+    # edges[b-1] < v ≤ edges[b], open-ended at both tails)
+    edges = jnp.asarray(RESIDUAL_EDGES, jnp.float32)
+    bidx = jnp.searchsorted(edges, jnp.where(rmask, resid, _INF),
+                            side="left")                 # (Q, L) in [0, NB]
+    buckets = (rmask[:, :, None]
+               & (bidx[:, :, None] == jnp.arange(N_BUCKETS)[None, None, :]))
+    return FilterAudit(
+        pruned_box=parts.p_box.sum(axis=0).astype(i32),
+        pruned_seed=parts.p_seed.sum(axis=0).astype(i32),
+        pruned_filter=parts.p_filter.sum(axis=0).astype(i32),
+        kept=parts.kept.sum(axis=0).astype(i32),
+        scored=parts.scored.sum(axis=0).astype(i32),
+        rows_saved=(pruned.sum(axis=0).astype(i32) * sizes),
+        resid_count=rmask.sum(axis=0).astype(i32),
+        resid_sum=resid.sum(axis=0).astype(jnp.float32),
+        resid_sumsq=(resid * resid).sum(axis=0).astype(jnp.float32),
+        resid_min=jnp.where(rmask, resid, _INF).min(axis=0),
+        violations=(rmask & (resid < 0.0)).sum(axis=0).astype(i32),
+        resid_buckets=buckets.sum(axis=0).astype(i32))
+
+
+def combine(a: FilterAudit, b: FilterAudit) -> FilterAudit:
+    """Leaf-wise merge: sums everywhere, minimum for ``resid_min``."""
+    merged = [x + y for x, y in zip(a, b)]
+    merged[a._fields.index("resid_min")] = jnp.minimum(a.resid_min,
+                                                       b.resid_min)
+    return FilterAudit(*merged)
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def scatter_global(audit: FilterAudit, leaf_global: jnp.ndarray,
+                   n_leaves: int) -> FilterAudit:
+    """Fold shard-local audits into global leaf order.
+
+    ``audit``: fields shaped ``(S, P)`` (``(S, P, NB)`` for the buckets) —
+    one row per model shard, as returned by the distributed search.
+    ``leaf_global``: ``(S, P)`` global leaf id per shard slot; padding
+    slots carry ``n_leaves`` and land in a scratch row that is sliced off
+    (in-bounds by construction — index sanitizers stay quiet).
+    """
+    idx = leaf_global.reshape(-1)
+
+    def fold(x, combine_min=False):
+        flat = x.reshape((idx.shape[0],) + x.shape[2:])
+        if combine_min:
+            out = jnp.full((n_leaves + 1,) + flat.shape[1:], _INF)
+            return out.at[idx].min(flat)[:n_leaves]
+        out = jnp.zeros((n_leaves + 1,) + flat.shape[1:], flat.dtype)
+        return out.at[idx].add(flat)[:n_leaves]
+
+    return FilterAudit(*(fold(x, combine_min=(name == "resid_min"))
+                         for name, x in zip(FilterAudit._fields, audit)))
+
+
+def to_numpy(audit: FilterAudit) -> dict:
+    """Host-side dict (field name → numpy array, counters widened to i64)."""
+    out = {}
+    for name, val in zip(audit._fields, audit):
+        arr = np.asarray(val)
+        out[name] = arr.astype(np.int64) if arr.dtype == np.int32 else arr
+    return out
+
+
+def accounting_residual_leaf(audit: FilterAudit,
+                             n_queries: int) -> jnp.ndarray:
+    """``n_queries − kept − Σ pruned_*`` per leaf — zero everywhere when
+    the per-leaf attribution partition is exact (the tests pin this)."""
+    pruned = audit.pruned_box + audit.pruned_seed + audit.pruned_filter
+    return jnp.int32(n_queries) - audit.kept - pruned

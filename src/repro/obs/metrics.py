@@ -45,10 +45,18 @@ def _label_suffix(key: LabelKey) -> str:
     return "{" + inner + "}"
 
 
+def _prom_escape(value: str) -> str:
+    """Prometheus 0.0.4 label-value escaping: backslash first (so the other
+    escapes don't double up), then quote and newline."""
+    return (value.replace("\\", "\\\\")
+            .replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _prom_labels(key: LabelKey) -> str:
     if not key:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    inner = ",".join(f'{k}="{_prom_escape(v)}"' for k, v in key)
     return "{" + inner + "}"
 
 

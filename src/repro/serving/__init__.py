@@ -8,10 +8,12 @@ Public API:
     DistributedExecutor                    micro-batches → shard_map search
     BsfCache                               cross-batch bsf warm-starting
     Telemetry, latency_percentiles         rolling serving counters
+    ShadowSampler, explain_query           sampled exact-scan audit + explain
 """
 from .batcher import (MicroBatch, MicroBatcher, Request,  # noqa: F401
                       poisson_trace, run_trace, run_trace_pipelined)
 from .session import (DistributedExecutor, PendingBatch,  # noqa: F401
                       ServingSession, load_index, save_index)
+from .shadow import ShadowSampler, explain_query          # noqa: F401
 from .telemetry import Telemetry, latency_percentiles     # noqa: F401
 from .warmstart import BsfCache                           # noqa: F401

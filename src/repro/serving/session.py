@@ -255,6 +255,9 @@ class PendingBatch:
     pending: object               # PendingSearch | _PendingDist
     batch: MicroBatch
     seq: int
+    # warm-start seed the batch was dispatched with (None when cold/off);
+    # kept so the shadow sampler can attribute seed-bound exclusions
+    bsf_ub: Optional[np.ndarray] = None
 
 
 class ServingSession:
@@ -273,6 +276,16 @@ class ServingSession:
     :class:`DistributedExecutor` (k=1): batches flow through the shard_map
     search with per-query conformal offset rows instead of
     ``search_batched``.
+
+    ``audit=True`` threads the engine's per-leaf
+    :class:`~repro.obs.audit.FilterAudit` through every served batch
+    (results stay bitwise identical) and folds it into the telemetry's
+    :class:`~repro.obs.health.LeafHealthBoard`; ``shadow_rate > 0``
+    attaches a :class:`~repro.serving.shadow.ShadowSampler` that captures
+    a deterministic fraction of requests at harvest for off-critical-path
+    exact-scan auditing (``serve`` drains it once per trace).  Both are
+    single-host features: the distributed executor's exchange reduces a
+    single nn distance, so there is nothing leaf-wise to audit host-side.
     """
 
     def __init__(self, lfi: build.LeaFiIndex, *, strategy: str = "compact",
@@ -280,7 +293,9 @@ class ServingSession:
                  telemetry: Optional[Telemetry] = None,
                  warm_start: bool = False, warm_lag: int = 1,
                  warm_capacity: int = 256,
-                 executor: Optional[DistributedExecutor] = None):
+                 executor: Optional[DistributedExecutor] = None,
+                 audit: bool = False, shadow_rate: float = 0.0,
+                 shadow_seed: int = 0):
         self.lfi = lfi
         self.strategy = strategy
         self.dist_impl = dist_impl
@@ -289,6 +304,12 @@ class ServingSession:
         self.warm_lag = int(warm_lag)
         self.warm_cache = BsfCache(capacity=warm_capacity)
         self.executor = executor
+        self.audit = bool(audit) and executor is None
+        self.shadow: Optional["ShadowSampler"] = None
+        if shadow_rate > 0.0:
+            from .shadow import ShadowSampler
+            self.shadow = ShadowSampler(self, rate=shadow_rate,
+                                        seed=shadow_seed)
         self._seq = 0
         self._warmed: set = set()
 
@@ -352,7 +373,7 @@ class ServingSession:
             quality_target=targets, use_filters=targets is not None,
             strategy=self.strategy, dist_impl=self.dist_impl,
             filter_type=getattr(lfi.config, "filter_type", "mlp"),
-            bsf_ub=bsf_ub)
+            bsf_ub=bsf_ub, audit=self.audit)
 
     def search(self, queries: np.ndarray,
                quality_targets=None, k: int = 1,
@@ -401,7 +422,8 @@ class ServingSession:
         self.telemetry.record_phases(
             queue_wait=(batch.formed_at - batch.arrivals).tolist(),
             form_s=time.perf_counter() - t0)
-        return PendingBatch(pending=pending, batch=batch, seq=seq)
+        return PendingBatch(pending=pending, batch=batch, seq=seq,
+                            bsf_ub=bsf_ub)
 
     def harvest(self, pb: PendingBatch):
         """Block on one dispatched batch; fold telemetry + warm staging."""
@@ -415,6 +437,12 @@ class ServingSession:
             kth = np.asarray(res.dists)[:b.n_valid, -1]
             self.warm_cache.stage(pb.seq, b.queries[:b.n_valid], kth, b.k)
         self.telemetry.record_batch(res, n_valid=b.n_valid, bucket=b.bucket)
+        if getattr(res, "audit", None) is not None:
+            # audit planes cover every bucket slot (padded rows repeat row
+            # 0 — real queries for the accounting identity's purposes)
+            self.telemetry.record_audit(res.audit, n_queries=b.bucket)
+        if self.shadow is not None:
+            self.shadow.capture(b, res, bsf_ub=pb.bsf_ub)
         return res
 
     def execute(self, batch: MicroBatch):
@@ -508,6 +536,12 @@ class ServingSession:
                                                               1e-12)
             report["makespan_s"] = last - first
         report["n_programs_warmed"] = len(self._warmed)
+        if self.shadow is not None and self.shadow.pending_count:
+            # off the critical path by construction: every completion above
+            # is already timed/committed before the exact scans run
+            shadow_report = self.shadow.drain()
+            self.telemetry.record_shadow(shadow_report)
+            report["shadow"] = shadow_report
         report["batches"] = batch_log
         report["completions"] = completions
         return report

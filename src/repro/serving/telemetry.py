@@ -33,11 +33,12 @@ follow-up).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..core import engine
+from ..obs.health import LeafHealthBoard, LeafHealthReport
 from ..obs.metrics import Histogram, MetricsRegistry, RecallDriftMonitor
 
 
@@ -164,6 +165,7 @@ class Telemetry:
         self.drift = RecallDriftMonitor(
             r, window=drift_window, min_samples=drift_min_samples,
             slack=drift_slack, prefix="serve")
+        self.health = LeafHealthBoard(registry=r)
         self._recall: Dict[float, list] = {}              # target → [hit, n]
         self.n_leaves: Optional[int] = None
 
@@ -238,6 +240,24 @@ class Telemetry:
             self._h_form.observe(float(form_s))
         if exec_s is not None:
             self._h_exec.observe(float(exec_s))
+
+    def record_audit(self, audit: dict, n_queries: int) -> None:
+        """Fold one audited batch's per-leaf FilterAudit dict
+        (``SearchResult.audit``) into the rolling health board."""
+        self.health.record_audit(audit, n_queries=n_queries)
+
+    def record_shadow(self, shadow_report: dict) -> None:
+        """Fold one drained shadow batch (``ShadowSampler.drain`` report):
+        miss attributions reach the health board leaf-wise."""
+        self.health.record_shadow(shadow_report.get("misses", ()),
+                                  n_queries=shadow_report.get("n_shadowed",
+                                                              0))
+
+    def filters_needing_attention(self, **kw) -> List["LeafHealthReport"]:
+        """Per-leaf staleness trigger (supersedes the per-target-only
+        :meth:`recall_drifting` hook for ROADMAP item 1): flagged leaves,
+        most severe first, from the windowed audit + shadow evidence."""
+        return self.health.filters_needing_attention(**kw)
 
     def observe_recall(self, target: float, hit: bool) -> None:
         """One request's recall@1 outcome against the exact oracle.
@@ -315,6 +335,10 @@ class Telemetry:
         if drift:
             out["recall_windowed"] = self.drift.windowed_recall()
             out["recall_drifting"] = drift
+        flagged = self.filters_needing_attention()
+        if flagged:
+            out["filters_needing_attention"] = [r.to_dict()
+                                                for r in flagged]
         return out
 
     def snapshot(self) -> dict:

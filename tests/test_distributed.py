@@ -454,3 +454,86 @@ def test_distributed_trace_parity_and_global_accounting():
     r = subprocess.run([sys.executable, "-c", TRACE_CODE],
                        capture_output=True, text=True, timeout=900)
     assert "TRACE_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-4000:]
+
+
+AUDIT_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import build, distributed, filter_training
+from repro.core.summaries import znormalize
+from repro.obs import audit as obs_audit
+
+rng = np.random.default_rng(0)
+S = rng.standard_normal((3000, 64), dtype=np.float32).cumsum(axis=1)
+cfg = build.LeaFiConfig(backbone="dstree", leaf_capacity=64, n_global=120,
+                        n_local=24, t_filter_over_t_series=10.0,
+                        train=filter_training.TrainConfig(epochs=20))
+lfi = build.build_leafi(S, cfg)
+Q = znormalize(S[rng.integers(0, len(S), 16)]
+               + 0.3 * rng.standard_normal((16, 64)).astype(np.float32))
+Qj = jnp.asarray(Q)
+L = lfi.index.n_leaves
+
+mesh = distributed.make_search_mesh(2, 2)
+sharded = distributed.shard_leafi(lfi, n_shards=2, quality_target=0.99)
+n_shards, P_slots = sharded.leaf_size.shape
+SLACK = 8      # cross-program searched-count slack (ulp-tied prune flips)
+
+for strategy in ("scan", "compact"):
+    run0, *_ = distributed.make_distributed_search(mesh, sharded,
+                                                   strategy=strategy)
+    runa, *_ = distributed.make_distributed_search(mesh, sharded,
+                                                   strategy=strategy,
+                                                   audit=True)
+    with mesh:
+        nn0, tot0 = run0(Qj)
+        nn1, tot1, fa = runa(Qj)
+    # the audited program's answers are bitwise; the searched count may
+    # sit an ulp-tie away across differently-fused programs (cf. the
+    # module docstring's assertion-strength note)
+    np.testing.assert_array_equal(np.asarray(nn0), np.asarray(nn1),
+                                  err_msg=strategy)
+    assert np.abs(np.asarray(tot1).astype(int)
+                  - np.asarray(tot0).astype(int)).max() <= SLACK, strategy
+    fa_np = jax.tree.map(np.asarray, fa)
+    assert fa_np.kept.shape == (n_shards, P_slots), strategy
+    assert fa_np.resid_buckets.shape == (n_shards, P_slots,
+                                         obs_audit.N_BUCKETS), strategy
+    # per-shard-slot accounting identity, exact: after the data-axis psum
+    # every (shard, slot) has partitioned the full 16-query batch
+    resid = np.asarray(obs_audit.accounting_residual_leaf(fa, 16))
+    assert not resid.any(), (strategy, resid)
+    # padding slots never enter a distance pass
+    pad = np.asarray(sharded.leaf_size) == 0
+    assert not fa_np.kept[pad].any(), strategy
+    assert not fa_np.scored[pad].any(), strategy
+    # fold to global leaf order: identity again, scratch row absorbed
+    g = obs_audit.scatter_global(fa, sharded.leaf_global, L)
+    g_np = jax.tree.map(np.asarray, g)
+    assert g_np.kept.shape == (L,), strategy
+    assert not np.asarray(
+        obs_audit.accounting_residual_leaf(g, 16)).any(), strategy
+    # residual bookkeeping survives the collectives + the fold
+    np.testing.assert_array_equal(g_np.resid_buckets.sum(-1),
+                                  g_np.resid_count, err_msg=strategy)
+    assert (g_np.violations <= g_np.resid_count).all(), strategy
+    assert (g_np.resid_count <= g_np.scored).all(), strategy
+    assert g_np.kept.sum() > 0, strategy
+    assert (g_np.pruned_box + g_np.pruned_seed
+            + g_np.pruned_filter).sum() > 0, strategy
+
+print("AUDIT_OK")
+"""
+
+
+def test_distributed_audit_accounting_and_parity():
+    """2-shard host mesh: the audited shard body answers bitwise, its
+    per-(shard, slot) FilterAudit satisfies the accounting identity exactly
+    after the data-axis psum, and the scatter_global fold to leaf order
+    preserves both the identity and the residual bookkeeping."""
+    r = subprocess.run([sys.executable, "-c", AUDIT_CODE],
+                       capture_output=True, text=True, timeout=900)
+    assert "AUDIT_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-4000:]

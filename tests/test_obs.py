@@ -10,19 +10,27 @@ two seeded serving runs — wall-clock may appear *only* in the snapshot's
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro import obs
-from repro.core import build, filter_training
+from repro.core import bounds, build, engine, filter_training, tree
+from repro.data.series import make_query_set
 from repro.launch.serve import _print_serve_report
+from repro.obs import audit as obs_audit
+from repro.obs import explain as obs_explain
 from repro.obs import export
+from repro.obs.health import LeafHealthBoard
 from repro.obs.metrics import MetricsRegistry, RecallDriftMonitor
 from repro.obs.spans import SpanRecorder
-from repro.serving import (MicroBatcher, ServingSession, Telemetry,
-                          poisson_trace)
+from repro.serving import (BsfCache, MicroBatcher, ServingSession,
+                          Telemetry, poisson_trace)
+from repro.serving.shadow import explain_query, leaf_of_ids, sample_mask
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +125,24 @@ def test_jsonl_and_prometheus_export(tmp_path):
     assert "serve_requests_total 5.0" in text
     assert 'serve_latency_s{quantile="0.5"}' in text
     assert "serve_latency_s_count 3" in text
+
+
+def test_prometheus_escapes_pathological_label_values(tmp_path):
+    """Prometheus 0.0.4 label-value escaping: backslash, quote and newline
+    must come out as \\\\, \\" and \\n — a raw newline would split the
+    exposition line and corrupt the whole scrape."""
+    r = MetricsRegistry()
+    evil = 'a\\b"c\nd'
+    r.counter("evil_total").inc(1, path=evil)
+    prom = tmp_path / "m.prom"
+    export.write_metrics(prom, r)
+    text = prom.read_text()
+    assert 'evil_total{path="a\\\\b\\"c\\nd"} 1.0' in text
+    # the value never splits its exposition line
+    metric_lines = [ln for ln in text.splitlines()
+                    if ln.startswith("evil_total{")]
+    assert len(metric_lines) == 1
+    assert metric_lines[0].endswith(" 1.0")
 
 
 # ---------------------------------------------------------------------------
@@ -374,3 +400,362 @@ def test_zero_request_serve_report_is_nan_safe(lfi_obs, capsys):
     out = capsys.readouterr().out
     assert "0 requests" in out and "no completions" in out
     assert session.telemetry.summary()["n_requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# per-leaf audit: engine-level pins (both backbones x both strategies)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=["dstree", "isax"])
+def obs_index(request, randwalk_small):
+    builder = (tree.build_dstree if request.param == "dstree"
+               else tree.build_isax)
+    return builder(randwalk_small, 64)
+
+
+def _cascade(index, q, d_lb, d_F, k, strategy, **kw):
+    return engine.run_cascade(
+        jnp.asarray(index.series), jnp.asarray(index.leaf_start),
+        jnp.asarray(index.leaf_size), q, d_lb, d_F,
+        k=k, max_leaf=index.max_leaf_size, strategy=strategy, **kw)
+
+
+def _synthetic_predictions(d_lb, seed=0):
+    """Deterministic noisy per-leaf NN 'predictions' → real filter pruning
+    (same construction tests/test_engine.py prunes with)."""
+    lb = np.asarray(d_lb)
+    rng = np.random.default_rng(seed)
+    noise = rng.standard_normal(lb.shape).astype(np.float32)
+    return jnp.asarray(lb * (1.4 + 0.4 * noise) + 2.0)
+
+
+@pytest.mark.parametrize("strategy", ["scan", "compact"])
+def test_audit_results_bitwise_and_per_leaf_identity(
+        obs_index, queries_small, strategy):
+    """audit=True returns bitwise-identical answers and counters, and the
+    per-leaf accounting identity partitions the query batch exactly."""
+    q = jnp.asarray(queries_small)
+    n_queries = q.shape[0]
+    d_lb = bounds.lower_bounds(obs_index, q)
+    d_F = _synthetic_predictions(d_lb)
+    for k in (1, 5):
+        a = _cascade(obs_index, q, d_lb, d_F, k, strategy)
+        b = _cascade(obs_index, q, d_lb, d_F, k, strategy, audit=True)
+        np.testing.assert_array_equal(np.asarray(a.topk_d),
+                                      np.asarray(b.topk_d))
+        np.testing.assert_array_equal(np.asarray(a.topk_i),
+                                      np.asarray(b.topk_i))
+        np.testing.assert_array_equal(np.asarray(a.n_searched),
+                                      np.asarray(b.n_searched))
+        fa = b.audit
+        assert not np.asarray(obs_audit.accounting_residual_leaf(
+            fa, n_queries)).any()
+        fa_np = obs_audit.to_numpy(fa)
+        # the synthetic cascade is active and audited as such
+        assert fa_np["pruned_filter"].sum() > 0
+        assert fa_np["kept"].sum() > 0
+        # residual bookkeeping: histogram mass == observations, violations
+        # are a subset, scored >= kept (union co-residents score for free)
+        np.testing.assert_array_equal(fa_np["resid_buckets"].sum(-1),
+                                      fa_np["resid_count"])
+        assert (fa_np["violations"] <= fa_np["resid_count"]).all()
+        assert (fa_np["scored"] >= fa_np["kept"]).all()
+        assert (fa_np["resid_count"] <= fa_np["scored"]).all()
+        # resid_min is +inf exactly where nothing was observed
+        unobserved = fa_np["resid_count"] == 0
+        assert np.isinf(fa_np["resid_min"][unobserved]).all()
+        assert np.isfinite(fa_np["resid_min"][~unobserved]).all()
+
+
+@pytest.mark.parametrize("strategy", ["scan", "compact"])
+def test_trace_attributes_warm_start_seed_prunes(
+        obs_index, queries_small, strategy):
+    """BsfCache-seeded bsf_ub: answers stay bitwise (exact mode) and the
+    accounting identity still partitions the leaf set exactly — on both
+    strategies.  The attribution itself is strategy-shaped: the scan visits
+    leaves in ascending-lb order, so by the time any leaf has lb > ub every
+    leaf holding a true top-k member (lb ≤ d_k ≤ ub) is already scanned and
+    the converged bsf dominates any *valid* bound — seed-only prunes are
+    impossible there (pinned at exactly zero).  The compact strategy
+    attributes at the mask stage against the probe seed bsf0, which a warm
+    bound undercuts whenever the probe leaf is not the k-NN leaf — so its
+    pruned_seed is live (pinned > 0)."""
+    q = jnp.asarray(queries_small)
+    L = obs_index.n_leaves
+    d_lb = bounds.lower_bounds(obs_index, q)
+    d_F = jnp.full(d_lb.shape, -jnp.inf)
+    cold = _cascade(obs_index, q, d_lb, d_F, 1, strategy, trace=True)
+    # no warm bound → nothing can be seed-attributed
+    assert np.asarray(cold.trace.pruned_seed).sum() == 0
+    assert not np.asarray(obs.accounting_residual(cold.trace, L)).any()
+
+    cache = BsfCache()
+    cache.update(queries_small, np.asarray(cold.topk_d)[:, 0], k=1)
+    ub = cache.seed(queries_small, k=1)
+    assert ub is not None and np.isfinite(ub).all()
+    warm = _cascade(obs_index, q, d_lb, d_F, 1, strategy, trace=True,
+                    bsf_ub=jnp.asarray(ub))
+    # prune-only contract: bitwise answers, never more leaves searched
+    np.testing.assert_array_equal(np.asarray(cold.topk_d),
+                                  np.asarray(warm.topk_d))
+    np.testing.assert_array_equal(np.asarray(cold.topk_i),
+                                  np.asarray(warm.topk_i))
+    assert (np.asarray(warm.n_searched)
+            <= np.asarray(cold.n_searched)).all()
+    seed_prunes = np.asarray(warm.trace.pruned_seed).sum()
+    if strategy == "scan":
+        assert seed_prunes == 0         # ascending-lb order: see docstring
+    else:
+        assert seed_prunes > 0          # probe bsf0 undercut by the bound
+    assert not np.asarray(obs.accounting_residual(warm.trace, L)).any()
+    # per-leaf audit agrees with the per-query trace on the attribution
+    audited = _cascade(obs_index, q, d_lb, d_F, 1, strategy, audit=True,
+                       bsf_ub=jnp.asarray(ub))
+    fa_np = obs_audit.to_numpy(audited.audit)
+    assert fa_np["pruned_seed"].sum() == seed_prunes
+    assert not np.asarray(obs_audit.accounting_residual_leaf(
+        audited.audit, q.shape[0])).any()
+
+
+@settings(max_examples=8)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       backbone=st.sampled_from(["dstree", "isax"]),
+       strategy=st.sampled_from(["scan", "compact"]))
+def test_accounting_residual_zero_property(seed, backbone, strategy):
+    """Property: the trace accounting residual is zero per query and the
+    audit identity is zero per leaf, across random leaf layouts, random
+    filter planes and random (valid) warm-start bounds, both backbones."""
+    rng = np.random.default_rng(seed)
+    S = rng.standard_normal((512, 32), dtype=np.float32).cumsum(axis=1)
+    cap = int(8 + (seed % 5) * 12)              # leaf layout varies w/ seed
+    builder = tree.build_dstree if backbone == "dstree" else tree.build_isax
+    index = builder(S, cap)
+    queries = make_query_set(S, 4, noise=0.3, seed=seed % 997)
+    q = jnp.asarray(queries)
+    d_lb = bounds.lower_bounds(index, q)
+    no_f = jnp.full(d_lb.shape, -jnp.inf)
+    keep = jnp.asarray(rng.random(d_lb.shape) < 0.5)
+    d_F = jnp.where(keep, no_f, _synthetic_predictions(d_lb, seed=seed))
+    # a valid prune-only bound: the exact nn, inflated
+    exact = _cascade(index, q, d_lb, no_f, 1, strategy)
+    ub = np.asarray(exact.topk_d)[:, 0] * (1 + 1e-6) + 1e-6
+    res = _cascade(index, q, d_lb, d_F, 1, strategy, trace=True,
+                   audit=True, bsf_ub=jnp.asarray(ub))
+    assert not np.asarray(
+        obs.accounting_residual(res.trace, index.n_leaves)).any()
+    assert not np.asarray(
+        obs_audit.accounting_residual_leaf(res.audit, 4)).any()
+
+
+# ---------------------------------------------------------------------------
+# shadow sampler: pure helpers
+# ---------------------------------------------------------------------------
+
+def test_sample_mask_is_deterministic_and_batching_invariant():
+    rids = np.arange(1000)
+    whole = sample_mask(rids, 0.25, seed=3)
+    split = np.concatenate([sample_mask(rids[:137], 0.25, seed=3),
+                            sample_mask(rids[137:], 0.25, seed=3)])
+    np.testing.assert_array_equal(whole, split)   # batching-invariant
+    np.testing.assert_array_equal(whole, sample_mask(rids, 0.25, seed=3))
+    assert 0.15 < whole.mean() < 0.35             # roughly the asked rate
+    assert not sample_mask(rids, 0.0, seed=3).any()
+    assert sample_mask(rids, 1.0, seed=3).all()
+    # the seed offsets the hash, so a distant seed shadows a different set
+    assert (whole != sample_mask(rids, 0.25, seed=1 << 31)).any()
+
+
+def test_leaf_of_ids_names_the_holding_leaf(obs_index):
+    rng = np.random.default_rng(0)
+    order = np.asarray(obs_index.order)
+    ids = rng.integers(0, order.shape[0], 64)
+    leaves = leaf_of_ids(obs_index, ids)
+    starts = np.asarray(obs_index.leaf_start)
+    sizes = np.asarray(obs_index.leaf_size)
+    assert ((0 <= leaves) & (leaves < obs_index.n_leaves)).all()
+    for i, leaf in zip(ids, leaves):
+        members = order[starts[leaf]: starts[leaf] + sizes[leaf]]
+        assert i in members, (i, leaf)
+
+
+# ---------------------------------------------------------------------------
+# leaf-health scoreboard (unit level; serve-level wiring below)
+# ---------------------------------------------------------------------------
+
+def _audit_dict(L, **cols):
+    base = {k: np.zeros(L, np.int64)
+            for k in ("violations", "resid_count", "scored", "kept",
+                      "pruned_box", "pruned_seed", "pruned_filter",
+                      "rows_saved")}
+    base["resid_sum"] = np.zeros(L, np.float64)
+    base["resid_min"] = np.full(L, np.inf)
+    for k, v in cols.items():
+        base[k] = np.asarray(v)
+    return base
+
+
+def test_health_board_flags_reasons_and_severity_order():
+    r = MetricsRegistry()
+    board = LeafHealthBoard(window=4, registry=r, min_resid_count=8,
+                            violation_rate_threshold=0.05,
+                            resid_min_threshold=-0.5)
+    # leaf 1: high violation rate; leaf 2: one deep violation (too few
+    # observations for the rate flag); leaves 0/3 healthy
+    board.record_audit(_audit_dict(
+        4, violations=[0, 3, 1, 0], resid_count=[9, 10, 2, 9],
+        resid_min=[0.2, -0.05, -1.0, 0.3]), n_queries=16)
+    # shadow truth: two filter-attributed misses at leaf 3, one box-
+    # attributed miss at leaf 0 (float-tie noise → must NOT flag)
+    board.record_shadow([{"leaf": 3, "bound": "filter"},
+                         {"leaf": 3, "bound": "filter"},
+                         {"leaf": 0, "bound": "box"}], n_queries=8)
+    reps = board.filters_needing_attention()
+    # ground truth outranks rates; higher rate outranks lower
+    assert [rep.leaf for rep in reps] == [3, 2, 1]
+    by_leaf = {rep.leaf: rep for rep in reps}
+    assert by_leaf[3].reasons == ["shadow-miss"]
+    assert by_leaf[3].shadow_misses == 2
+    assert by_leaf[2].reasons == ["deep-violation"]
+    assert by_leaf[1].reasons == ["violation-rate"]
+    assert by_leaf[1].violation_rate == pytest.approx(0.3)
+    assert board.filters_needing_attention(limit=1)[0].leaf == 3
+    # registry surface: lifetime counters + windowed flag gauge
+    assert r.counter("health_violations_total").value() == 4.0
+    assert r.counter("health_shadow_misses_total").value(bound="filter") \
+        == 2.0
+    assert r.gauge("health_flagged_leaves").value() == 3.0
+    json.dumps(board.snapshot())                # JSON-clean
+    board.reset()                               # post-recalibration flush
+    assert board.filters_needing_attention() == []
+    assert r.gauge("health_flagged_leaves").value() == 0.0
+
+
+def test_health_board_rejects_mismatched_leaf_count():
+    board = LeafHealthBoard()
+    board.record_audit(_audit_dict(4), n_queries=2)
+    with pytest.raises(ValueError, match="leaves"):
+        board.record_audit(_audit_dict(5), n_queries=2)
+
+
+# ---------------------------------------------------------------------------
+# serve-level: shadow recall vs calibration, injected staleness, explain
+# ---------------------------------------------------------------------------
+
+def _serve_shadowed(lfi, queries, n_requests=64, target=0.95, rate=1.0):
+    trace = poisson_trace(queries, rate=500.0, n_requests=n_requests,
+                          targets=(target,), ks=(1,), seed=11)
+    session = ServingSession(lfi, audit=True, shadow_rate=rate,
+                             shadow_seed=7)
+    report = session.serve(
+        trace, batcher=MicroBatcher(max_batch=8, max_wait=0.004),
+        service_time=lambda b: 0.002)
+    return session, report
+
+
+def test_shadow_recall_agrees_with_calibration_estimate(
+        lfi_obs, queries_small):
+    """Acceptance pin: shadow-sampled *true* recall agrees with the
+    calibration-split estimate within the binomial CI (+ slack for the
+    finite calibration split itself)."""
+    target = 0.95
+    session, report = _serve_shadowed(lfi_obs, queries_small,
+                                      target=target)
+    sh = report["shadow"]
+    assert sh["n_shadowed"] == 64               # rate=1.0 shadows everything
+    calib = min(target,
+                float(lfi_obs.build_report.get("calib_best_quality", 1.0)))
+    ci = 1.96 * np.sqrt(calib * (1.0 - calib) / sh["n_shadowed"])
+    assert abs(sh["recall_mean"] - calib) <= ci + 0.05, (sh["recall_mean"],
+                                                         calib, ci)
+    for m in sh["misses"]:                      # every miss fully attributed
+        assert m["bound"] in ("box", "seed", "filter", "timing")
+        assert 0 <= m["leaf"] < lfi_obs.index.n_leaves
+        assert "rid" in m and "d_F" in m
+    # the audit stream reached the health board alongside the shadow stream
+    assert session.telemetry.health.n_leaves == lfi_obs.index.n_leaves
+    assert session.shadow.summary()["n_shadowed"] == 64
+
+
+def test_injected_stale_filter_is_flagged_with_correct_leaf(
+        lfi_obs, queries_small):
+    """Acceptance pin: perturbing one leaf's conformal offset (smaller
+    offset → larger adjusted prediction → over-pruning) must surface that
+    exact leaf at the top of filters_needing_attention()."""
+    exact = lfi_obs.search_exact(queries_small, k=1)
+    nn_leaves = leaf_of_ids(lfi_obs.index, np.asarray(exact.ids)[:, 0])
+    filtered = set(int(leaf) for leaf in lfi_obs.leaf_ids)
+    cand = np.asarray([leaf for leaf in nn_leaves if int(leaf) in filtered])
+    assert cand.size, "no filtered leaf holds a pool query's true NN"
+    target_leaf = int(np.bincount(cand).argmax())
+    f_idx = int(np.nonzero(
+        np.asarray(lfi_obs.leaf_ids) == target_leaf)[0][0])
+
+    tuner = lfi_obs.tuner
+    knots_o = np.asarray(tuner.knots_o).copy()
+    max_off = np.asarray(tuner.max_offset).copy()
+    knots_o[f_idx] -= 1e3                       # d_F = pred − offset → huge
+    max_off[f_idx] -= 1e3
+    stale = dataclasses.replace(
+        lfi_obs, tuner=dataclasses.replace(
+            tuner, knots_o=knots_o.astype(np.float32),
+            max_offset=max_off.astype(np.float32)))
+
+    session, report = _serve_shadowed(stale, queries_small)
+    flagged = session.telemetry.filters_needing_attention()
+    assert flagged, "stale filter went unflagged"
+    top = flagged[0]
+    assert top.leaf == target_leaf              # the *correct* leaf id
+    assert "shadow-miss" in top.reasons
+    assert top.shadow_misses >= 1
+    # every one of those misses is shadow-confirmed against exact truth and
+    # attributed to the filter bound at the injected leaf
+    guilty = [m for m in report["shadow"]["misses"]
+              if m["leaf"] == target_leaf]
+    assert guilty and all(m["bound"] == "filter" for m in guilty)
+    # the summary surfaces the same list (the recalibration trigger)
+    summary = session.telemetry.summary()
+    assert summary["filters_needing_attention"][0]["leaf"] == target_leaf
+
+    # control: the unperturbed index never accumulates that many confirmed
+    # filter misses at the injected leaf
+    clean_session, clean_report = _serve_shadowed(lfi_obs, queries_small)
+    clean_guilty = [m for m in clean_report["shadow"]["misses"]
+                    if m["leaf"] == target_leaf and m["bound"] == "filter"]
+    assert len(clean_guilty) < len(guilty)
+
+
+def test_explain_query_gathers_and_renders(lfi_obs, queries_small):
+    session = ServingSession(lfi_obs, audit=True)
+    ctx = explain_query(session, queries_small[0], target=0.95, k=3, rid=7)
+    assert ctx["rid"] == 7 and ctx["k"] == 3
+    assert len(ctx["served"]["dists"]) == 3
+    cas = ctx["cascade"]
+    assert cas["n_leaves"] == lfi_obs.index.n_leaves
+    assert 0 < cas["searched"] <= cas["n_leaves"]
+    # single-query audit planes render as per-leaf verdicts, closest first
+    assert ctx["leaves"]
+    assert {row["verdict"] for row in ctx["leaves"]} \
+        <= {"kept", "box", "seed", "filter"}
+    assert any(row["verdict"] == "kept" for row in ctx["leaves"])
+    lbs = [row["d_lb"] for row in ctx["leaves"]]
+    assert lbs == sorted(lbs)
+    assert 0.0 <= ctx["shadow"]["recall"] <= 1.0
+    text = obs_explain.render_text(ctx)
+    assert "explain rid=7 k=3" in text
+    assert "served kNN" in text and "cascade:" in text
+    assert "shadow truth" in text
+    json.loads(obs_explain.render_json(ctx))    # valid JSON round-trip
+
+
+# ---------------------------------------------------------------------------
+# bench smoke (slow): the audit-overhead pin's code path cannot rot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_obs_bench_trace_audit_smoke():
+    from benchmarks.obs_bench import bench_trace_audit
+    rows, payload = bench_trace_audit(n=3000, m=64, leaf_capacity=64,
+                                      n_queries=8, k=3, repeat=2)
+    assert "max_compact_audit_overhead_pct" in payload
+    assert len(payload["levels"]) == 4
+    assert any("obs/max_compact_audit_overhead" in row for row in rows)
